@@ -1,0 +1,97 @@
+"""Paper Figs 2-4: speed of k-largest-singular-value computation, ours vs
+baselines, on fast/sharp/slow-decay spectra.
+
+Methods (paper column -> our implementation):
+  GESVD        -> jnp.linalg.svd (full dense SVD)
+  dsyevr       -> jnp.linalg.eigh on the Gram matrix (full spectrum)
+  SVDS         -> core.lanczos (Golub-Kahan with full reorth)
+  RSVD (CRAN)  -> Algorithm 1 with Householder QR + LAPACK small SVD
+  ours         -> Algorithm 1, BLAS-3 path: CholeskyQR2 + Gram-Jacobi +
+                  fused counter-RNG sketch
+
+Timings are CPU wall-clock (this container); the deliverable is the RATIO
+(paper reports speedup ratios too).  Accuracy column verifies the paper's
+<=1e-8 claim holds for the f64 configuration.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import RSVDConfig, randomized_eigvals
+from repro.core.lanczos import lanczos_singular_values
+from repro.core.spectra import make_test_matrix
+
+# 'ours' on THIS HOST is the faithful Algorithm 1 (the paper's method): the
+# TPU fast path's fused Pallas kernel runs in interpret mode on CPU, which is
+# a correctness harness, not a performance mode — its wins are structural
+# (HBM-traffic model in bench_kernels + §Perf).  The naive-'RSVD'-package
+# column is emulated with plain (unstabilized) power iteration.
+OURS = RSVDConfig()  # householder QR + LAPACK small SVD + q=2 QR iteration
+NAIVE = RSVDConfig(power_scheme="plain", oversample=10, power_iters=2)
+
+
+def _time(fn, *args, reps=3):
+    fn(*args).block_until_ready()  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps, out
+
+
+def run(sizes=(512, 1024), fracs=(0.01, 0.05, 0.10), kinds=("fast", "sharp", "slow"), m=2000):
+    rows = []
+    for kind in kinds:
+        for n in sizes:
+            A, sig = make_test_matrix(m, n, kind, seed=0)
+            for frac in fracs:
+                k = max(1, int(np.ceil(frac * n)))
+
+                t_ours, s_ours = _time(
+                    functools.partial(randomized_eigvals, k=k, cfg=OURS), A
+                )
+                t_rsvd, _ = _time(
+                    functools.partial(randomized_eigvals, k=k, cfg=NAIVE), A
+                )
+                t_svds, _ = _time(
+                    functools.partial(lanczos_singular_values, k=k, extra=10), A
+                )
+                t_gesvd, s_full = _time(
+                    functools.partial(jnp.linalg.svd, compute_uv=False), A
+                )
+                t_eigh, _ = _time(lambda x: jnp.linalg.eigh(x.T @ x)[0], A)
+
+                err = float(
+                    jnp.max(jnp.abs(s_ours - s_full[:k]) / jnp.maximum(s_full[:k], 1e-30))
+                )
+                rows.append(
+                    dict(
+                        kind=kind, n=n, k=k,
+                        us_ours=t_ours * 1e6,
+                        speedup_gesvd=t_gesvd / t_ours,
+                        speedup_eigh=t_eigh / t_ours,
+                        speedup_svds=t_svds / t_ours,
+                        speedup_rsvd_naive=t_rsvd / t_ours,
+                        rel_err=err,
+                    )
+                )
+    return rows
+
+
+def main():
+    for r in run():
+        print(
+            f"spectra_{r['kind']}_n{r['n']}_k{r['k']},{r['us_ours']:.0f},"
+            f"gesvd_x{r['speedup_gesvd']:.2f};eigh_x{r['speedup_eigh']:.2f};"
+            f"svds_x{r['speedup_svds']:.2f};rsvd_x{r['speedup_rsvd_naive']:.2f};"
+            f"err{r['rel_err']:.2e}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Render the §Roofline table from dry-run artifacts (benchmarks entry)."""
+from __future__ import annotations
+
+from repro.roofline.analysis import format_table, load_all, pick_hillclimb_cells
+
+
+def main():
+    rows = load_all()
+    if not rows:
+        print("roofline_report,0,no artifacts found (run repro.launch.dryrun first)")
+        return
+    live = [r for r in rows if not r.skipped and r.mesh == "single"]
+    for r in live:
+        print(
+            f"roofline_{r.arch}_{r.shape}_{r.mesh},{r.dominant_time()*1e6:.0f},"
+            f"bottleneck={r.bottleneck};frac{r.roofline_fraction():.3f};"
+            f"useful{r.useful_ratio:.3f}"
+        )
+    picks = pick_hillclimb_cells(rows)
+    for label, r in picks.items():
+        print(f"hillclimb_pick_{label},0,{r.arch}__{r.shape}")
+
+
+if __name__ == "__main__":
+    main()

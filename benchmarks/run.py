@@ -1,0 +1,39 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: one module per paper table/figure.
+
+  bench_spectra   -> Figs 2-4 (fast/sharp/slow-decay k-SV speed vs baselines)
+  bench_pca       -> Fig 1    (PCA at increasing image resolution)
+  bench_sumc      -> Table 1  (SuMC subspace clustering, solver swap)
+  bench_kernels   -> kernel microbenches + fused-sketch HBM-traffic model
+  roofline_report -> §Roofline terms from the dry-run artifacts
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import bench_kernels, bench_pca, bench_spectra, bench_sumc
+    from benchmarks import roofline_report
+
+    modules = [
+        ("spectra", bench_spectra),
+        ("pca", bench_pca),
+        ("sumc", bench_sumc),
+        ("kernels", bench_kernels),
+        ("roofline", roofline_report),
+    ]
+    failures = 0
+    for name, mod in modules:
+        print(f"# --- {name} ---", flush=True)
+        try:
+            mod.main()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},0,FAILED")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

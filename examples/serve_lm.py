@@ -1,0 +1,85 @@
+"""Serve a small model with batched requests, with and without RSVD low-rank
+weight compression (the paper's factorization applied at serve time).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import init_model
+from repro.serve.engine import Engine, Request
+from repro.serve.lowrank import factorize_params, memory_report
+
+CFG = ModelConfig(
+    name="llama-30m-serve",
+    family="dense",
+    num_layers=4,
+    d_model=256,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=64,
+    d_ff=1024,
+    vocab_size=8192,
+    block_pattern=("global",),
+    tie_embeddings=True,
+    dtype="float32",
+    attn_chunk=128,
+)
+
+
+def _impose_decaying_spectrum(params, power=1.2):
+    """Random-init weights are full-rank (flat spectrum), so rank-k serving
+    compression would be meaningless on them.  Trained transformer weights
+    have decaying spectra; emulate that here so the example reflects the
+    real serve-time trade-off."""
+    import jax.numpy as jnp
+
+    def reshape(path, leaf):
+        if getattr(leaf, "ndim", 0) != 2 or min(leaf.shape) < 64:
+            return leaf
+        u, s, vt = jnp.linalg.svd(leaf.astype(jnp.float32), full_matrices=False)
+        decay = s[0] / jnp.arange(1, s.shape[0] + 1, dtype=jnp.float32) ** power
+        return ((u * decay[None, :]) @ vt).astype(leaf.dtype)
+
+    return jax.tree_util.tree_map_with_path(reshape, params)
+
+
+def main():
+    params = _impose_decaying_spectrum(init_model(CFG, jax.random.key(0)))
+    rng = np.random.default_rng(0)
+    requests = [
+        Request(prompt=rng.integers(0, CFG.vocab_size, size=n).astype(np.int32),
+                max_new_tokens=16)
+        for n in [9, 17, 33, 12, 25, 8]
+    ]
+
+    engine = Engine(params, CFG, max_batch=4, max_len=128)
+    t0 = time.perf_counter()
+    outs = engine.generate(requests)
+    t_dense = time.perf_counter() - t0
+    print(f"dense engine: {len(outs)} completions in {t_dense:.2f}s")
+    for i, c in enumerate(outs[:3]):
+        print(f"  req{i} prompt_len={c.prompt_len} -> {c.tokens[:8].tolist()}...")
+
+    # --- low-rank compressed weights (paper's RSVD on the projections) ----
+    fact, report = factorize_params(params, rank=48)
+    mem = memory_report(params, fact)
+    engine_lr = Engine(fact, CFG, max_batch=4, max_len=128)
+    t0 = time.perf_counter()
+    outs_lr = engine_lr.generate(requests)
+    t_lr = time.perf_counter() - t0
+    agree = np.mean([
+        np.mean(a.tokens[:8] == b.tokens[:8]) for a, b in zip(outs, outs_lr)
+    ])
+    print(f"low-rank engine: {t_lr:.2f}s  weight-bytes {mem['dense_bytes']:,} -> "
+          f"{mem['factorized_bytes']:,}")
+    print(f"per-matrix rel-err (worst): {max(report.values()):.3f}; "
+          f"greedy-token agreement on first 8: {agree:.2f}")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Insert the final roofline table into EXPERIMENTS.md (run after the sweep)."""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+from repro.roofline.analysis import format_table, load_all
+
+rows = load_all("artifacts/dryrun")
+table = format_table(rows, "single")
+p = pathlib.Path("EXPERIMENTS.md")
+text = p.read_text()
+assert "TABLE_SINGLE_POD_PLACEHOLDER" in text
+p.write_text(text.replace("TABLE_SINGLE_POD_PLACEHOLDER", table))
+live = [r for r in rows if not r.skipped]
+print(f"inserted table: {len(live)} live cells, {len(rows)-len(live)} skips")

@@ -1,0 +1,36 @@
+"""Architecture registry: every assigned config selectable via --arch <id>."""
+from __future__ import annotations
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.configs.phi3_mini_3_8b import CONFIG as phi3_mini_3_8b
+from repro.configs.qwen3_4b import CONFIG as qwen3_4b
+from repro.configs.gemma2_2b import CONFIG as gemma2_2b
+from repro.configs.llama3_2_1b import CONFIG as llama3_2_1b
+from repro.configs.moonshot_v1_16b_a3b import CONFIG as moonshot_v1_16b_a3b
+from repro.configs.deepseek_v2_lite_16b import CONFIG as deepseek_v2_lite_16b
+from repro.configs.whisper_base import CONFIG as whisper_base
+from repro.configs.recurrentgemma_9b import CONFIG as recurrentgemma_9b
+from repro.configs.internvl2_1b import CONFIG as internvl2_1b
+from repro.configs.xlstm_350m import CONFIG as xlstm_350m
+
+ARCHS: dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        phi3_mini_3_8b,
+        qwen3_4b,
+        gemma2_2b,
+        llama3_2_1b,
+        moonshot_v1_16b_a3b,
+        deepseek_v2_lite_16b,
+        whisper_base,
+        recurrentgemma_9b,
+        internvl2_1b,
+        xlstm_350m,
+    ]
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch '{name}'; available: {sorted(ARCHS)}")
+    return ARCHS[name]

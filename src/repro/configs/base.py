@@ -1,0 +1,178 @@
+"""Config system: model architecture + input shapes + parallelism policy.
+
+Every assigned architecture is a ModelConfig constant in its own module;
+`reduced()` derives the CPU smoke-test version (same family, tiny sizes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One benchmark cell's input geometry."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+# The assigned LM shape set (per-arch applicability handled in dryrun).
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | audio | hybrid | vlm | ssm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+
+    # attention variants
+    qk_norm: bool = False
+    attn_softcap: Optional[float] = None     # gemma2 attention-logit cap
+    final_softcap: Optional[float] = None    # gemma2 final-logit cap
+    rope_theta: float = 10000.0
+    use_rope: bool = True                    # whisper uses absolute positions
+    window_size: Optional[int] = None        # local-attention window
+    attn_chunk: int = 1024                   # online-softmax chunk length
+    use_post_norm: bool = False              # gemma2 sandwich norms
+    embed_scale: bool = False                # gemma multiplies embed by sqrt(d)
+
+    # layer pattern: repeating unit; remainder unrolled at the top of stack
+    block_pattern: Tuple[str, ...] = ("global",)
+
+    # MoE
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: Optional[int] = None
+    first_k_dense: int = 0
+    moe_renormalize: bool = True
+    capacity_factor: float = 1.25
+
+    # MLA
+    use_mla: bool = False
+    kv_lora_rank: int = 0
+    qk_rope_head_dim: int = 0
+    qk_nope_head_dim: int = 0
+    v_head_dim: int = 0
+    mla_absorb: bool = True          # decode-time weight absorption (DeepSeek)
+
+    # encoder-decoder (whisper)
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+    encoder_seq_len: int = 1500
+
+    # vlm
+    vision_stub: bool = False
+    vision_tokens: int = 256
+
+    # hybrid / ssm
+    lru_width: Optional[int] = None
+    conv1d_width: int = 4
+    mlstm_proj_factor: int = 2       # xLSTM up-projection around the mLSTM cell
+    mlstm_chunk: int = 2048          # chunkwise-parallel mLSTM chunk length
+
+    # misc
+    norm_eps: float = 1e-6
+    norm_kind: str = "rms"           # 'rms' | 'layer'
+    tie_embeddings: bool = True
+    act: str = "silu"
+    dtype: str = "bfloat16"
+    logits_pad_to: int = 1           # pad logits V so the vocab axis shards
+                                     # (padded ids get -1e9: softmax/argmax-inert)
+
+    # --- paper-technique integration (RSVD) -----------------------------
+    galore_rank: int = 0             # >0: RSVD low-rank optimizer states
+    galore_update_every: int = 200
+    powersgd_rank: int = 0           # >0: rank-k DP gradient compression
+    lowrank_serve_rank: int = 0      # >0: serve-side factorized weights
+
+    # --- runtime policy ---------------------------------------------------
+    remat: bool = True
+    scan_layers: bool = True
+    fsdp: bool = False               # shard params/opt over data axis too
+    seq_shard: bool = True           # sequence-parallel residual stream (train)
+
+    # ------------------------------------------------------------------
+    def head_dim_(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.num_heads
+
+    def attn_scale_(self) -> float:
+        return 1.0 / float(self.head_dim_()) ** 0.5
+
+    def lru_width_(self) -> int:
+        return self.lru_width if self.lru_width is not None else self.d_model
+
+    def moe_d_ff_(self) -> int:
+        return self.moe_d_ff if self.moe_d_ff is not None else self.d_ff
+
+    def param_dtype(self):
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[self.dtype]
+
+    def num_units_(self) -> Tuple[int, Tuple[str, ...]]:
+        """(scanned unit count, remainder pattern)."""
+        u = len(self.block_pattern)
+        return self.num_layers // u, self.block_pattern[: self.num_layers % u]
+
+    def is_subquadratic_(self) -> bool:
+        """True when no layer kind does unwindowed full attention."""
+        kinds = set(self.block_pattern)
+        quad = {"global"}
+        return not (kinds & quad) and not self.is_encoder_decoder
+
+    def has_decoder_(self) -> bool:
+        return True  # every assigned arch decodes (whisper via its decoder)
+
+    def trained_len_(self) -> int:
+        """Max absolute-position table length (sinusoidal archs)."""
+        return 4096
+
+    def padded_vocab_(self) -> int:
+        p = self.logits_pad_to
+        return self.vocab_size + (-self.vocab_size) % p
+
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test config: same family/kinds, tiny everything."""
+        u = len(self.block_pattern)
+        return replace(
+            self,
+            name=self.name + "-reduced",
+            num_layers=max(u, 2 if u == 1 else u),
+            d_model=128,
+            num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 2) if self.num_kv_heads < self.num_heads else 4,
+            head_dim=32,
+            d_ff=256 if self.d_ff > 0 else 0,
+            vocab_size=512,
+            num_experts=8 if self.num_experts else 0,
+            num_experts_per_tok=2 if self.num_experts else 0,
+            moe_d_ff=64 if self.num_experts else None,
+            kv_lora_rank=32 if self.use_mla else 0,
+            qk_rope_head_dim=16 if self.use_mla else 0,
+            qk_nope_head_dim=32 if self.use_mla else 0,
+            v_head_dim=32 if self.use_mla else 0,
+            encoder_layers=2 if self.is_encoder_decoder else 0,
+            encoder_seq_len=64 if self.is_encoder_decoder else 0,
+            vision_tokens=8 if self.vision_stub else 0,
+            lru_width=128 if self.lru_width is not None or "rglru" in self.block_pattern else None,
+            window_size=min(self.window_size, 32) if self.window_size else None,
+            attn_chunk=64,
+            dtype="float32",
+        )

@@ -1,0 +1,38 @@
+"""deepseek-v2-lite-16b [moe] — 27L d_model=2048 16H d_ff=1408 vocab=102400,
+MoE 64e top-6 — MLA kv_lora=512, 2 shared + routed top-6.
+[arXiv:2405.04434; hf]
+
+MLA dims per the DeepSeek-V2 paper: q heads carry 128 'nope' + 64 rope
+dims; kv compressed to a 512-dim latent (the decode cache stores ONLY the
+latent + one shared 64-dim rope key — itself a low-rank KV factorization,
+cf. DESIGN.md §5).  First layer dense (d_ff=10944).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-lite-16b",
+    family="moe",
+    num_layers=27,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=10944,            # dense (first-layer) FFN width
+    moe_d_ff=1408,         # per-expert width (the assigned d_ff)
+    vocab_size=102400,
+    num_experts=64,
+    num_experts_per_tok=6,
+    num_shared_experts=2,
+    first_k_dense=1,
+    use_mla=True,
+    kv_lora_rank=512,
+    qk_nope_head_dim=128,
+    qk_rope_head_dim=64,
+    v_head_dim=128,
+    rope_theta=10000.0,
+    block_pattern=("global",),
+    tie_embeddings=False,
+    act="silu",
+    fsdp=True,
+    galore_rank=0,
+    powersgd_rank=32,
+)

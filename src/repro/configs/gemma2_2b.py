@@ -1,0 +1,26 @@
+"""gemma2-2b [dense] — 26L d_model=2304 8H (GQA kv=4) d_ff=9216 vocab=256000
+— local+global alternating, logit softcap.  [arXiv:2408.00118; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-2b",
+    family="dense",
+    num_layers=26,
+    d_model=2304,
+    num_heads=8,
+    num_kv_heads=4,
+    head_dim=256,
+    d_ff=9216,
+    vocab_size=256000,
+    rope_theta=10000.0,
+    block_pattern=("local", "global"),   # alternating; 13 scanned pairs
+    window_size=4096,
+    attn_softcap=50.0,
+    final_softcap=30.0,
+    use_post_norm=True,                  # gemma2 sandwich norms
+    embed_scale=True,
+    tie_embeddings=True,
+    act="gelu_tanh",
+    galore_rank=128,
+    powersgd_rank=32,
+)

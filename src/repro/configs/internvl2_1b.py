@@ -1,0 +1,29 @@
+"""internvl2-1b [vlm] — 24L d_model=896 14H (GQA kv=2) d_ff=4864
+vocab=151655 — InternViT (stub) + Qwen2-0.5B LM backbone.
+[arXiv:2404.16821; hf]
+
+The vision tower is a STUB per the assignment: input_specs() provides
+precomputed patch embeddings [B, 256, 896] prepended to the text sequence.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-1b",
+    family="vlm",
+    num_layers=24,
+    d_model=896,
+    num_heads=14,
+    num_kv_heads=2,
+    head_dim=64,
+    d_ff=4864,
+    vocab_size=151655,
+    vision_stub=True,
+    vision_tokens=256,
+    rope_theta=1_000_000.0,
+    block_pattern=("global",),
+    tie_embeddings=True,
+    logits_pad_to=128,
+    act="silu",
+    galore_rank=64,
+    powersgd_rank=16,
+)

@@ -1,0 +1,33 @@
+"""moonshot-v1-16b-a3b [moe] — 48L d_model=2048 16H (GQA kv=16) d_ff=1408
+vocab=163840, MoE 64e top-6 — kimi/moonlight.
+[hf:moonshotai/Moonlight-16B-A3B; hf]
+
+Moonlight follows the DeepSeek-V3 recipe: 2 shared experts, first layer
+dense (d_ff=11264 a la moonlight), 64 routed experts top-6 with
+renormalized gates; attention is plain MHA (kv=16).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="moonshot-v1-16b-a3b",
+    family="moe",
+    num_layers=48,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=11264,            # dense (first-layer) FFN width
+    moe_d_ff=1408,         # per-expert FFN width (the assigned d_ff)
+    vocab_size=163840,
+    num_experts=64,
+    num_experts_per_tok=6,
+    num_shared_experts=2,
+    first_k_dense=1,
+    rope_theta=50000.0,
+    block_pattern=("global",),
+    tie_embeddings=False,
+    act="silu",
+    fsdp=True,             # 16B params: shard optimizer state over data too
+    galore_rank=0,         # GaLore off for MoE (expert grads are sparse)
+    powersgd_rank=32,      # compress dense (non-expert) grads only
+)

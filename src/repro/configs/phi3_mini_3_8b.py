@@ -1,0 +1,23 @@
+"""phi3-mini-3.8b [dense] — 32L d_model=3072 32H (GQA kv=32) d_ff=8192
+vocab=32064 — RoPE SwiGLU GQA.  [arXiv:2404.14219; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3-mini-3.8b",
+    family="dense",
+    num_layers=32,
+    d_model=3072,
+    num_heads=32,
+    num_kv_heads=32,       # kv=32: full multi-head attention
+    head_dim=96,
+    d_ff=8192,
+    vocab_size=32064,
+    rope_theta=10000.0,
+    block_pattern=("global",),
+    tie_embeddings=False,
+    act="silu",
+    # paper-technique integration defaults
+    galore_rank=128,
+    powersgd_rank=32,
+    lowrank_serve_rank=0,
+)

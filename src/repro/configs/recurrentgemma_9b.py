@@ -1,0 +1,31 @@
+"""recurrentgemma-9b [hybrid] — 38L d_model=4096 16H (GQA kv=1) d_ff=12288
+vocab=256000 — RG-LRU + local attn, pattern 2 recurrent : 1 attention.
+[arXiv:2402.19427; unverified]
+
+38 layers = 12 scanned (rglru, rglru, local) triples + 2 remainder rglru.
+Sub-quadratic end-to-end (recurrence + 2048-token windowed attention), so
+this arch RUNS the long_500k cell.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,          # MQA on the attention layers
+    head_dim=256,
+    d_ff=12288,
+    vocab_size=256000,
+    block_pattern=("rglru", "rglru", "local"),
+    window_size=2048,
+    lru_width=4096,
+    conv1d_width=4,
+    embed_scale=True,
+    tie_embeddings=True,
+    act="gelu_tanh",
+    fsdp=True,
+    galore_rank=128,
+    powersgd_rank=32,
+)

@@ -1,0 +1,48 @@
+"""The paper's own experiment configurations (§4), as selectable configs.
+
+These drive benchmarks/bench_spectra.py, bench_pca.py and bench_sumc.py;
+kept here so every experiment in EXPERIMENTS.md §Paper-repro maps to a
+config object, same as the LM architectures.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+
+@dataclass(frozen=True)
+class SpectraBench:
+    """Figs 2-4: A in R^{2000 x n}, k = frac * n largest singular values."""
+
+    m: int = 2000
+    n_values: Tuple[int, ...] = (512, 1024, 2000)
+    fracs: Tuple[float, ...] = (0.01, 0.03, 0.05, 0.10)
+    kinds: Tuple[str, ...] = ("fast", "sharp", "slow")
+    beta: float = 50.0             # sharp-decay breakout point
+    target_rel_err: float = 1e-8   # the paper's accuracy budget (f64)
+
+
+@dataclass(frozen=True)
+class PCABench:
+    """Fig 1: flattened RGB images, resolutions 8x8 ... 52x52."""
+
+    resolutions: Tuple[int, ...] = (8, 12, 16, 24, 32, 40, 52)
+    n_images: int = 2048
+    component_fracs: Tuple[float, ...] = (0.01, 0.03, 0.05, 0.10, 0.20, 0.30)
+
+
+@dataclass(frozen=True)
+class SuMCBench:
+    """Table 1: union-of-subspaces synthetic datasets."""
+
+    first: Tuple[Tuple[int, ...], Tuple[int, ...], int] = (
+        (500, 1000, 2000), (30, 50, 70), 1000
+    )  # sizes, dims, ambient
+    second: Tuple[Tuple[int, ...], Tuple[int, ...], int] = (
+        (5000, 10000, 20000), (30, 50, 70), 1000
+    )
+
+
+SPECTRA = SpectraBench()
+PCA = PCABench()
+SUMC = SuMCBench()

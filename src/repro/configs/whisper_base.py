@@ -1,0 +1,31 @@
+"""whisper-base [audio] — 6L d_model=512 8H (kv=8) d_ff=2048 vocab=51865 —
+enc-dec, conv frontend (stub).  [arXiv:2212.04356; unverified]
+
+6 encoder + 6 decoder layers, LayerNorm + GELU, absolute sinusoidal
+positions (no RoPE).  The mel/conv frontend is a stub: input_specs()
+provides precomputed frame embeddings [B, 1500, 512].
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="audio",
+    num_layers=6,              # decoder layers
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=2048,
+    vocab_size=51865,
+    is_encoder_decoder=True,
+    encoder_layers=6,
+    encoder_seq_len=1500,
+    use_rope=False,
+    norm_kind="layer",
+    act="gelu",
+    block_pattern=("global",),
+    tie_embeddings=True,
+    logits_pad_to=128,
+    galore_rank=64,
+    powersgd_rank=16,
+)

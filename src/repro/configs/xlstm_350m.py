@@ -1,0 +1,30 @@
+"""xlstm-350m [ssm] — 24L d_model=1024 4H (kv=4) d_ff=0 vocab=50304 —
+sLSTM + mLSTM blocks.  [arXiv:2405.04517; unverified]
+
+d_ff=0: xLSTM blocks have no separate FFN.  Mix ratio 3 mLSTM : 1 sLSTM
+(the xLSTM paper's [7:1]-style majority-mLSTM stacks, rounded to a
+4-layer repeating unit -> 6 scanned units).  Linear recurrence end-to-end,
+so this arch RUNS the long_500k cell.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-350m",
+    family="ssm",
+    num_layers=24,
+    d_model=1024,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=256,
+    d_ff=0,
+    vocab_size=50304,
+    block_pattern=("mlstm", "mlstm", "mlstm", "slstm"),
+    # chunk=4096: train_4k takes the (cheaper-at-short-T) quadratic path,
+    # prefill_32k runs 8 chunks, long-context decode is O(1) regardless —
+    # measured trade-off in EXPERIMENTS.md §Perf iteration 5b.
+    mlstm_chunk=4096,
+    tie_embeddings=True,
+    act="silu",
+    galore_rank=64,
+    powersgd_rank=16,
+)

@@ -1,0 +1,17 @@
+# The paper's primary contribution — randomized k-SVD reformulated as
+# BLAS-3 + fast counter-based RNG — plus its applications (PCA, subspace
+# clustering) and the multi-device distribution layer.
+from repro.core.rsvd import (  # noqa: F401
+    RSVDConfig,
+    low_rank_error,
+    randomized_eigvals,
+    randomized_svd,
+    truncation_error,
+)
+from repro.core.qr import (  # noqa: F401
+    cholesky_qr,
+    cholesky_qr2,
+    orthonormalize,
+    shifted_cholesky_qr3,
+)
+from repro.core.sketch import sketch_matrix  # noqa: F401

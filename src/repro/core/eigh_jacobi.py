@@ -1,0 +1,149 @@
+"""Parallel-order cyclic Jacobi eigensolver for small symmetric matrices.
+
+Used for the "small SVD" step of the randomized k-SVD (step 5 of the paper's
+Algorithm 1): instead of calling a LAPACK-style bidiagonalization SVD on the
+s x n sketch B, we form the s x s Gram matrix B B^T (a GEMM — BLAS-3) and
+diagonalize it here.
+
+The classical cyclic Jacobi applies one 2x2 rotation at a time (sequential).
+The *parallel ordering* (round-robin tournament) groups s/2 disjoint pivots
+per step; disjoint rotations commute, so each step is expressible as a single
+orthogonal matrix J (block-diagonal up to permutation) and the update
+A <- J^T A J is two s x s GEMMs.  This turns Jacobi itself into a BLAS-3
+algorithm — the paper's reformulation philosophy applied to the eigensolver.
+
+The rotation *bookkeeping* is pure control flow (no MXU work), so this stays
+in jax.lax rather than Pallas; the GEMMs inside dominate and XLA maps them to
+the MXU directly.  DESIGN.md records this decision.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _round_robin_schedule(s: int) -> Tuple[np.ndarray, np.ndarray]:
+    """All (s-1) rounds of the circle-method tournament for s players.
+
+    Returns (pp, qq), each of shape [s-1, s//2], with pp < qq elementwise.
+    """
+    assert s % 2 == 0
+    fixed = 0
+    rest = list(range(1, s))
+    pps, qqs = [], []
+    for _ in range(s - 1):
+        lineup = [fixed] + rest
+        pairs = [
+            (min(lineup[i], lineup[s - 1 - i]), max(lineup[i], lineup[s - 1 - i]))
+            for i in range(s // 2)
+        ]
+        pps.append([p for p, _ in pairs])
+        qqs.append([q for _, q in pairs])
+        rest = [rest[-1]] + rest[:-1]
+    return np.asarray(pps, np.int32), np.asarray(qqs, np.int32)
+
+
+def _build_rotation(A: jax.Array, pp: jax.Array, qq: jax.Array) -> jax.Array:
+    """Orthogonal J applying s/2 disjoint Givens rotations chosen to
+    annihilate A[pp, qq] (symmetric Schur decomposition, Golub & Van Loan)."""
+    s = A.shape[0]
+    dt = A.dtype
+    app = A[pp, pp]
+    aqq = A[qq, qq]
+    apq = A[pp, qq]
+
+    # t = sign(tau) / (|tau| + sqrt(1 + tau^2)),  tau = (aqq - app) / (2 apq)
+    safe_apq = jnp.where(jnp.abs(apq) > 0, apq, jnp.ones((), dt))
+    tau = (aqq - app) / (2.0 * safe_apq)
+    t = jnp.sign(tau) / (jnp.abs(tau) + jnp.sqrt(1.0 + tau * tau))
+    t = jnp.where(jnp.sign(tau) == 0, 1.0 / (tau + jnp.sqrt(1.0 + tau * tau)), t)
+    c = 1.0 / jnp.sqrt(1.0 + t * t)
+    sn = t * c
+    # Identity rotation where the pivot is already (numerically) zero.
+    eps = jnp.finfo(dt).eps
+    tiny = jnp.abs(apq) <= eps * jnp.sqrt(jnp.abs(app * aqq) + eps)
+    c = jnp.where(tiny, jnp.ones((), dt), c)
+    sn = jnp.where(tiny, jnp.zeros((), dt), sn)
+
+    J = jnp.eye(s, dtype=dt)
+    J = J.at[pp, pp].set(c)
+    J = J.at[qq, qq].set(c)
+    J = J.at[pp, qq].set(sn)
+    J = J.at[qq, pp].set(-sn)
+    return J
+
+
+def _offdiag_norm2(A: jax.Array) -> jax.Array:
+    return jnp.sum(A * A) - jnp.sum(jnp.diag(A) ** 2)
+
+
+def jacobi_eigh(
+    A: jax.Array, max_sweeps: int = 30, tol_factor: float = 10.0
+) -> Tuple[jax.Array, jax.Array]:
+    """Eigendecomposition of a symmetric matrix by parallel-order Jacobi.
+
+    Returns (eigenvalues_desc, eigenvectors) with A @ v = w * v, columns of
+    the second output being eigenvectors, sorted by descending eigenvalue.
+    """
+    s0 = A.shape[0]
+    dt = A.dtype
+    s = s0 + (s0 % 2)  # pad to even; pad stays exactly isolated (zero coupling)
+    if s != s0:
+        A = jnp.pad(A, ((0, 1), (0, 1)))
+    pp_all, qq_all = _round_robin_schedule(s)
+    pp_all = jnp.asarray(pp_all)
+    qq_all = jnp.asarray(qq_all)
+    n_rounds = s - 1
+
+    tol = tol_factor * jnp.finfo(dt).eps ** 2 * jnp.sum(A * A)
+
+    def round_body(r, carry):
+        Acur, Vcur = carry
+        J = _build_rotation(Acur, pp_all[r], qq_all[r])
+        Anew = J.T @ Acur @ J
+        Vnew = Vcur @ J
+        return (Anew, Vnew)
+
+    def sweep_cond(carry):
+        Acur, _, it = carry
+        return jnp.logical_and(it < max_sweeps, _offdiag_norm2(Acur) > tol)
+
+    def sweep_body(carry):
+        Acur, Vcur, it = carry
+        Acur, Vcur = jax.lax.fori_loop(0, n_rounds, round_body, (Acur, Vcur))
+        return (Acur, Vcur, it + 1)
+
+    V0 = jnp.eye(s, dtype=dt)
+    Af, Vf, _ = jax.lax.while_loop(sweep_cond, sweep_body, (A, V0, 0))
+
+    w = jnp.diag(Af)[:s0]
+    V = Vf[:s0, :s0]
+    order = jnp.argsort(-w)
+    return w[order], V[:, order]
+
+
+def svd_via_gram(B: jax.Array, use_jacobi: bool = True, max_sweeps: int = 30):
+    """SVD of a short-fat B (s x n, s <= n) via the s x s Gram matrix.
+
+    B = U S V^T  with  B B^T = U S^2 U^T  and  V^T = S^{-1} U^T B.
+
+    The Gram product is a GEMM; the eigensolver sees only an s x s matrix.
+    Accuracy note: squaring halves the usable precision for *small* singular
+    values; the randomized SVD only consumes the k *largest* of an
+    oversampled sketch, where this loss is immaterial (validated in tests).
+    """
+    s = B.shape[0]
+    G = B @ B.T
+    if use_jacobi:
+        w, U = jacobi_eigh(G, max_sweeps=max_sweeps)
+    else:
+        w, U = jnp.linalg.eigh(G)
+        w, U = w[::-1], U[:, ::-1]
+    w = jnp.maximum(w, 0.0)
+    sv = jnp.sqrt(w)
+    safe = jnp.maximum(sv, jnp.finfo(B.dtype).eps * jnp.max(sv) * s)
+    Vt = (U.T @ B) / safe[:, None]
+    return U, sv, Vt

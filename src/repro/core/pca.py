@@ -1,0 +1,78 @@
+"""Principal Component Analysis via randomized SVD (paper experiment 2).
+
+The paper's PCA experiment computes the top 1-30% principal components of
+flattened CelebA images at resolutions 8x8 ... 52x52.  PCA reduces to the
+SVD of the centered data matrix: for X in R^{N x d} with column means mu,
+the principal axes are the right singular vectors of (X - mu) and the
+explained variances are sigma_i^2 / (N - 1).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rsvd import RSVDConfig, randomized_svd
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class PCAResult:
+    components: jax.Array          # (k, d)  principal axes (rows)
+    explained_variance: jax.Array  # (k,)
+    singular_values: jax.Array     # (k,)
+    mean: jax.Array                # (d,)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "cfg", "seed"))
+def pca(X: jax.Array, k: int, cfg: RSVDConfig = RSVDConfig.fast(), seed: int = 0) -> PCAResult:
+    """Top-k principal components of X (N x d) via randomized SVD."""
+    mu = jnp.mean(X, axis=0)
+    Xc = X - mu[None, :]
+    _, S, Vt = randomized_svd(Xc, k, cfg, seed)
+    n = X.shape[0]
+    return PCAResult(
+        components=Vt,
+        explained_variance=S**2 / (n - 1),
+        singular_values=S,
+        mean=mu,
+    )
+
+
+def pca_exact(X: jax.Array, k: int) -> PCAResult:
+    """Dense-SVD PCA (the GESVD baseline column in the paper's Fig. 1)."""
+    mu = jnp.mean(X, axis=0)
+    Xc = X - mu[None, :]
+    _, S, Vt = jnp.linalg.svd(Xc, full_matrices=False)
+    n = X.shape[0]
+    return PCAResult(Vt[:k], S[:k] ** 2 / (n - 1), S[:k], mu)
+
+
+def transform(res: PCAResult, X: jax.Array) -> jax.Array:
+    return (X - res.mean[None, :]) @ res.components.T
+
+
+def inverse_transform(res: PCAResult, Z: jax.Array) -> jax.Array:
+    return Z @ res.components + res.mean[None, :]
+
+
+def synthetic_image_dataset(
+    n_images: int, height: int, width: int, seed: int = 0, rank_frac: float = 0.25
+) -> jax.Array:
+    """Image-statistics-like synthetic stand-in for CelebA (offline container):
+    low-rank structure plus pixel noise, matching the PCA benchmark shapes.
+    d = 3 * h * w as in the paper's RGB flattening."""
+    from repro.core.sketch import sketch_matrix
+
+    d = 3 * height * width
+    r = max(4, int(d * rank_frac))
+    # Smoothly decaying spectrum typical of natural-image patches.
+    basis = sketch_matrix(d, r, seed + 1)
+    coeff = sketch_matrix(n_images, r, seed + 2)
+    sig = 1.0 / jnp.arange(1, r + 1, dtype=jnp.float32) ** 1.2
+    X = (coeff * sig[None, :]) @ basis.T
+    noise = 0.01 * sketch_matrix(n_images, d, seed + 3)
+    return X + noise

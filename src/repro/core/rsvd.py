@@ -1,0 +1,178 @@
+"""Randomized k-SVD — the paper's Algorithm 1, faithful and optimized paths.
+
+Faithful path (defaults mirror the paper / cuSOLVER ``gesvdr`` semantics):
+
+  1. draw Gaussian sketch Omega in R^{n x s},   s = k + oversampling
+  2. Y = (A A^T)^q A Omega                      (chain of GEMMs)
+  3. Q = QR(Y).Q                                (orthonormal range basis)
+  4. B = Q^T A                                  (GEMM)
+  5. B = U S V^T                                (small SVD, s x n)
+  6. U~ = Q U                                   (GEMM)
+  -> A_k ~= U~[:, :k] S[:k] V[:k, :]^T
+
+Optimized (beyond-paper, TPU-native) switches — see DESIGN.md §2:
+  * qr_method='cqr2'        CholeskyQR2 instead of Householder QR (BLAS-3)
+  * small_svd='gram_jacobi' Gram + parallel-order Jacobi instead of LAPACK
+  * power_scheme='stabilized'  re-orthonormalized subspace iteration
+  * fused sketch            kernels/sketch_matmul.py generates Omega in VMEM
+
+`randomized_eigvals` implements the paper's "only the k largest eigenvalues"
+mode (steps 1-5, Sigma only), used in the PCA / spectra experiments.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Literal, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qr as qr_mod
+from repro.core import sketch as sketch_mod
+from repro.core.eigh_jacobi import svd_via_gram
+
+SmallSVD = Literal["lapack", "gram", "gram_jacobi"]
+
+
+@dataclass(frozen=True)
+class RSVDConfig:
+    """Algorithm configuration. Defaults = paper-faithful Algorithm 1.
+
+    Note on step 2: the paper says "Compute q steps of *QR iteration*
+    Y = (A A^H)^q A Omega" — i.e. power iteration with QR re-orthonormalization
+    between applications (what cuSOLVER gesvdr implements), NOT a raw GEMM
+    chain.  The raw chain is available as power_scheme='plain' for ablation;
+    it demonstrably loses the tail singular values to round-off (the sigma^(2q+1)
+    underflow documented in EXPERIMENTS.md)."""
+
+    oversample: int = 10          # s = k + oversample   (paper: s = O(k/eps))
+    power_iters: int = 2          # q in Algorithm 1 step 2
+    power_scheme: str = "stabilized"  # paper: "q steps of QR iteration"
+    qr_method: qr_mod.QRMethod = "householder"
+    small_svd: SmallSVD = "lapack"
+    sketch_kind: sketch_mod.SketchKind = "gaussian"
+    fused_sketch: bool = False    # Pallas fused RNG+GEMM (TPU fast path)
+
+    @staticmethod
+    def faithful() -> "RSVDConfig":
+        return RSVDConfig()
+
+    @staticmethod
+    def fast() -> "RSVDConfig":
+        """The TPU-optimized configuration (beyond-paper)."""
+        return RSVDConfig(
+            power_scheme="stabilized",
+            qr_method="cqr2",
+            small_svd="gram_jacobi",
+            fused_sketch=True,
+        )
+
+
+def _small_svd(B: jax.Array, method: SmallSVD):
+    if method == "lapack":
+        return jnp.linalg.svd(B, full_matrices=False)
+    if method == "gram":
+        return svd_via_gram(B, use_jacobi=False)
+    if method == "gram_jacobi":
+        return svd_via_gram(B, use_jacobi=True)
+    raise ValueError(f"unknown small_svd: {method}")
+
+
+def _sketch(A: jax.Array, s: int, seed: int, cfg: RSVDConfig) -> jax.Array:
+    if cfg.fused_sketch:
+        # Fused RNG+GEMM Pallas kernel — Omega never materialized in HBM.
+        from repro.kernels.ops import sketch_matmul
+
+        return sketch_matmul(A, s, seed, kind=cfg.sketch_kind)
+    omega = sketch_mod.sketch_matrix(A.shape[1], s, seed, cfg.sketch_kind, dtype=A.dtype)
+    return A @ omega
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "cfg", "seed")
+)
+def randomized_svd(
+    A: jax.Array,
+    k: int,
+    cfg: RSVDConfig = RSVDConfig(),
+    seed: int = 0,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Rank-k randomized SVD of A (m x n). Returns (U, S, Vt) with
+    U: m x k, S: k, Vt: k x n.
+
+    Orientation: the range finder works on the *taller* side; if m < n we
+    factor A^T and swap factors at the end (same flop count, better sketch).
+    """
+    m, n = A.shape
+    if m < n:
+        V, S, Ut = randomized_svd(A.T, k, cfg, seed)
+        return Ut.T, S, V.T
+
+    s = min(k + cfg.oversample, min(m, n))
+    Y = _sketch(A, s, seed, cfg)                       # step 1-2a: A @ Omega
+    if cfg.power_iters > 0:
+        if cfg.power_scheme == "plain":
+            for _ in range(cfg.power_iters):           # step 2: (A A^T)^q
+                Y = A @ (A.T @ Y)
+        else:
+            Y = _stabilized_power(A, Y, cfg)
+    Q = qr_mod.orthonormalize(Y, cfg.qr_method)        # step 3
+    B = Q.T @ A                                        # step 4
+    U_b, S, Vt = _small_svd(B, cfg.small_svd)          # step 5
+    U = Q @ U_b                                        # step 6
+    return U[:, :k], S[:k], Vt[:k, :]
+
+
+def _stabilized_power(A: jax.Array, Y: jax.Array, cfg: RSVDConfig) -> jax.Array:
+    for _ in range(cfg.power_iters):
+        Q = qr_mod.orthonormalize(Y, cfg.qr_method)
+        Z = A.T @ Q
+        Qz = qr_mod.orthonormalize(Z, cfg.qr_method)
+        Y = A @ Qz
+    return Y
+
+
+@functools.partial(jax.jit, static_argnames=("k", "cfg", "seed"))
+def randomized_eigvals(
+    A: jax.Array, k: int, cfg: RSVDConfig = RSVDConfig(), seed: int = 0
+) -> jax.Array:
+    """k largest singular values only (paper's eigenvalue-benchmark mode:
+    steps 1-5 of Algorithm 1, discarding U and V)."""
+    m, n = A.shape
+    if m < n:
+        return randomized_eigvals(A.T, k, cfg, seed)
+    s = min(k + cfg.oversample, min(m, n))
+    Y = _sketch(A, s, seed, cfg)
+    if cfg.power_iters > 0:
+        if cfg.power_scheme == "plain":
+            for _ in range(cfg.power_iters):
+                Y = A @ (A.T @ Y)
+        else:
+            Y = _stabilized_power(A, Y, cfg)
+    Q = qr_mod.orthonormalize(Y, cfg.qr_method)
+    B = Q.T @ A
+    if cfg.small_svd == "lapack":
+        S = jnp.linalg.svd(B, compute_uv=False)
+    else:
+        G = B @ B.T
+        if cfg.small_svd == "gram_jacobi":
+            from repro.core.eigh_jacobi import jacobi_eigh
+
+            w, _ = jacobi_eigh(G)
+        else:
+            w = jnp.linalg.eigvalsh(G)[::-1]
+        S = jnp.sqrt(jnp.maximum(w, 0.0))
+    return S[:k]
+
+
+def low_rank_error(A: jax.Array, U: jax.Array, S: jax.Array, Vt: jax.Array) -> jax.Array:
+    """Relative Frobenius error ||A - U S Vt||_F / ||A||_F (paper's metric)."""
+    R = A - (U * S[None, :]) @ Vt
+    return jnp.sqrt(jnp.sum(R * R) / jnp.sum(A * A))
+
+
+def truncation_error(S_full: jax.Array, k: int) -> jax.Array:
+    """||A - A_k||_F / ||A||_F from the exact spectrum (the 1+eps reference)."""
+    tail = jnp.sum(S_full[k:] ** 2)
+    return jnp.sqrt(tail / jnp.sum(S_full**2))

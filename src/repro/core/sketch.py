@@ -1,0 +1,128 @@
+"""Sketching operators for randomized linear algebra.
+
+The paper's second pillar (besides BLAS-3 reformulation) is a *fast parallel
+random number generator* (cuRAND on GPU, reported up to 3x speedup of the
+sketch step).  On TPU we go one step further: a *counter-based* stateless RNG
+(murmur3-finalizer hash over the element index) that can be evaluated
+
+  * in pure jnp (this module — the oracle / host path), and
+  * inside a Pallas kernel tile loop (kernels/sketch_matmul.py), bit-exactly,
+
+so the Gaussian sketch matrix never has to be materialized in HBM, and the
+distributed implementation can regenerate identical sketch columns on every
+device without any broadcast collective.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Counter-based RNG primitive (murmur3 finalizer, 2 rounds with distinct keys)
+# ---------------------------------------------------------------------------
+
+_M1 = np.uint32(0x85EBCA6B)
+_M2 = np.uint32(0xC2B2AE35)
+_GOLDEN = np.uint32(0x9E3779B9)
+
+
+def _murmur_fmix(x: jax.Array) -> jax.Array:
+    """murmur3 32-bit finalizer; x is uint32."""
+    x = x ^ (x >> 16)
+    x = x * _M1
+    x = x ^ (x >> 13)
+    x = x * _M2
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash_u32(idx: jax.Array, seed: jax.Array | int) -> jax.Array:
+    """Stateless counter hash: (index, seed) -> uint32.
+
+    Two mixing rounds; the seed enters both rounds so that low-entropy seeds
+    still decorrelate streams.
+    """
+    idx = idx.astype(jnp.uint32)
+    seed = jnp.asarray(seed, jnp.uint32)
+    h = _murmur_fmix(idx * _GOLDEN + seed)
+    h = _murmur_fmix(h ^ (seed * _M1 + np.uint32(0x27220A95)))
+    return h
+
+
+def _u32_to_unit(bits: jax.Array) -> jax.Array:
+    """uint32 -> float32 uniform in (0, 1]  (never 0, so log() is safe)."""
+    # Take the top 24 bits -> [0, 2^24), then (x + 1) / 2^24 in (0, 1].
+    return (bits >> np.uint32(8)).astype(jnp.float32) * np.float32(
+        1.0 / 16777216.0
+    ) + np.float32(1.0 / 16777216.0)
+
+
+def uniform_from_index(idx: jax.Array, seed) -> jax.Array:
+    return _u32_to_unit(hash_u32(idx, seed))
+
+
+def normal_from_index(idx: jax.Array, seed) -> jax.Array:
+    """Standard normal via Box-Muller on two decorrelated uniform streams.
+
+    Element i uses streams (i, seed) and (i, seed ^ 0x5BF03635); both jnp and
+    the Pallas kernel call this exact function body, so results are bit-equal.
+    """
+    seed = jnp.asarray(seed, jnp.uint32)
+    u1 = _u32_to_unit(hash_u32(idx, seed))
+    u2 = _u32_to_unit(hash_u32(idx, seed ^ np.uint32(0x5BF03635)))
+    r = jnp.sqrt(np.float32(-2.0) * jnp.log(u1))
+    theta = np.float32(2.0 * np.pi) * u2
+    return r * jnp.cos(theta)
+
+
+def rademacher_from_index(idx: jax.Array, seed) -> jax.Array:
+    bits = hash_u32(idx, seed)
+    return jnp.where(bits & np.uint32(1), np.float32(1.0), np.float32(-1.0))
+
+
+# ---------------------------------------------------------------------------
+# Materialized sketch matrices (host/oracle path)
+# ---------------------------------------------------------------------------
+
+SketchKind = Literal["gaussian", "rademacher"]
+
+
+def sketch_matrix(
+    n: int,
+    s: int,
+    seed: int,
+    kind: SketchKind = "gaussian",
+    dtype=jnp.float32,
+    row_offset: int = 0,
+) -> jax.Array:
+    """Materialize the n x s sketch Omega.
+
+    ``row_offset`` lets a row-sharded device generate *its* rows of the same
+    global sketch (element (i, j) depends only on the global flat index
+    i * s + j and the seed).
+    """
+    rows = jnp.arange(n, dtype=jnp.uint32)[:, None] + np.uint32(row_offset)
+    cols = jnp.arange(s, dtype=jnp.uint32)[None, :]
+    idx = rows * np.uint32(s) + cols
+    if kind == "gaussian":
+        vals = normal_from_index(idx, seed)
+    elif kind == "rademacher":
+        vals = rademacher_from_index(idx, seed)
+    else:
+        raise ValueError(f"unknown sketch kind: {kind}")
+    return vals.astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("s", "kind"))
+def apply_sketch(A: jax.Array, s: int, seed, kind: SketchKind = "gaussian"):
+    """C = A @ Omega with Omega materialized (reference path).
+
+    The fused-no-materialization path lives in kernels/sketch_matmul.py.
+    """
+    n = A.shape[-1]
+    omega = sketch_matrix(n, s, seed, kind, dtype=A.dtype)
+    return A @ omega

@@ -1,0 +1,76 @@
+"""Deterministic synthetic LM data pipeline.
+
+Generates token streams with enough structure to make the loss learnable
+(a mixture of Markov bigram chains), deterministically from (seed, step),
+so every host can produce ITS shard of the global batch independently —
+the same counter-based philosophy as the sketch RNG: no data coordination
+collectives, ever.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sketch import hash_u32
+
+
+def synthetic_batch(
+    cfg,
+    shape,
+    step: int,
+    *,
+    seed: int = 0,
+    host_index: int = 0,
+    host_count: int = 1,
+) -> Dict[str, jax.Array]:
+    """One host's shard of the global batch for `step`."""
+    B = shape.global_batch // host_count
+    T = shape.seq_len
+    base = np.uint32((step * 0x9E3779B9 + host_index * 7919) & 0xFFFFFFFF)
+
+    idx = (
+        jnp.arange(B * T, dtype=jnp.uint32).reshape(B, T)
+        + jnp.uint32(host_index) * np.uint32(B * T)
+    )
+    bits = hash_u32(idx + base, seed)
+    # Learnable structure: a position-periodic base pattern (period 32, phase
+    # per sequence) + 15% uniform noise.  A model that learns the pattern
+    # reaches ~0.15*ln(V) loss; uniform-random data would pin loss at ln(V).
+    phase = (hash_u32(jnp.arange(B, dtype=jnp.uint32) + base, seed + 3) % 32)[:, None]
+    pattern = ((jnp.arange(T, dtype=jnp.uint32)[None, :] + phase) * np.uint32(2654435761)) % np.uint32(cfg.vocab_size)
+    noise_mask = (bits % np.uint32(100)) < 15
+    noise = hash_u32(idx + base + np.uint32(0x1234), seed) % np.uint32(cfg.vocab_size)
+    tokens = jnp.where(noise_mask, noise, pattern).astype(jnp.int32)
+
+    batch: Dict[str, jax.Array] = {
+        "tokens": tokens,
+        "labels": jnp.roll(tokens, -1, axis=1),
+        "loss_mask": jnp.ones((B, T), jnp.float32).at[:, -1].set(0.0),
+    }
+    if cfg.vision_stub:
+        vis_idx = jnp.arange(B * cfg.vision_tokens * cfg.d_model, dtype=jnp.uint32)
+        vis = (hash_u32(vis_idx + base, seed + 1).astype(jnp.float32) * np.float32(1.0 / 2**32) - 0.5).reshape(
+            B, cfg.vision_tokens, cfg.d_model
+        )
+        batch["vision_embeds"] = vis * 0.02
+    if cfg.is_encoder_decoder:
+        Ta = cfg.encoder_seq_len
+        aud_idx = jnp.arange(B * Ta * cfg.d_model, dtype=jnp.uint32)
+        aud = (hash_u32(aud_idx + base, seed + 2).astype(jnp.float32) * np.float32(1.0 / 2**32) - 0.5).reshape(
+            B, Ta, cfg.d_model
+        )
+        batch["audio_features"] = aud * 0.02
+    return batch
+
+
+def data_iterator(cfg, shape, *, seed=0, host_index=0, host_count=1) -> Iterator[Dict]:
+    step = 0
+    while True:
+        yield synthetic_batch(
+            cfg, shape, step, seed=seed, host_index=host_index, host_count=host_count
+        )
+        step += 1

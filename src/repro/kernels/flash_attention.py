@@ -1,0 +1,171 @@
+"""Flash attention (online-softmax) Pallas kernel for the LM substrate.
+
+Supports the attention variants of every assigned architecture:
+  * causal masking (decoder LMs) or full (encoder / whisper encoder),
+  * GQA — Hq a multiple of Hkv, mapped in the k/v BlockSpec index_map
+    (no jnp.repeat materialization),
+  * sliding-window local attention (gemma2 local layers, recurrentgemma),
+  * gemma2 tanh logit soft-capping.
+
+Grid (bh, iq, kk) = (B*Hq, Tq/bq, Tk/bk); the key/value loop is innermost
+with running (m, l, acc) streaming-softmax state in VMEM.  Causal/window
+block skipping: key blocks entirely outside the visible band are skipped
+before touching the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = np.float32(-1e30)
+
+
+def _flash_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    nk: int,
+    bq: int,
+    bk: int,
+    tq: int,
+    tk: int,
+    causal: bool,
+    window: int | None,
+    softcap: float | None,
+    scale: float,
+):
+    iq, kk = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Query rows are right-aligned against the key timeline (decode support).
+    qpos0 = iq * bq + (tk - tq)
+    kpos0 = kk * bk
+
+    # Block-level visibility test (skip = no MXU work for this key block).
+    visible = True
+    if causal:
+        visible = jnp.asarray(kpos0 <= qpos0 + bq - 1)
+    else:
+        visible = jnp.asarray(True)
+    if window is not None:
+        visible = jnp.logical_and(visible, kpos0 + bk - 1 > qpos0 - window)
+
+    @pl.when(visible)
+    def _attend():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)  # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * np.float32(scale)  # (bq, bk)
+        if softcap is not None:
+            s = np.float32(softcap) * jnp.tanh(s / np.float32(softcap))
+
+        qpos = qpos0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = kpos0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < tk  # key padding
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window is not None:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(kk == nk - 1)
+    def _flush():
+        l = l_ref[...]
+        safe_l = jnp.where(l > 0, l, 1.0)  # fully-masked (padded) query rows
+        o_ref[0, 0] = (acc_ref[...] / safe_l).astype(o_ref.dtype)
+
+
+def flash_attention_padded(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    tq: int,
+    tk: int,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: [B, Hq, Tq_pad, D]; k, v: [B, Hkv, Tk_pad, D]; returns [B, Hq, Tq_pad, D].
+
+    tq/tk are the VALID lengths (<= padded); padded keys are masked in-kernel,
+    padded query rows produce zeros (caller slices them off).
+    """
+    B, Hq, Tqp, D = q.shape
+    Hkv, Tkp = k.shape[1], k.shape[2]
+    assert Tqp % bq == 0 and Tkp % bk == 0
+    rep = Hq // Hkv
+    nk = Tkp // bk
+    scale = scale if scale is not None else 1.0 / float(np.sqrt(D))
+    kernel = functools.partial(
+        _flash_kernel,
+        nk=nk,
+        bq=bq,
+        bk=bk,
+        tq=tq,
+        tk=tk,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        scale=scale,
+    )
+    grid = (B * Hq, Tqp // bq, nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, bq, D), lambda bh, iq, kk: (bh // Hq, bh % Hq, iq, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, bk, D),
+                lambda bh, iq, kk: (bh // Hq, (bh % Hq) // rep, kk, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, bk, D),
+                lambda bh, iq, kk: (bh // Hq, (bh % Hq) // rep, kk, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, bq, D), lambda bh, iq, kk: (bh // Hq, bh % Hq, iq, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Tqp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),  # running max
+            pltpu.VMEM((bq, 1), jnp.float32),  # running denominator
+            pltpu.VMEM((bq, D), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

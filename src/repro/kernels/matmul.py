@@ -1,0 +1,62 @@
+"""Tiled MXU matmul — the BLAS-3 workhorse of the paper's reformulation.
+
+Grid (i, j, kk) over (M/bm, N/bn, K/bk) with the reduction dimension
+innermost; a VMEM fp32 accumulator is zeroed at kk == 0 and flushed to the
+output block at the last kk step.  Block sizes default to 128 (MXU native
+tile); callers pad via ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        y_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_padded(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """C = X @ Y for shapes already padded to block multiples."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0
+    nk = k // bk
+    out_dtype = out_dtype or x.dtype
+    kernel = functools.partial(_matmul_kernel, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, y)

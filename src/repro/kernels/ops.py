@@ -1,0 +1,106 @@
+"""JIT'd public wrappers for the Pallas kernels: padding, dtype policy, and
+interpret-mode selection (CPU container validates in interpret mode; on real
+TPU the same call sites compile the kernels natively).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import gram as _gram
+from repro.kernels import matmul as _mm
+from repro.kernels import sketch_matmul as _sm
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    # Kernels execute in interpret mode everywhere except real TPUs.
+    return not _on_tpu()
+
+
+def _pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
+    pads = [(0, (-d) % m) for d, m in zip(x.shape, mults)]
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads)
+
+
+def _block(dim: int, pref: int = 128) -> int:
+    """Hardware-aligned block size: 128 where possible, else the padded dim."""
+    return pref if dim >= pref else max(8, int(2 ** np.ceil(np.log2(max(dim, 1)))))
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype",))
+def matmul(x: jax.Array, y: jax.Array, out_dtype=None):
+    """C = X @ Y via the tiled Pallas kernel (padded to MXU tiles)."""
+    m, k = x.shape
+    _, n = y.shape
+    bm, bn, bk = _block(m), _block(n), _block(k)
+    xp = _pad_to(x, (bm, bk))
+    yp = _pad_to(y, (bk, bn))
+    out = _mm.matmul_padded(
+        xp, yp, bm=bm, bn=bn, bk=bk,
+        out_dtype=out_dtype or x.dtype, interpret=_interpret(),
+    )
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("s", "seed", "kind", "out_dtype"))
+def sketch_matmul(a: jax.Array, s: int, seed: int = 0, kind: str = "gaussian", out_dtype=None):
+    """C = A @ Omega(n, s; seed) with Omega generated inside the kernel."""
+    m, n = a.shape
+    bm, bk = _block(m), _block(n)
+    bn = _block(s)
+    ap = _pad_to(a, (bm, bk))
+    s_padded = s + (-s) % bn
+    out = _sm.sketch_matmul_padded(
+        ap, s, seed, s_padded=s_padded, kind=kind,
+        bm=bm, bn=bn, bk=bk, out_dtype=out_dtype or a.dtype,
+        interpret=_interpret(),
+    )
+    return out[:m, :s]
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype",))
+def gram(y: jax.Array, out_dtype=jnp.float32):
+    """G = Y^T Y via the symmetric (SYRK-style) kernel."""
+    m, s = y.shape
+    bs, bk = _block(s), _block(m)
+    yp = _pad_to(y, (bk, bs))
+    upper = _gram.gram_padded(yp, bs=bs, bk=bk, out_dtype=out_dtype, interpret=_interpret())
+    full = _gram.symmetrize_upper(upper, bs=bs)
+    return full[:s, :s]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "softcap", "scale")
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+):
+    """Flash attention. q: [B, Hq, Tq, D]; k, v: [B, Hkv, Tk, D]."""
+    B, Hq, Tq, D = q.shape
+    Tk = k.shape[2]
+    bq = _block(Tq)
+    bk = _block(Tk)
+    qp = _pad_to(q, (1, 1, bq, D))
+    kp = _pad_to(k, (1, 1, bk, D))
+    vp = _pad_to(v, (1, 1, bk, D))
+    out = _fa.flash_attention_padded(
+        qp, kp, vp, tq=Tq, tk=Tk, causal=causal, window=window,
+        softcap=softcap, scale=scale, bq=bq, bk=bk, interpret=_interpret(),
+    )
+    return out[:, :, :Tq, :]

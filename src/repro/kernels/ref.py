@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sketch as sketch_mod
+
+
+def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    """C = A @ B with fp32 accumulation."""
+    out_dtype = out_dtype or a.dtype
+    return jnp.matmul(
+        a, b, preferred_element_type=jnp.float32
+    ).astype(out_dtype)
+
+
+def sketch_matmul_ref(
+    a: jax.Array, s: int, seed: int, kind: str = "gaussian", out_dtype=None
+) -> jax.Array:
+    """C = A @ Omega(n, s, seed) — Omega materialized (the kernel never does)."""
+    out_dtype = out_dtype or a.dtype
+    n = a.shape[1]
+    omega = sketch_mod.sketch_matrix(n, s, seed, kind, dtype=jnp.float32)
+    return jnp.matmul(
+        a.astype(jnp.float32), omega, preferred_element_type=jnp.float32
+    ).astype(out_dtype)
+
+
+def gram_ref(y: jax.Array, out_dtype=None) -> jax.Array:
+    """G = Y^T Y with fp32 accumulation (symmetric output)."""
+    out_dtype = out_dtype or y.dtype
+    yf = y.astype(jnp.float32)
+    return jnp.matmul(yf.T, yf, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def flash_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """Reference attention. q: [B, Hq, Tq, D]; k, v: [B, Hkv, Tk, D].
+
+    GQA: Hq is a multiple of Hkv; query head h reads kv head h // (Hq//Hkv).
+    window: local (sliding-window) attention of that many past positions.
+    softcap: gemma2-style tanh logit soft-capping.
+    """
+    B, Hq, Tq, D = q.shape
+    Hkv = k.shape[1]
+    rep = Hq // Hkv
+    kk = jnp.repeat(k, rep, axis=1)
+    vv = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    logits = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32)
+    ) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    Tk = k.shape[2]
+    qpos = jnp.arange(Tq)[:, None] + (Tk - Tq)  # right-aligned queries
+    kpos = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

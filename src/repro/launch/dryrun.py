@@ -1,0 +1,467 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Everything below may import jax.
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.configs.base import SHAPES, ShapeConfig
+from repro.launch import mesh as mesh_mod
+from repro.launch.input_specs import abstract_caches, applicable, input_specs
+from repro.models import abstract_params
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.serve import serve_step
+from repro.train.train_step import make_train_step
+
+ART_DIR = pathlib.Path(os.environ.get("REPRO_ART_DIR", "artifacts/dryrun"))
+
+_COLL_RE = re.compile(
+    r"=\s+(\w+)\[([\d,]*)\][^\s]*\s+(all-reduce|all-gather|reduce-scatter|"
+    r"all-to-all|collective-permute)(?:-start)?\("
+)
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def parse_collectives(hlo_text: str):
+    """Sum result-operand sizes of every collective op (per device)."""
+    out = []
+    for m in _COLL_RE.finditer(hlo_text):
+        dtype, dims, op = m.group(1), m.group(2), m.group(3)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        size = 1
+        for d in dims.split(","):
+            if d:
+                size *= int(d)
+        out.append({"op": op, "bytes": size * _DTYPE_BYTES[dtype]})
+    totals: Dict[str, int] = {}
+    for c in out:
+        totals[c["op"]] = totals.get(c["op"], 0) + c["bytes"]
+    return {"per_op": totals, "total": sum(totals.values()), "count": len(out)}
+
+
+def analyze(compiled, lowered) -> Dict[str, Any]:
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    return {
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "generated_code_bytes": ma.generated_code_size_in_bytes,
+        },
+        "cost": {
+            "flops": float(ca.get("flops", -1)),
+            "transcendentals": float(ca.get("transcendentals", -1)),
+            "bytes_accessed": float(ca.get("bytes accessed", -1)),
+        },
+        "collectives": parse_collectives(txt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+def _opt_shardings(param_sh):
+    return adamw.AdamWState(
+        step=NamedSharding(list(jax.tree.leaves(param_sh))[0].mesh, P()),
+        m=param_sh,
+        v=param_sh,
+    )
+
+
+def build_train(cfg, shape, mesh):
+    params_abs = abstract_params(cfg)
+    opt_abs = jax.eval_shape(adamw.init_state, params_abs)
+    batch_abs = input_specs(cfg, shape)["batch"]
+
+    param_sh = mesh_mod.param_shardings(cfg, params_abs, mesh)
+    opt_sh = _opt_shardings(param_sh)
+    batch_sh = mesh_mod.batch_shardings(cfg, batch_abs, mesh, shape.global_batch)
+
+    bx = mesh_mod.batch_axes(mesh)
+    n_dp = int(np.prod([mesh.shape[a] for a in bx]))
+    bdim = bx if shape.global_batch % n_dp == 0 else None
+    vshard = "model" if cfg.padded_vocab_() % mesh.shape["model"] == 0 else None
+    logits_sh = NamedSharding(mesh, P(bdim, None, vshard))
+
+    ocfg = adamw.AdamWConfig()
+    raw = make_train_step(cfg, ocfg, logits_sharding=logits_sh)
+
+    def step(params, opt_state, batch):
+        p, o, metrics, _ = raw(params, opt_state, batch, None)
+        return p, o, metrics
+
+    fn = jax.jit(
+        step,
+        in_shardings=(param_sh, opt_sh, batch_sh),
+        out_shardings=(param_sh, opt_sh, None),
+        donate_argnums=(0, 1),
+    )
+    return fn, (params_abs, opt_abs, batch_abs)
+
+
+def build_prefill(cfg, shape, mesh):
+    params_abs = jax.eval_shape(
+        lambda: jax.tree.map(
+            lambda l: jnp.zeros(l.shape, jnp.bfloat16)
+            if jnp.issubdtype(l.dtype, jnp.floating) else jnp.zeros(l.shape, l.dtype),
+            abstract_params(cfg),
+        )
+    )
+    spec = input_specs(cfg, shape)
+    param_sh = mesh_mod.param_shardings(cfg, params_abs, mesh)
+    tok_sh = NamedSharding(mesh, P(mesh_mod.batch_axes(mesh), None))
+    cache_sh = mesh_mod.cache_shardings(cfg, spec["caches"], mesh, shape.global_batch)
+    extras_sh = mesh_mod.batch_shardings(cfg, spec["extras"], mesh, shape.global_batch)
+
+    def step(params, tokens, caches, extras):
+        logits, caches, enc = serve_step.prefill_step(params, tokens, cfg, caches, extras=extras)
+        return logits, caches
+
+    fn = jax.jit(
+        step,
+        in_shardings=(param_sh, tok_sh, cache_sh, extras_sh),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(2,),
+    )
+    return fn, (params_abs, spec["tokens"], spec["caches"], spec["extras"])
+
+
+def build_decode(cfg, shape, mesh):
+    params_abs = jax.eval_shape(
+        lambda: jax.tree.map(
+            lambda l: jnp.zeros(l.shape, jnp.bfloat16)
+            if jnp.issubdtype(l.dtype, jnp.floating) else jnp.zeros(l.shape, l.dtype),
+            abstract_params(cfg),
+        )
+    )
+    spec = input_specs(cfg, shape)
+    param_sh = mesh_mod.param_shardings(cfg, params_abs, mesh)
+    bx = mesh_mod.batch_axes(mesh)
+    n_dp = int(np.prod([mesh.shape[a] for a in bx]))
+    bdim = bx if shape.global_batch % n_dp == 0 and shape.global_batch >= n_dp else None
+    tok_sh = NamedSharding(mesh, P(bdim, None))
+    pos_sh = NamedSharding(mesh, P())
+    cache_sh = mesh_mod.cache_shardings(cfg, spec["caches"], mesh, shape.global_batch)
+    args = [params_abs, spec["token"], spec["position"], spec["caches"]]
+    in_sh = [param_sh, tok_sh, pos_sh, cache_sh]
+    if cfg.is_encoder_decoder:
+        args.append(spec["encoder_out"])
+        in_sh.append(NamedSharding(mesh, P(bdim, None, None)))
+
+        def step(params, token, position, caches, enc):
+            return serve_step.decode_step(
+                params, token, position, cfg, caches, encoder_out=enc
+            )
+    else:
+
+        def step(params, token, position, caches):
+            return serve_step.decode_step(params, token, position, cfg, caches)
+
+    fn = jax.jit(
+        step,
+        in_shardings=tuple(in_sh),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(3,),
+    )
+    return fn, tuple(args)
+
+
+def build_train_f32(cfg, shape, mesh):
+    """Paired baseline for the podsgd hillclimb: the standard train step with
+    f32 params (XLA:CPU's bf16 emulation crashes inside manual-axis shard_map
+    — 'Invalid binary instruction opcode copy' — so the podsgd comparison is
+    run f32-vs-f32; on TPU bf16 is native and unaffected)."""
+    return build_train(dataclasses.replace(cfg, dtype="float32"), shape, mesh)
+
+
+def build_train_podsgd(cfg, shape, mesh):
+    """Hillclimb variant: cross-pod PowerSGD gradient sync (train/podsgd.py)."""
+    from repro.train.podsgd import init_podsgd_state, make_podsgd_train_step
+
+    cfg = dataclasses.replace(cfg, dtype="float32")  # see build_train_f32
+
+    params_abs = abstract_params(cfg)
+    opt_abs = jax.eval_shape(adamw.init_state, params_abs)
+    batch_abs = input_specs(cfg, shape)["batch"]
+    n_pods = mesh.shape.get("pod", 1)
+    psgd_abs = jax.eval_shape(
+        lambda: init_podsgd_state(
+            jax.tree.map(lambda l: jnp.zeros(l.shape, l.dtype), params_abs),
+            cfg.powersgd_rank, n_pods,
+        )
+    )
+
+    param_sh = mesh_mod.param_shardings(cfg, params_abs, mesh)
+    opt_sh = _opt_shardings(param_sh)
+    batch_sh = mesh_mod.batch_shardings(cfg, batch_abs, mesh, shape.global_batch)
+    flat_psh, pdef = jax.tree.flatten(
+        jax.tree_util.tree_map_with_path(
+            lambda path, l: mesh_mod.param_spec(path, l, cfg, mesh), params_abs
+        )
+    )
+    e_abs_flat = pdef.flatten_up_to(psgd_abs[0])
+    e_sh = jax.tree.unflatten(
+        pdef,
+        [
+            None if e is None else NamedSharding(mesh, P(*(("pod",) + tuple(spec))))
+            for e, spec in zip(e_abs_flat, flat_psh)
+        ],
+    )
+    q_sh = jax.tree.map(lambda q: NamedSharding(mesh, P()), psgd_abs[1])
+
+    vshard = "model" if cfg.padded_vocab_() % mesh.shape["model"] == 0 else None
+    # inside the pod-manual shard_map, sharding constraints may only mention
+    # the Auto axes ('data'/'model')
+    logits_sh = NamedSharding(mesh, P("data", None, vshard))
+    step = make_podsgd_train_step(cfg, adamw.AdamWConfig(), mesh, logits_sh)
+    # NOTE: no donation here — donate_argnums + manual-axis shard_map trips an
+    # XLA:CPU SPMD crash ("Invalid binary instruction opcode copy"); the real
+    # deployment donates on TPU where the pass is exercised routinely.
+    fn = jax.jit(
+        step,
+        in_shardings=(param_sh, opt_sh, batch_sh, e_sh, q_sh),
+        out_shardings=(param_sh, opt_sh, None, e_sh, q_sh),
+    )
+    return fn, (params_abs, opt_abs, batch_abs, psgd_abs[0], psgd_abs[1])
+
+
+def build_train_no_seqshard(cfg, shape, mesh):
+    """Ablation: sequence-sharded residual stream OFF (collective vs memory)."""
+    return build_train(
+        dataclasses.replace(cfg, dtype="float32", seq_shard=False), shape, mesh
+    )
+
+
+VARIANT_BUILDERS = {
+    "podsgd": build_train_podsgd,
+    "baseline_f32": build_train_f32,
+    "no_seqshard": build_train_no_seqshard,
+}
+
+
+# ---------------------------------------------------------------------------
+# Mini (single-unit) lowering for scan trip-count cost correction
+# ---------------------------------------------------------------------------
+
+def build_mini(cfg, shape, mesh):
+    """Lower EXACTLY one scanned unit (same shardings) so the roofline can
+    compose: total = full + (n_scan - 1) * mini.  Returns None when the arch
+    has no scanned units."""
+    params_abs = abstract_params(cfg)
+    if "units" not in params_abs:
+        return None, None
+    dtype = cfg.param_dtype() if shape.kind == "train" else jnp.bfloat16
+    units_abs = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(
+            (1,) + l.shape[1:],
+            dtype if jnp.issubdtype(l.dtype, jnp.floating) else l.dtype,
+        ),
+        params_abs["units"],
+    )
+    full_param_sh = mesh_mod.param_shardings(cfg, params_abs, mesh)
+    units_sh = full_param_sh["units"]
+    B, Tlen = shape.global_batch, shape.seq_len
+    bx = mesh_mod.batch_axes(mesh)
+    n_dp = int(np.prod([mesh.shape[a] for a in bx]))
+    bdim = bx if B % n_dp == 0 and B >= n_dp else None
+    # the residual-stream dtype follows params in training (f32 ablations)
+    act_dtype = cfg.param_dtype() if shape.kind == "train" else jnp.bfloat16
+
+    if shape.kind == "train":
+        Tq = Tlen + (cfg.vision_tokens if cfg.vision_stub else 0)
+        x_abs = jax.ShapeDtypeStruct((B, Tq, cfg.d_model), act_dtype)
+        x_sh = NamedSharding(mesh, P(bdim, None, None))
+        pos = jnp.arange(Tq, dtype=jnp.int32)
+
+        def loss(units, x):
+            (h, aux), _ = T.scan_units(units, x, cfg, positions=pos, mode="train")
+            l = jnp.sum(h.astype(jnp.float32))
+            if aux:
+                l = l + aux.get("moe_lb_loss", 0.0)
+            return l
+
+        def mini(units, x):
+            return jax.grad(loss, argnums=(0, 1))(units, x)
+
+        fn = jax.jit(mini, in_shardings=(units_sh, x_sh), out_shardings=(units_sh, x_sh))
+        return fn, (units_abs, x_abs)
+
+    # serve: one unit forward (prefill or decode shape)
+    caches_abs_full = abstract_caches(cfg, shape)
+    unit_caches_abs = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((1,) + l.shape[1:], l.dtype),
+        caches_abs_full["units"],
+    )
+    cache_sh_full = mesh_mod.cache_shardings(cfg, caches_abs_full, mesh, B)
+    unit_cache_sh = cache_sh_full["units"]
+    Tq = 1 if shape.kind == "decode" else Tlen
+    x_abs = jax.ShapeDtypeStruct((B, Tq, cfg.d_model), act_dtype)
+    x_sh = NamedSharding(mesh, P(bdim, None, None))
+    mode = "decode" if shape.kind == "decode" else "prefill"
+    pos_abs = jax.ShapeDtypeStruct((1,) if mode == "decode" else (Tq,), jnp.int32)
+
+    def mini(units, x, ucaches, pos):
+        (h, _), ncaches = T.scan_units(
+            units, x, cfg, positions=pos, unit_caches=ucaches, mode=mode
+        )
+        return h, ncaches
+
+    fn = jax.jit(
+        mini,
+        in_shardings=(units_sh, x_sh, unit_cache_sh, NamedSharding(mesh, P(None))),
+        out_shardings=(x_sh, unit_cache_sh),
+    )
+    return fn, (units_abs, x_abs, unit_caches_abs, pos_abs)
+
+
+# ---------------------------------------------------------------------------
+# Cell runner
+# ---------------------------------------------------------------------------
+
+def n_scan_units(cfg) -> int:
+    n_units, _ = cfg.num_units_()
+    return n_units - cfg.first_k_dense // max(len(cfg.block_pattern), 1)
+
+
+def analytic_flops(cfg, shape) -> Dict[str, float]:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); D = tokens."""
+    import math
+
+    params_abs = abstract_params(cfg)
+    total = sum(
+        int(np.prod(l.shape)) for l in jax.tree.leaves(params_abs) if hasattr(l, "shape")
+    )
+    n_active = total
+    if cfg.num_experts > 0:
+        # subtract inactive expert fraction
+        expert = 0
+        for path, l in jax.tree_util.tree_flatten_with_path(params_abs)[0]:
+            names = [str(getattr(p, "key", "")) for p in path]
+            if "ffn" in names and hasattr(l, "shape") and l.ndim >= 3 and cfg.num_experts in l.shape:
+                expert += int(np.prod(l.shape))
+        n_active = total - expert + expert * cfg.num_experts_per_tok // cfg.num_experts
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6 if shape.kind == "train" else 2
+    return {
+        "params_total": float(total),
+        "params_active": float(n_active),
+        "tokens": float(tokens),
+        "model_flops": float(mult * n_active * tokens),
+    }
+
+
+def run_cell(
+    arch: str, shape_name: str, multi_pod: bool, out_dir: pathlib.Path,
+    variant: str | None = None,
+) -> Dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "multi" if multi_pod else "single"
+    stem = f"{arch}__{shape_name}__{mesh_name}"
+    if variant:
+        stem += f"__{variant}"
+    out_path = out_dir / f"{stem}.json"
+    if out_path.exists():
+        return json.loads(out_path.read_text())
+
+    ok, reason = applicable(cfg, shape)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "n_devices": 512 if multi_pod else 256,
+    }
+    if variant:
+        rec["variant"] = variant
+    if not ok:
+        rec["skipped"] = reason
+        out_path.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    builders = {"train": build_train, "prefill": build_prefill, "decode": build_decode}
+    t0 = time.time()
+    with mesh:
+        if variant:
+            fn, args = VARIANT_BUILDERS[variant](cfg, shape, mesh)
+        else:
+            fn, args = builders[shape.kind](cfg, shape, mesh)
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+        rec["full"] = analyze(compiled, lowered)
+        rec["compile_s"] = round(time.time() - t0, 1)
+        print(f"[{arch} {shape_name} {mesh_name}] full compile {rec['compile_s']}s "
+              f"flops={rec['full']['cost']['flops']:.3e} "
+              f"coll={rec['full']['collectives']['total']:.3e}B")
+
+        t1 = time.time()
+        mini_fn, mini_args = build_mini(cfg, shape, mesh)
+        if mini_fn is not None:
+            mlow = mini_fn.lower(*mini_args)
+            mcomp = mlow.compile()
+            rec["mini"] = analyze(mcomp, mlow)
+            rec["mini"]["compile_s"] = round(time.time() - t1, 1)
+        rec["n_scan_units"] = n_scan_units(cfg)
+
+    rec["analytic"] = analytic_flops(cfg, shape)
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=str(ART_DIR))
+    ap.add_argument("--variant", default=None, choices=[None, *VARIANT_BUILDERS])
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    archs = sorted(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_cell(arch, shape, mp, out_dir, variant=args.variant)
+                except Exception as e:
+                    failures.append((arch, shape, mp, repr(e)))
+                    traceback.print_exc()
+                    print(f"FAILED: {arch} {shape} multi={mp}: {e}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        sys.exit(1)
+    print("ALL CELLS OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) cell — no allocation.
+
+input_specs(cfg, shape) returns the abstract inputs for the step the shape
+kind lowers (train_step / prefill_step / decode_step), and the matching
+sharding builders live in launch/mesh.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.serve import kvcache
+
+S = jax.ShapeDtypeStruct
+
+
+def _batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, T = shape.global_batch, shape.seq_len
+    batch: Dict[str, Any] = {
+        "tokens": S((B, T), jnp.int32),
+        "labels": S((B, T), jnp.int32),
+        "loss_mask": S((B, T), jnp.float32),
+    }
+    if cfg.vision_stub:
+        batch["vision_embeds"] = S((B, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.is_encoder_decoder:
+        batch["audio_features"] = S((B, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def cache_len_policy(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Cache buffer length: full seq for quadratic archs, window-bounded for
+    sub-quadratic long-context decode (the structural reason long_500k runs
+    only on SSM/hybrid archs).  VLM prompts carry vision_tokens extra
+    positions in front of the text."""
+    extra = cfg.vision_tokens if cfg.vision_stub else 0
+    if shape.kind == "decode" and cfg.is_subquadratic_():
+        w = cfg.window_size or 0
+        return min(shape.seq_len + extra, max(w, 128))
+    return shape.seq_len + extra
+
+
+def abstract_caches(cfg: ModelConfig, shape: ShapeConfig):
+    max_len = cache_len_policy(cfg, shape)
+    return jax.eval_shape(
+        lambda: kvcache.init_caches(cfg, shape.global_batch, max_len, dtype=jnp.bfloat16)
+    )
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract inputs keyed by step-function argument name."""
+    B, T = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {"batch": _batch_specs(cfg, shape)}
+
+    if shape.kind == "prefill":
+        spec: Dict[str, Any] = {
+            "tokens": S((B, T), jnp.int32),
+            "caches": abstract_caches(cfg, shape),
+        }
+        extras = {}
+        if cfg.vision_stub:
+            extras["vision_embeds"] = S((B, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+        if cfg.is_encoder_decoder:
+            extras["audio_features"] = S((B, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+        spec["extras"] = extras
+        return spec
+
+    # decode: one new token against a seq_len-deep cache
+    spec = {
+        "token": S((B, 1), jnp.int32),
+        "position": S((), jnp.int32),
+        "caches": abstract_caches(cfg, shape),
+    }
+    if cfg.is_encoder_decoder:
+        spec["encoder_out"] = S((B, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+    return spec
+
+
+def applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """(runs?, reason-if-skipped) — the DESIGN.md §5 skip matrix."""
+    if shape.name == "long_500k" and not cfg.is_subquadratic_():
+        return False, "full-attention arch: 500k decode is quadratic (skip per assignment)"
+    return True, ""

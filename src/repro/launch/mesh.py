@@ -1,0 +1,177 @@
+"""Production mesh + sharding rules.
+
+Mesh axes:
+  pod    — inter-pod (DCN) axis: carries ONLY the data-parallel gradient
+           reduction (PowerSGD-compressible).
+  data   — intra-pod data parallelism / FSDP axis.
+  model  — tensor/expert parallelism (heads, d_ff, vocab, experts).
+
+IMPORTANT: functions only — importing this module must not touch jax device
+state (the dry-run sets XLA_FLAGS before first jax use).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules (path-pattern based, MaxText-style logical rules)
+# ---------------------------------------------------------------------------
+
+# weight-name classes
+_IN_MODEL_OUT = {  # (d_in, d_out-sharded): activations enter replicated
+    "wq", "wk", "wv", "w_gate", "w_up", "w_in", "w_x", "w_y", "w_z",
+    "w_dkv", "w_uk", "w_uv", "router", "w_i", "w_f", "w_og", "w_ig", "w_rg",
+}
+_MODEL_IN_OUT = {"wo", "w_down", "w_out", "w_o"}  # (d_in-sharded, d_out)
+
+
+def _leaf_names(path) -> list[str]:
+    return [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+
+
+def _divides(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def param_spec(path, leaf, cfg, mesh) -> P:
+    """PartitionSpec for one parameter leaf (handles scan-stacked leading dim)."""
+    names = _leaf_names(path)
+    shape = leaf.shape
+    model_size = mesh.shape.get("model", 0)  # 0 = mesh has no model axis
+    data_size = mesh.shape.get("data", 0)
+    fsdp = cfg.fsdp
+    # scanned units carry a leading stack axis
+    stacked = "units" in names
+    core = shape[1:] if stacked else shape
+    name = names[-1]
+    if name in ("w", "b"):  # conv
+        name = "conv_" + name
+
+    def out(*spec):
+        return P(*(((None,) + spec) if stacked else spec))
+
+    if len(core) == 0:
+        return out()
+
+    # vectors: replicate (cheap) unless large and divisible
+    if len(core) == 1:
+        return out(None)
+
+    # expert-stacked weights [E, d_in, d_out]: EP over model
+    if len(core) == 3 and "ffn" in names and core[0] == cfg.num_experts:
+        if name in ("w_gate", "w_up"):
+            return out("model", "data" if fsdp and _divides(core[1], data_size) else None, None)
+        return out("model", None, "data" if fsdp and _divides(core[2], data_size) else None)
+
+    # slstm per-head recurrent mixing [H, Dh, Dh]
+    if len(core) == 3:
+        last = "model" if _divides(core[2], model_size) else None
+        return out(None, None, last)
+
+    if name == "embed":
+        if _divides(core[0], model_size):
+            return out("model", "data" if fsdp and _divides(core[1], data_size) else None)
+        if _divides(core[1], model_size):
+            return out(None, "model")
+        return out(None, None)
+    if name == "head":
+        d0 = "data" if fsdp and _divides(core[0], data_size) else None
+        return out(d0, "model" if _divides(core[1], model_size) else None)
+
+    if name in _IN_MODEL_OUT and len(core) == 2:
+        m = "model" if _divides(core[1], model_size) else None
+        d = "data" if fsdp and _divides(core[0], data_size) and m == "model" else None
+        return out(d, m)
+    if name in _MODEL_IN_OUT and len(core) == 2:
+        m = "model" if _divides(core[0], model_size) else None
+        d = "data" if fsdp and _divides(core[1], data_size) and m == "model" else None
+        return out(m, d)
+    if name == "conv_w":
+        return out(None, "model" if _divides(core[1], model_size) else None)
+
+    # fallback: replicate
+    return out(*([None] * len(core)))
+
+
+def param_shardings(cfg, params_abstract, mesh) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_spec(path, leaf, cfg, mesh)),
+        params_abstract,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Data / cache shardings
+# ---------------------------------------------------------------------------
+
+def data_spec(mesh: Mesh, batch_divisible: bool = True) -> P:
+    return P(batch_axes(mesh) if batch_divisible else None, None)
+
+
+def batch_shardings(cfg, batch_abstract, mesh, global_batch: int) -> Any:
+    bx = batch_axes(mesh)
+    n_dp = int(np.prod([mesh.shape[a] for a in bx]))
+    bdim = bx if global_batch % n_dp == 0 and global_batch >= n_dp else None
+
+    def spec(path, leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(bdim, *([None] * (nd - 1))))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_abstract)
+
+
+def cache_shardings(cfg, caches_abstract, mesh, global_batch: int) -> Any:
+    """KV caches: batch over data axes; heads or head_dim over model,
+    whichever divides.  Scan-stacked leaves get a leading None."""
+    bx = batch_axes(mesh)
+    n_dp = int(np.prod([mesh.shape[a] for a in bx]))
+    model_size = mesh.shape["model"]
+    bdim = bx if global_batch % n_dp == 0 and global_batch >= n_dp else None
+
+    def spec(path, leaf):
+        names = _leaf_names(path)
+        shape = leaf.shape
+        stacked = "units" in names
+        core = shape[1:] if stacked else shape
+
+        def out(*s):
+            return NamedSharding(mesh, P(*(((None,) + s) if stacked else s)))
+
+        if len(core) == 0:
+            return out()
+        if len(core) == 1:
+            return out(None)
+        # [B, Hkv, T, Dh] KV / [B, H, Dh, Dh] mLSTM / [B, T, lora] MLA / [B, R]
+        rest = list(core[1:])
+        specs: list = [None] * len(rest)
+        # choose the LAST divisible non-time axis for model sharding
+        for i in range(len(rest) - 1, -1, -1):
+            # axis 'T' in KV caches is core[2] == index 1 of rest for 4-D;
+            # sharding time would break decode updates, so skip axis whose
+            # size equals a plausible cache length (>= 1024) unless nothing
+            # else divides.
+            if rest[i] >= 1024 and i != len(rest) - 1:
+                continue
+            if _divides(rest[i], model_size):
+                specs[i] = "model"
+                break
+        return out(bdim, *specs)
+
+    return jax.tree_util.tree_map_with_path(spec, caches_abstract)

@@ -1,0 +1,42 @@
+"""Unified model entry points dispatching on config family."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models import vlm as V
+from repro.models import whisper as W
+
+Params = Dict[str, Any]
+
+
+def init_model(cfg, key) -> Params:
+    if cfg.is_encoder_decoder:
+        return W.init_whisper(cfg, key)
+    return T.init_lm(cfg, key)
+
+
+def forward_model(
+    params: Params,
+    batch: Dict[str, jax.Array],
+    cfg,
+    mode: str = "train",
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """batch: {'tokens': [B, T]} plus modality extras.
+
+    Returns (logits, aux).  Logits cover the positions that predict
+    batch['labels'] (the trainer aligns them).
+    """
+    if cfg.is_encoder_decoder:
+        return W.forward_whisper(params, batch["tokens"], batch["audio_features"], cfg, mode)
+    if cfg.vision_stub:
+        return V.forward_vlm(params, batch["tokens"], batch["vision_embeds"], cfg, mode)
+    return T.forward_lm(params, batch["tokens"], cfg, mode=mode)
+
+
+def abstract_params(cfg) -> Params:
+    """Parameter ShapeDtypeStructs without allocation (dry-run path)."""
+    return jax.eval_shape(lambda k: init_model(cfg, k), jax.random.key(0))

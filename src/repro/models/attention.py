@@ -1,0 +1,373 @@
+"""Attention layers: GQA (with qk-norm, soft-capping, sliding window) and
+DeepSeek-style MLA (multi-head latent attention).
+
+The inner product is computed by `chunked_attention` — a pure-jnp
+online-softmax streamed over key/value chunks (Rabe & Staats).  It is
+differentiable (training path) and memory-O(T * chunk); the Pallas flash
+kernel (kernels/flash_attention.py) implements the same math for TPU
+forward-only paths and is cross-checked against this in tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # [B, Hkv, Tmax, Dh]
+    v: jax.Array  # [B, Hkv, Tmax, Dh]
+    length: jax.Array  # scalar int32 — valid prefix
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention (differentiable reference-grade impl)
+# ---------------------------------------------------------------------------
+
+def chunked_attention(
+    q: jax.Array,               # [B, Hq, Tq, D]
+    k: jax.Array,               # [B, Hkv, Tk, D]
+    v: jax.Array,               # [B, Hkv, Tk, Dv]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+    kv_valid_len: jax.Array | None = None,
+    chunk: int = 1024,
+    remat_chunks: bool = True,
+) -> jax.Array:
+    B, Hq, Tq, D = q.shape
+    Hkv, Tk = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    rep = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / float(np.sqrt(D))
+    chunk = min(chunk, Tk)
+    n_chunks = (Tk + chunk - 1) // chunk
+    Tk_pad = n_chunks * chunk
+    if Tk_pad != Tk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, Tk_pad - Tk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, Tk_pad - Tk), (0, 0)))
+    valid = kv_valid_len if kv_valid_len is not None else jnp.asarray(Tk, jnp.int32)
+
+    qf = q.astype(jnp.float32) * np.float32(scale)
+    # fold GQA: [B, Hkv, rep, Tq, D]
+    qf = qf.reshape(B, Hkv, rep, Tq, D)
+    kc = k.astype(jnp.float32).reshape(B, Hkv, n_chunks, chunk, D)
+    vc = v.astype(jnp.float32).reshape(B, Hkv, n_chunks, chunk, Dv)
+
+    qpos = jnp.arange(Tq, dtype=jnp.int32) + (valid - Tq)  # right-aligned
+
+    def body(carry, kb, vb, idx):
+        m, l, acc = carry
+        s = jnp.einsum("bhrqd,bhkd->bhrqk", qf, kb)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = idx * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        mask = kpos[None, :] < valid
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        if window is not None:
+            mask = mask & (kpos[None, :] > qpos[:, None] - window)
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard: rows with all -inf so far
+        m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        alpha = jnp.exp(jnp.where(jnp.isinf(m), 0.0, m) - m_safe)
+        alpha = jnp.where(jnp.isinf(m), 0.0, alpha)
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        acc_new = alpha[..., None] * acc + jnp.einsum("bhrqk,bhkv->bhrqv", p, vb)
+        return (m_new, l_new, acc_new)
+
+    # Per-chunk remat: without it, backward saves the (n_chunks, B, H, Tq,
+    # chunk) attention weights — the exact quadratic buffer chunking exists
+    # to avoid (measured: 2.1 GB/layer/device at 4k train).  With it, each
+    # chunk's s/p are recomputed in backward: the flash-backward pattern.
+    #
+    # The chunk loop is UNROLLED (python loop), not lax.scan: XLA's cost
+    # analysis counts a while body once, which under-reports attention FLOPs
+    # by n_chunks, and unrolling also lets the scheduler overlap chunk
+    # compute with the k/v loads of the next chunk.
+    if remat_chunks:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    m0 = jnp.full((B, Hkv, rep, Tq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, rep, Tq), jnp.float32)
+    acc0 = jnp.zeros((B, Hkv, rep, Tq, Dv), jnp.float32)
+    carry = (m0, l0, acc0)
+    for j in range(n_chunks):
+        carry = body(carry, kc[:, :, j], vc[:, :, j], jnp.asarray(j, jnp.int32))
+    m, l, acc = carry
+    l_safe = jnp.where(l > 0, l, 1.0)
+    out = (acc / l_safe[..., None]).reshape(B, Hq, Tq, Dv)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg, dtype) -> Params:
+    d, H, Hkv, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_()
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "wq": L.dense_init(ks[0], d, H * Dh, dtype),
+        "wk": L.dense_init(ks[1], d, Hkv * Dh, dtype),
+        "wv": L.dense_init(ks[2], d, Hkv * Dh, dtype),
+        "wo": L.dense_init(ks[3], H * Dh, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = L.rms_norm_init(Dh, dtype)
+        p["k_norm"] = L.rms_norm_init(Dh, dtype)
+    return p
+
+
+def gqa_attention(
+    params: Params,
+    x: jax.Array,                     # [B, T, d]
+    cfg,
+    *,
+    positions: jax.Array,             # [T] or [B, T]
+    window: int | None = None,
+    cache: Optional[KVCache] = None,
+    causal: bool = True,
+    use_rope: bool = True,
+) -> Tuple[jax.Array, Optional[KVCache]]:
+    B, T, d = x.shape
+    H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_()
+    # Un-shard the sequence ONCE here: otherwise each of the q/k/v projections
+    # all-gathers the seq-sharded x independently (3x the gather bytes).
+    from repro.models.sharding_hints import BATCH, hint
+
+    x = hint(x, BATCH, None, None)
+    q = (x @ params["wq"]).reshape(B, T, H, Dh)
+    k = (x @ params["wk"]).reshape(B, T, Hkv, Dh)
+    v = (x @ params["wv"]).reshape(B, T, Hkv, Dh)
+    if cfg.qk_norm:
+        q = L.rms_norm(params["q_norm"], q, cfg.norm_eps)
+        k = L.rms_norm(params["k_norm"], k, cfg.norm_eps)
+    pos = positions if positions.ndim == 2 else positions[None, :]
+    q = q.transpose(0, 2, 1, 3)  # [B, H, T, Dh]
+    k = k.transpose(0, 2, 1, 3)
+    if use_rope:
+        q = L.rope(q, pos[:, None, :], cfg.rope_theta)
+        k = L.rope(k, pos[:, None, :], cfg.rope_theta)
+    v = v.transpose(0, 2, 1, 3)
+    # Head-sharded attention layout: with a sequence-sharded residual stream
+    # XLA otherwise carries T-sharding into k/v and then all-gathers FULL-head
+    # k/v chunks inside the attention loop (measured 1.6 GB/unit vs 0.4 GB for
+    # gathering the heads-sharded layout once) — EXPERIMENTS.md §Perf.
+    q = hint(q, BATCH, "model", None, None)
+    k = hint(k, BATCH, "model", None, None)
+    v = hint(v, BATCH, "model", None, None)
+
+    new_cache = None
+    if cache is not None:
+        kf = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, 0, cache.length, 0))
+        vf = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, 0, cache.length, 0))
+        new_cache = KVCache(kf, vf, cache.length + T)
+        k_att, v_att = kf, vf
+        valid = cache.length + T
+    else:
+        k_att, v_att = k, v
+        valid = None
+
+    out = chunked_attention(
+        q,
+        k_att,
+        v_att,
+        causal=causal,
+        window=window,
+        softcap=cfg.attn_softcap,
+        kv_valid_len=valid,
+        scale=cfg.attn_scale_(),
+        chunk=cfg.attn_chunk,
+    )
+    out = out.transpose(0, 2, 1, 3).reshape(B, T, H * Dh)
+    return L.mm(out, params["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2) — low-rank latent KV; the cache stores only the latent.
+# ---------------------------------------------------------------------------
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array    # [B, Tmax, kv_lora]
+    k_rope: jax.Array  # [B, Tmax, rope_dim]
+    length: jax.Array
+
+
+def mla_init(key, cfg, dtype) -> Params:
+    d, H = cfg.d_model, cfg.num_heads
+    nope, rdim, vdim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    lora = cfg.kv_lora_rank
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": L.dense_init(ks[0], d, H * (nope + rdim), dtype),
+        "w_dkv": L.dense_init(ks[1], d, lora + rdim, dtype),
+        "kv_norm": L.rms_norm_init(lora, dtype),
+        "w_uk": L.dense_init(ks[2], lora, H * nope, dtype),
+        "w_uv": L.dense_init(ks[3], lora, H * vdim, dtype),
+        "wo": L.dense_init(ks[4], H * vdim, d, dtype),
+    }
+
+
+def mla_attention_absorbed(
+    params: Params,
+    x: jax.Array,                    # [B, 1, d] — decode only
+    cfg,
+    *,
+    positions: jax.Array,
+    cache: MLACache,
+) -> Tuple[jax.Array, MLACache]:
+    """Decode-time MLA with weight absorption (DeepSeek-V2 §'absorb').
+
+    The naive decode path re-up-projects the ENTIRE latent cache to per-head
+    k/v every step: O(T * lora * H * nope) FLOPs + the collectives to
+    redistribute them (measured: the most collective-bound cell of the
+    baseline sweep).  Absorption folds w_uk into the query and w_uv into the
+    output: attention runs directly against the (B, T, lora) latent —
+    per-step cost drops by ~nope x and no cache-wide tensor is ever built.
+    """
+    B, T1, d = x.shape
+    assert T1 == 1
+    H = cfg.num_heads
+    nope, rdim, vdim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    lora = cfg.kv_lora_rank
+
+    q = (x @ params["wq"]).reshape(B, 1, H, nope + rdim)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    pos = positions if positions.ndim == 2 else positions[None, :]
+    q_rope = L.rope(q_rope.transpose(0, 2, 1, 3), pos[:, None, :], cfg.rope_theta)  # [B,H,1,r]
+
+    # new token's latent entry
+    dkv = x @ params["w_dkv"]
+    c_new = L.rms_norm(params["kv_norm"], dkv[..., :lora], cfg.norm_eps)
+    k_rope_new = L.rope(
+        dkv[..., None, lora:].transpose(0, 2, 1, 3), pos[:, None, :], cfg.rope_theta
+    )[:, 0]
+    c_full = jax.lax.dynamic_update_slice(
+        cache.c_kv, c_new.astype(cache.c_kv.dtype), (0, cache.length, 0)
+    )
+    r_full = jax.lax.dynamic_update_slice(
+        cache.k_rope, k_rope_new.astype(cache.k_rope.dtype), (0, cache.length, 0)
+    )
+    new_cache = MLACache(c_full, r_full, cache.length + 1)
+    valid = cache.length + 1
+    Tk = c_full.shape[1]
+
+    # absorb w_uk into q: q_abs[b,h,l] = sum_n q_nope[b,h,n] * w_uk[l, h, n]
+    w_uk = params["w_uk"].reshape(lora, H, nope)
+    q_abs = jnp.einsum(
+        "bhn,lhn->bhl", q_nope[:, 0].astype(jnp.float32), w_uk.astype(jnp.float32)
+    )
+    cf = c_full.astype(jnp.float32)
+    scores = jnp.einsum("bhl,btl->bht", q_abs, cf)
+    scores = scores + jnp.einsum(
+        "bhr,btr->bht", q_rope[:, :, 0].astype(jnp.float32), r_full.astype(jnp.float32)
+    )
+    scores = scores / np.float32(np.sqrt(nope + rdim))
+    mask = jnp.arange(Tk, dtype=jnp.int32)[None, None, :] < valid
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+
+    ctx = jnp.einsum("bht,btl->bhl", probs, cf)             # attend in latent space
+    w_uv = params["w_uv"].reshape(lora, H, vdim)
+    out = jnp.einsum("bhl,lhv->bhv", ctx, w_uv.astype(jnp.float32))  # absorb w_uv
+    out = out.reshape(B, 1, H * vdim).astype(x.dtype)
+    return L.mm(out, params["wo"]), new_cache
+
+
+def mla_attention(
+    params: Params,
+    x: jax.Array,
+    cfg,
+    *,
+    positions: jax.Array,
+    cache: Optional[MLACache] = None,
+) -> Tuple[jax.Array, Optional[MLACache]]:
+    B, T, d = x.shape
+    H = cfg.num_heads
+    nope, rdim, vdim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    lora = cfg.kv_lora_rank
+
+    q = (x @ params["wq"]).reshape(B, T, H, nope + rdim)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    pos = positions if positions.ndim == 2 else positions[None, :]
+    q_rope = L.rope(q_rope.transpose(0, 2, 1, 3), pos[:, None, :], cfg.rope_theta)
+
+    dkv = x @ params["w_dkv"]                      # [B, T, lora + rdim]
+    c_kv = L.rms_norm(params["kv_norm"], dkv[..., :lora], cfg.norm_eps)
+    k_rope = L.rope(dkv[..., None, lora:].transpose(0, 2, 1, 3), pos[:, None, :], cfg.rope_theta)[
+        :, 0
+    ]  # [B, T, rdim] — single shared rope head
+
+    new_cache = None
+    if cache is not None:
+        c_full = jax.lax.dynamic_update_slice(
+            cache.c_kv, c_kv.astype(cache.c_kv.dtype), (0, cache.length, 0)
+        )
+        r_full = jax.lax.dynamic_update_slice(
+            cache.k_rope, k_rope.astype(cache.k_rope.dtype), (0, cache.length, 0)
+        )
+        new_cache = MLACache(c_full, r_full, cache.length + T)
+        c_att, r_att = c_full, r_full
+        valid = cache.length + T
+    else:
+        c_att, r_att = c_kv, k_rope
+        valid = None
+
+    Tk = c_att.shape[1]
+    # Up-project latent -> per-head keys/values (recomputed; cache stays tiny).
+    k_nope = (c_att @ params["w_uk"]).reshape(B, Tk, H, nope).transpose(0, 2, 1, 3)
+    vv = (c_att @ params["w_uv"]).reshape(B, Tk, H, vdim).transpose(0, 2, 1, 3)
+    k_rope_h = jnp.broadcast_to(r_att[:, None], (B, H, Tk, rdim))
+
+    qq = jnp.concatenate([q_nope.transpose(0, 2, 1, 3), q_rope], axis=-1)
+    kk = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    out = chunked_attention(
+        qq,
+        kk,
+        vv,
+        causal=True,
+        kv_valid_len=valid,
+        scale=1.0 / float(np.sqrt(nope + rdim)),
+        chunk=cfg.attn_chunk,
+    )
+    out = out.transpose(0, 2, 1, 3).reshape(B, T, H * vdim)
+    return L.mm(out, params["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attn_init(key, cfg, dtype) -> Params:
+    d, H, Dh = cfg.d_model, cfg.num_heads, cfg.head_dim_()
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": L.dense_init(ks[0], d, H * Dh, dtype),
+        "wk": L.dense_init(ks[1], d, H * Dh, dtype),
+        "wv": L.dense_init(ks[2], d, H * Dh, dtype),
+        "wo": L.dense_init(ks[3], H * Dh, d, dtype),
+    }
+
+
+def cross_attention(params: Params, x: jax.Array, enc: jax.Array, cfg) -> jax.Array:
+    B, T, d = x.shape
+    Te = enc.shape[1]
+    H, Dh = cfg.num_heads, cfg.head_dim_()
+    q = (x @ params["wq"]).reshape(B, T, H, Dh).transpose(0, 2, 1, 3)
+    k = (enc @ params["wk"]).reshape(B, Te, H, Dh).transpose(0, 2, 1, 3)
+    v = (enc @ params["wv"]).reshape(B, Te, H, Dh).transpose(0, 2, 1, 3)
+    out = chunked_attention(q, k, v, causal=False, chunk=cfg.attn_chunk)
+    return out.transpose(0, 2, 1, 3).reshape(B, T, H * Dh) @ params["wo"]

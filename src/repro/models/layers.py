@@ -1,0 +1,196 @@
+"""Shared neural-net layers for every assigned architecture (pure JAX pytrees).
+
+Conventions:
+  * params are plain nested dicts of jnp arrays; every layer is a pair of
+    (init_fn(key, ...) -> params, apply_fn(params, x, ...) -> y);
+  * compute dtype follows the input; params are stored in the config dtype;
+  * all matmul dims that shard over the 'model' mesh axis keep that axis
+    LAST in the weight (d_in, d_out) so sharding rules stay uniform.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.zeros((d,), dtype)}  # gemma-style (1 + scale)
+
+
+def rms_norm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+def layer_norm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layer_norm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: [..., T, D] (D even); positions: [..., T] int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freq  # [..., T, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return rotated.astype(x.dtype)
+
+
+def sinusoidal_positions(T: int, d: int, dtype=jnp.float32) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings [T, d]."""
+    pos = np.arange(T)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    inv = 1.0 / (10000 ** (dim / max(d // 2 - 1, 1)))
+    ang = pos * inv
+    table = np.concatenate([np.sin(ang), np.cos(ang)], axis=1)
+    return jnp.asarray(table, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Feed-forward blocks
+# ---------------------------------------------------------------------------
+
+def mm(x: jax.Array, w) -> jax.Array:
+    """Matmul that transparently consumes RSVD-factorized weights
+    ({'lr_a': A, 'lr_b': B} from serve/lowrank.py): two skinny GEMMs."""
+    if isinstance(w, dict) and "lr_a" in w:
+        return (x @ w["lr_a"]) @ w["lr_b"]
+    return x @ w
+
+
+def _act(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "gelu_tanh":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    raise ValueError(name)
+
+
+def swiglu_init(key, d: int, f: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, f, dtype),
+        "w_up": dense_init(k2, d, f, dtype),
+        "w_down": dense_init(k3, f, d, dtype),
+    }
+
+
+def swiglu(params: Params, x: jax.Array, act: str = "silu") -> jax.Array:
+    g = _act(act)(mm(x, params["w_gate"]))
+    return mm(g * mm(x, params["w_up"]), params["w_down"])
+
+
+def mlp_init(key, d: int, f: int, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"w_in": dense_init(k1, d, f, dtype), "w_out": dense_init(k2, f, d, dtype)}
+
+
+def mlp(params: Params, x: jax.Array, act: str = "gelu") -> jax.Array:
+    return mm(_act(act)(mm(x, params["w_in"])), params["w_out"])
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def causal_conv1d_init(key, width: int, channels: int, dtype) -> Params:
+    return {
+        "w": (jax.random.normal(key, (width, channels), jnp.float32) / np.sqrt(width)).astype(dtype),
+        "b": jnp.zeros((channels,), dtype),
+    }
+
+
+def causal_conv1d(params: Params, x: jax.Array, state: jax.Array | None = None):
+    """Depthwise causal conv. x: [B, T, C].
+
+    Training: state=None, zero left-padding.
+    Decode:   state is the last (width-1) inputs [B, width-1, C]; returns
+              (y, new_state).
+    """
+    w = params["w"]
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(x[:, : width - 1])
+        xp = jnp.concatenate([pad, x], axis=1)
+        y = sum(xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(width))
+        return y + params["b"], xp[:, -(width - 1) :] if width > 1 else None
+    xp = jnp.concatenate([state, x], axis=1)  # [B, width-1+T, C]
+    y = sum(xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(width))
+    return y + params["b"], xp[:, -(width - 1) :]
+
+
+def unembed_logits(
+    x: jax.Array,
+    embed: jax.Array,
+    head: jax.Array | None,
+    cap: float | None,
+    pad_to: int = 1,
+):
+    """Final logits; ties to the embedding when no separate head exists.
+
+    When the vocab is not divisible by the model-parallel degree, `pad_to`
+    pads the logits axis; padded ids are biased to -1e9 so softmax / argmax /
+    sampling never see them, while the axis becomes shardable (the
+    difference between a replicated 151k-vocab f32 logits tensor and a
+    16-way-sharded one)."""
+    w = embed.T if head is None else head
+    v = w.shape[-1]
+    pad = (-v) % pad_to
+    if pad:
+        w = jnp.pad(w, ((0, 0), (0, pad)))
+    logits = x @ w
+    if pad:
+        bias = jnp.concatenate(
+            [jnp.zeros((v,), logits.dtype), jnp.full((pad,), -1e9, logits.dtype)]
+        )
+        logits = logits + bias
+    return softcap(logits, cap)

@@ -1,0 +1,383 @@
+"""Recurrent blocks: RG-LRU (RecurrentGemma/Griffin), mLSTM and sLSTM (xLSTM).
+
+All three expose (init, apply_train, apply_decode):
+  * apply_train consumes a full sequence.  RG-LRU and mLSTM are linear (or
+    linearizable) recurrences evaluated with jax.lax.associative_scan /
+    masked-quadratic forms — log-depth, MXU/VPU friendly.  sLSTM has true
+    hidden-to-hidden nonlinearity, so it scans sequentially (lax.scan); it is
+    the minority block in the assigned xlstm-350m stack.
+  * apply_decode consumes one token and a carried state — O(1) per step, the
+    reason these archs run the long_500k cell.
+
+Simplifications vs the exact papers are recorded in DESIGN.md:
+  - RG-LRU gates are elementwise (diagonal) rather than block-diagonal dense;
+  - mLSTM uses the stabilized parallel (quadratic masked) training form.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+_C_RGLRU = 8.0  # Griffin's fixed exponent scale
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU block (RecurrentGemma recurrent block: conv1d + gated linear rec.)
+# ---------------------------------------------------------------------------
+
+class RGLRUState(NamedTuple):
+    h: jax.Array           # [B, R] recurrence state
+    conv: jax.Array        # [B, width-1, R] conv tail
+
+
+def rglru_init(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    r = cfg.lru_width_()
+    ks = jax.random.split(key, 7)
+    return {
+        "w_x": L.dense_init(ks[0], d, r, dtype),
+        "w_y": L.dense_init(ks[1], d, r, dtype),
+        "conv": L.causal_conv1d_init(ks[2], cfg.conv1d_width, r, dtype),
+        # elementwise gates
+        "w_ig": (jax.random.normal(ks[3], (r,), jnp.float32) * 0.1).astype(dtype),
+        "b_ig": jnp.zeros((r,), dtype),
+        "w_rg": (jax.random.normal(ks[4], (r,), jnp.float32) * 0.1).astype(dtype),
+        "b_rg": jnp.zeros((r,), dtype),
+        # Lambda parametrized so a = sigmoid(lam)^(c*r_t) starts near 0.9-0.99
+        "lam": (jnp.linspace(2.0, 5.0, r)).astype(dtype),
+        "w_o": L.dense_init(ks[5], r, d, dtype),
+    }
+
+
+def _rglru_coeffs(params: Params, xc: jax.Array):
+    """Per-step recurrence coefficients. xc: [..., R] (post-conv)."""
+    xf = xc.astype(jnp.float32)
+    rg = jax.nn.sigmoid(xf * params["w_rg"].astype(jnp.float32) + params["b_rg"].astype(jnp.float32))
+    ig = jax.nn.sigmoid(xf * params["w_ig"].astype(jnp.float32) + params["b_ig"].astype(jnp.float32))
+    log_a_base = jax.nn.log_sigmoid(params["lam"].astype(jnp.float32))
+    log_a = _C_RGLRU * rg * log_a_base          # a = sigmoid(lam)^(c*rg)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (ig * xf)
+    return a, b
+
+
+def rglru_train(params: Params, x: jax.Array, cfg, return_state: bool = False):
+    """x: [B, T, d] -> [B, T, d] (optionally also the final recurrent state,
+    used by the serve prefill to seed decoding)."""
+    xb = x @ params["w_x"]                       # [B, T, R]
+    yb = x @ params["w_y"]
+    xc, conv_tail = L.causal_conv1d(params["conv"], xb)
+    a, b = _rglru_coeffs(params, xc)             # [B, T, R] each
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    out = (hh.astype(x.dtype) * jax.nn.gelu(yb)) @ params["w_o"]
+    if return_state:
+        return out, RGLRUState(h=hh[:, -1], conv=conv_tail)
+    return out
+
+
+def rglru_decode(
+    params: Params, x: jax.Array, state: RGLRUState, cfg
+) -> Tuple[jax.Array, RGLRUState]:
+    """x: [B, 1, d]; O(1) step."""
+    xb = x @ params["w_x"]
+    yb = x @ params["w_y"]
+    xc, conv_state = L.causal_conv1d(params["conv"], xb, state.conv)
+    a, b = _rglru_coeffs(params, xc[:, 0])       # [B, R]
+    h = a * state.h + b
+    out = h[:, None].astype(x.dtype) * jax.nn.gelu(yb)
+    return out @ params["w_o"], RGLRUState(h, conv_state)
+
+
+def rglru_init_state(cfg, batch: int, dtype) -> RGLRUState:
+    r = cfg.lru_width_()
+    return RGLRUState(
+        h=jnp.zeros((batch, r), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv1d_width - 1, r), dtype),
+    )
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM matrix-memory cell, stabilized)
+# ---------------------------------------------------------------------------
+
+class MLSTMState(NamedTuple):
+    C: jax.Array   # [B, H, Dh, Dh] matrix memory
+    n: jax.Array   # [B, H, Dh]     normalizer
+    m: jax.Array   # [B, H]         stabilizer (log-scale)
+
+
+def _mlstm_dims(cfg):
+    inner = cfg.d_model * cfg.mlstm_proj_factor
+    H = cfg.num_heads
+    return inner, H, inner // H
+
+
+def mlstm_init(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    inner, H, Dh = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        # xLSTM block: up-project, run the cell on `inner`, gate with z, down.
+        "w_up": L.dense_init(ks[0], d, inner, dtype),
+        "w_z": L.dense_init(ks[1], d, inner, dtype),
+        "wq": L.dense_init(ks[2], inner, H * Dh, dtype),
+        "wk": L.dense_init(ks[3], inner, H * Dh, dtype),
+        "wv": L.dense_init(ks[4], inner, H * Dh, dtype),
+        "w_i": L.dense_init(ks[5], inner, H, dtype, scale=0.02),
+        "w_f": L.dense_init(ks[6], inner, H, dtype, scale=0.02),
+        "b_f": jnp.full((H,), 3.0, dtype),  # forget-gate bias -> long memory
+        "w_down": L.dense_init(ks[7], H * Dh, d, dtype),
+    }
+
+
+def mlstm_train_chunked(
+    params: Params, x0: jax.Array, cfg, chunk: int = 2048, return_state: bool = False
+):
+    """Chunkwise-parallel mLSTM (flash-linear-attention style, stabilized).
+
+    The masked-quadratic form materializes a T x T decay matrix — O(T^2)
+    compute AND memory, hopeless at 32k+.  Chunkwise: carry the (C, n, m)
+    recurrent state across chunks of length c; within a chunk use the local
+    quadratic form plus the state contribution.  Cost: O(T*c + (T/c)*Dh^2)
+    — at T=32k, c=2k this is 16x fewer FLOPs than quadratic, and the HLO is
+    an unrolled python loop so the dry-run cost analysis counts every chunk
+    (EXPERIMENTS.md §Perf hillclimb 'xlstm').
+    """
+    B, T, d = x0.shape
+    if T <= chunk:
+        return mlstm_train(params, x0, cfg, return_state=return_state)
+    assert T % chunk == 0, (T, chunk)
+    inner, H, Dh = _mlstm_dims(cfg)
+    x = x0 @ params["w_up"]
+    q = (x @ params["wq"]).reshape(B, T, H, Dh).transpose(0, 2, 1, 3).astype(jnp.float32)
+    k = ((x @ params["wk"]).reshape(B, T, H, Dh).transpose(0, 2, 1, 3) / np.sqrt(Dh)).astype(jnp.float32)
+    v = (x @ params["wv"]).reshape(B, T, H, Dh).transpose(0, 2, 1, 3).astype(jnp.float32)
+    i_pre = (x @ params["w_i"]).astype(jnp.float32).transpose(0, 2, 1)   # [B,H,T]
+    f_pre = (x @ params["w_f"] + params["b_f"]).astype(jnp.float32).transpose(0, 2, 1)
+    log_f = jax.nn.log_sigmoid(f_pre)
+
+    n_chunks = T // chunk
+    state = mlstm_init_state(cfg, B)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    outs = []
+    for j in range(n_chunks):
+        sl = slice(j * chunk, (j + 1) * chunk)
+        qj, kj, vj = q[:, :, sl], k[:, :, sl], v[:, :, sl]
+        ij, lfj = i_pre[..., sl], log_f[..., sl]
+        F = jnp.cumsum(lfj, axis=-1)                        # local decay prefix
+        # log weight of in-chunk source s for query t: F_t - F_s + i_s
+        logD = F[..., :, None] - F[..., None, :] + ij[..., None, :]
+        logD = jnp.where(mask[None, None], logD, -jnp.inf)
+        # incoming-state coefficient for query t: F_t + m_prev
+        c_in = F + state.m[..., None]                       # [B,H,c]
+        m_t = jnp.maximum(jnp.max(logD, axis=-1), c_in)
+        Dmat = jnp.exp(logD - m_t[..., None])
+        w_in = jnp.exp(c_in - m_t)                          # [B,H,c]
+
+        s_qk = jnp.einsum("bhqd,bhkd->bhqk", qj, kj)
+        num = jnp.einsum("bhqk,bhkv->bhqv", s_qk * Dmat, vj) + w_in[..., None] * jnp.einsum(
+            "bhvk,bhqk->bhqv", state.C, qj
+        )
+        den = jnp.sum(s_qk * Dmat, axis=-1) + w_in * jnp.einsum("bhk,bhqk->bhq", state.n, qj)
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+        outs.append(num / den[..., None])
+
+        # end-of-chunk state update (same algebra as the prefill hand-off)
+        c_end = F[..., -1:] - F + ij                        # [B,H,c]
+        m_new = jnp.maximum(F[..., -1] + state.m, jnp.max(c_end, axis=-1))
+        wgt = jnp.exp(c_end - m_new[..., None])
+        carry_scale = jnp.exp(F[..., -1] + state.m - m_new)
+        C_new = carry_scale[..., None, None] * state.C + jnp.einsum(
+            "bht,bhtv,bhtk->bhvk", wgt, vj, kj
+        )
+        n_new = carry_scale[..., None] * state.n + jnp.einsum("bht,bhtk->bhk", wgt, kj)
+        state = MLSTMState(C=C_new, n=n_new, m=m_new)
+
+    h = jnp.concatenate(outs, axis=2)                       # [B,H,T,Dh]
+    z = jax.nn.silu((x0 @ params["w_z"]).astype(jnp.float32)).reshape(
+        B, T, H, Dh
+    ).transpose(0, 2, 1, 3)
+    out = (h * z).transpose(0, 2, 1, 3).reshape(B, T, H * Dh).astype(x0.dtype)
+    out = out @ params["w_down"]
+    if return_state:
+        return out, state
+    return out
+
+
+def mlstm_train(params: Params, x0: jax.Array, cfg, return_state: bool = False):
+    """Stabilized parallel (masked quadratic) form. x0: [B, T, d]."""
+    x = x0 @ params["w_up"]                               # [B, T, inner]
+    B, T, _ = x.shape
+    inner, H, Dh = _mlstm_dims(cfg)
+    q = (x @ params["wq"]).reshape(B, T, H, Dh).transpose(0, 2, 1, 3)
+    k = (x @ params["wk"]).reshape(B, T, H, Dh).transpose(0, 2, 1, 3) / np.sqrt(Dh)
+    v = (x @ params["wv"]).reshape(B, T, H, Dh).transpose(0, 2, 1, 3)
+    i_pre = (x @ params["w_i"]).astype(jnp.float32).transpose(0, 2, 1)          # [B,H,T]
+    f_pre = (x @ params["w_f"] + params["b_f"]).astype(jnp.float32).transpose(0, 2, 1)
+
+    log_f = jax.nn.log_sigmoid(f_pre)                     # [B, H, T]
+    F = jnp.cumsum(log_f, axis=-1)                        # prefix sums
+    # log D_ij = F_i - F_j + i_pre_j   for j <= i
+    logD = F[..., :, None] - F[..., None, :] + i_pre[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    logD = jnp.where(mask[None, None], logD, -jnp.inf)
+    m = jnp.max(logD, axis=-1)                            # [B, H, T] stabilizer
+    m = jnp.maximum(m, 0.0)
+    Dmat = jnp.exp(logD - m[..., None])
+
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    w = s * Dmat
+    norm = jnp.maximum(jnp.abs(jnp.sum(w, axis=-1)), jnp.exp(-m))
+    h = jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32)) / norm[..., None]
+
+    z = jax.nn.silu((x0 @ params["w_z"]).astype(jnp.float32)).reshape(
+        B, T, H, Dh
+    ).transpose(0, 2, 1, 3)
+    out = (h * z).transpose(0, 2, 1, 3).reshape(B, T, H * Dh).astype(x0.dtype)
+    out = out @ params["w_down"]
+    if not return_state:
+        return out
+    # Final recurrent state for decode hand-off: with c_j = sum_{k>j} log f_k
+    # + i_j, the running stabilizer satisfies m_T = max_j c_j, and
+    # C = sum_j e^{c_j - m_T} v_j k_j^T,  n = sum_j e^{c_j - m_T} k_j.
+    c = F[..., -1:] - F + i_pre                       # [B, H, T]
+    # decode recurrence starts at m_0 = 0, so the F_T term participates
+    m_T = jnp.maximum(jnp.max(c, axis=-1), F[..., -1])  # [B, H]
+    wgt = jnp.exp(c - m_T[..., None])                  # [B, H, T]
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    C = jnp.einsum("bht,bhtv,bhtk->bhvk", wgt, vf, kf)
+    n = jnp.einsum("bht,bhtk->bhk", wgt, kf)
+    return out, MLSTMState(C=C, n=n, m=m_T)
+
+
+def mlstm_decode(
+    params: Params, x0: jax.Array, state: MLSTMState, cfg
+) -> Tuple[jax.Array, MLSTMState]:
+    """x0: [B, 1, d]; recurrent O(1) step with matrix memory."""
+    B = x0.shape[0]
+    inner, H, Dh = _mlstm_dims(cfg)
+    xt = (x0 @ params["w_up"])[:, 0]                      # [B, inner]
+    q = (xt @ params["wq"]).reshape(B, H, Dh).astype(jnp.float32)
+    k = ((xt @ params["wk"]).reshape(B, H, Dh) / np.sqrt(Dh)).astype(jnp.float32)
+    v = (xt @ params["wv"]).reshape(B, H, Dh).astype(jnp.float32)
+    i_pre = (xt @ params["w_i"]).astype(jnp.float32)             # [B, H]
+    f_pre = (xt @ params["w_f"] + params["b_f"]).astype(jnp.float32)
+
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + state.m, i_pre)
+    f_sc = jnp.exp(log_f + state.m - m_new)[..., None]
+    i_sc = jnp.exp(i_pre - m_new)[..., None]
+
+    C = f_sc[..., None] * state.C + i_sc[..., None] * (v[..., :, None] * k[..., None, :])
+    n = f_sc * state.n + i_sc * k
+    num = jnp.einsum("bhvk,bhk->bhv", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), jnp.exp(-m_new))
+    h = num / den[..., None]
+
+    z = jax.nn.silu((x0[:, 0] @ params["w_z"]).astype(jnp.float32)).reshape(B, H, Dh)
+    out = (h * z).reshape(B, H * Dh).astype(x0.dtype)[:, None]
+    return out @ params["w_down"], MLSTMState(C, n, m_new)
+
+
+def mlstm_init_state(cfg, batch: int) -> MLSTMState:
+    _, H, Dh = _mlstm_dims(cfg)
+    return MLSTMState(
+        C=jnp.zeros((batch, H, Dh, Dh), jnp.float32),
+        n=jnp.zeros((batch, H, Dh), jnp.float32),
+        m=jnp.zeros((batch, H), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (scalar memory, exponential gating, true recurrence)
+# ---------------------------------------------------------------------------
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # [B, H, Dh]
+    n: jax.Array  # [B, H, Dh]
+    h: jax.Array  # [B, H, Dh]
+    m: jax.Array  # [B, H, Dh]
+
+
+def slstm_init(key, cfg, dtype) -> Params:
+    d, H, Dh = cfg.d_model, cfg.num_heads, cfg.head_dim_()
+    ks = jax.random.split(key, 6)
+    return {
+        "w_z": L.dense_init(ks[0], d, H * Dh, dtype),
+        "w_i": L.dense_init(ks[1], d, H * Dh, dtype, scale=0.02),
+        "w_f": L.dense_init(ks[2], d, H * Dh, dtype, scale=0.02),
+        "w_og": L.dense_init(ks[3], d, H * Dh, dtype, scale=0.02),
+        "b_f": jnp.full((H * Dh,), 3.0, dtype),
+        # per-head recurrent mixing (block-diagonal hidden-to-hidden)
+        "r_z": (jax.random.normal(ks[4], (H, Dh, Dh), jnp.float32) / np.sqrt(Dh)).astype(dtype),
+        "w_o": L.dense_init(ks[5], H * Dh, d, dtype),
+    }
+
+
+def _slstm_step(params: Params, cfg, state: SLSTMState, xt: jax.Array):
+    """xt: [B, d] one timestep. True sequential recurrence."""
+    B = xt.shape[0]
+    H, Dh = cfg.num_heads, cfg.head_dim_()
+    rec = jnp.einsum("bhd,hde->bhe", state.h.astype(jnp.float32), params["r_z"].astype(jnp.float32))
+    z_pre = (xt @ params["w_z"]).astype(jnp.float32).reshape(B, H, Dh) + rec
+    i_pre = (xt @ params["w_i"]).astype(jnp.float32).reshape(B, H, Dh)
+    f_pre = (xt @ params["w_f"] + params["b_f"]).astype(jnp.float32).reshape(B, H, Dh)
+    o_pre = (xt @ params["w_og"]).astype(jnp.float32).reshape(B, H, Dh)
+
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + state.m, i_pre)
+    i_sc = jnp.exp(i_pre - m_new)
+    f_sc = jnp.exp(log_f + state.m - m_new)
+    z = jnp.tanh(z_pre)
+    c = f_sc * state.c + i_sc * z
+    n = jnp.maximum(f_sc * state.n + i_sc, 1e-6)
+    h = jax.nn.sigmoid(o_pre) * (c / n)
+    return SLSTMState(c, n, h, m_new)
+
+
+def slstm_train(params: Params, x: jax.Array, cfg, return_state: bool = False):
+    """Sequential lax.scan over time (the honest sLSTM)."""
+    B, T, d = x.shape
+    H, Dh = cfg.num_heads, cfg.head_dim_()
+    s0 = slstm_init_state(cfg, B)
+
+    def step(state, xt):
+        new = _slstm_step(params, cfg, state, xt)
+        return new, new.h
+
+    final, hs = jax.lax.scan(step, s0, x.transpose(1, 0, 2))
+    out = hs.transpose(1, 0, 2, 3).reshape(B, T, H * Dh).astype(x.dtype)
+    out = out @ params["w_o"]
+    if return_state:
+        return out, final
+    return out
+
+
+def slstm_decode(
+    params: Params, x: jax.Array, state: SLSTMState, cfg
+) -> Tuple[jax.Array, SLSTMState]:
+    new = _slstm_step(params, cfg, state, x[:, 0])
+    B = x.shape[0]
+    H, Dh = cfg.num_heads, cfg.head_dim_()
+    out = new.h.reshape(B, H * Dh).astype(x.dtype)[:, None]
+    return out @ params["w_o"], new
+
+
+def slstm_init_state(cfg, batch: int) -> SLSTMState:
+    H, Dh = cfg.num_heads, cfg.head_dim_()
+    z = jnp.zeros((batch, H, Dh), jnp.float32)
+    return SLSTMState(c=z, n=jnp.ones_like(z) * 1e-6, h=z, m=z)

@@ -1,0 +1,72 @@
+"""Best-effort sharding hints, safe without a mesh.
+
+`hint(x, specs...)` applies with_sharding_constraint iff an ambient mesh is
+active (the dry-run / launcher `with mesh:` context) AND every requested
+axis exists and divides the dimension; otherwise it's the identity — so the
+same model code runs in single-device CPU tests and under the production
+mesh.
+
+The key hint is sequence sharding of the residual stream: activations carry
+(batch=('pod','data'), seq='model') through the scanned stack, so the
+remat-saved per-unit residual stack shrinks by the model-axis size (16x) —
+the difference between fitting and not fitting HBM at train_4k for the
+larger dense archs (measured in EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def current_mesh():
+    from jax._src.mesh import thread_resources
+
+    m = thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+def _usable_axes(mesh):
+    """Mesh axes a with_sharding_constraint may mention: under shard_map the
+    Manual axes (e.g. 'pod' in the podsgd step) must not appear in specs."""
+    am = jax.sharding.get_abstract_mesh()
+    manual = set()
+    if am is not None and getattr(am, "axis_types", None):
+        manual = {
+            n
+            for n, t in zip(am.axis_names, am.axis_types)
+            if t == jax.sharding.AxisType.Manual
+        }
+    return {n for n in mesh.axis_names if n not in manual}
+
+
+def hint(x: jax.Array, *spec_axes) -> jax.Array:
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    usable = _usable_axes(mesh)
+    if len(spec_axes) < x.ndim:
+        spec_axes = spec_axes + (None,) * (x.ndim - len(spec_axes))
+    clean = []
+    for dim, s in zip(x.shape, spec_axes):
+        if s is None:
+            clean.append(None)
+            continue
+        names = tuple(
+            n for n in ((s,) if isinstance(s, str) else tuple(s)) if n in usable
+        )
+        size = math.prod(mesh.shape[n] for n in names) if names else 1
+        clean.append(names if (names and dim % size == 0 and dim >= size) else None)
+    if all(c is None for c in clean):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*clean))
+
+
+BATCH = ("pod", "data")
+
+
+def hint_residual(x: jax.Array, seq_shard: bool = True) -> jax.Array:
+    """[B, T, d] residual stream: batch over DP axes, seq over 'model'."""
+    return hint(x, BATCH, "model" if seq_shard else None, None)

@@ -1,0 +1,389 @@
+"""Unified decoder stack covering all ten assigned architectures.
+
+Layer kinds (cfg.block_pattern):
+  'global'  full causal GQA (or MLA when cfg.use_mla) + FFN (dense or MoE)
+  'local'   sliding-window causal GQA + FFN
+  'rglru'   RecurrentGemma recurrent block + FFN
+  'mlstm'   xLSTM matrix-memory block (no FFN when d_ff == 0)
+  'slstm'   xLSTM scalar-memory block (no FFN when d_ff == 0)
+
+Stack layout = [prefix (first_k_dense, unrolled)] + [scan over repeating
+units] + [remainder (unrolled)].  Scanning the repeating unit keeps compile
+time O(|unit|) instead of O(L) — essential for the 512-device dry-run — and
+the cost model composes per-unit costs exactly (DESIGN.md §7).
+
+Whisper (enc-dec) and the VLM wrapper live in whisper.py / vlm.py and call
+into this stack for their decoder/backbone.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import recurrent as R
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Block init/apply by kind
+# ---------------------------------------------------------------------------
+
+def _norm_init(cfg, dtype):
+    return (
+        L.rms_norm_init(cfg.d_model, dtype)
+        if cfg.norm_kind == "rms"
+        else L.layer_norm_init(cfg.d_model, dtype)
+    )
+
+
+def _norm(cfg, p, x):
+    return (
+        L.rms_norm(p, x, cfg.norm_eps)
+        if cfg.norm_kind == "rms"
+        else L.layer_norm(p, x, cfg.norm_eps)
+    )
+
+
+def block_init(key, cfg, kind: str, dtype, *, dense_ffn: bool = False, cross_attn: bool = False) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = {"ln1": _norm_init(cfg, dtype)}
+    if kind in ("global", "local"):
+        p["attn"] = (
+            A.mla_init(ks[0], cfg, dtype) if cfg.use_mla else A.gqa_init(ks[0], cfg, dtype)
+        )
+        if cross_attn:
+            p["xattn"] = A.cross_attn_init(ks[3], cfg, dtype)
+            p["ln_x"] = _norm_init(cfg, dtype)
+        if cfg.d_ff > 0 or cfg.num_experts > 0:
+            p["ln2"] = _norm_init(cfg, dtype)
+            if cfg.num_experts > 0 and not dense_ffn:
+                p["ffn"] = M.moe_init(ks[1], cfg, dtype)
+            elif cfg.act == "gelu" and cfg.norm_kind == "layer":
+                p["ffn"] = L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype)
+            else:
+                p["ffn"] = L.swiglu_init(ks[1], cfg.d_model, cfg.d_ff, dtype)
+        if cfg.use_post_norm:
+            p["post_ln1"] = _norm_init(cfg, dtype)
+            p["post_ln2"] = _norm_init(cfg, dtype)
+    elif kind == "rglru":
+        p["rec"] = R.rglru_init(ks[0], cfg, dtype)
+        p["ln2"] = _norm_init(cfg, dtype)
+        p["ffn"] = L.swiglu_init(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    elif kind == "mlstm":
+        p["cell"] = R.mlstm_init(ks[0], cfg, dtype)
+    elif kind == "slstm":
+        p["cell"] = R.slstm_init(ks[0], cfg, dtype)
+    else:
+        raise ValueError(f"unknown block kind {kind}")
+    return p
+
+
+def block_apply(
+    params: Params,
+    x: jax.Array,
+    cfg,
+    kind: str,
+    *,
+    positions: jax.Array,
+    cache: Any = None,
+    encoder_out: Optional[jax.Array] = None,
+    mode: str = "train",
+) -> Tuple[jax.Array, Any, Dict[str, jax.Array]]:
+    aux: Dict[str, jax.Array] = {}
+    new_cache = cache
+    h = _norm(cfg, params["ln1"], x)
+
+    if kind in ("global", "local"):
+        window = cfg.window_size if kind == "local" else None
+        if cfg.use_mla:
+            if mode == "decode" and cache is not None and cfg.mla_absorb:
+                attn_out, new_cache = A.mla_attention_absorbed(
+                    params["attn"], h, cfg, positions=positions, cache=cache
+                )
+            else:
+                attn_out, new_cache = A.mla_attention(
+                    params["attn"], h, cfg, positions=positions, cache=cache
+                )
+        else:
+            attn_out, new_cache = A.gqa_attention(
+                params["attn"], h, cfg, positions=positions, window=window,
+                cache=cache, causal=(mode != "encode"), use_rope=cfg.use_rope,
+            )
+        if cfg.use_post_norm:
+            attn_out = _norm(cfg, params["post_ln1"], attn_out)
+        x = x + attn_out
+        if "xattn" in params:
+            assert encoder_out is not None
+            x = x + A.cross_attention(params["xattn"], _norm(cfg, params["ln_x"], x), encoder_out, cfg)
+        if "ffn" in params:
+            h2 = _norm(cfg, params["ln2"], x)
+            if cfg.num_experts > 0 and "router" in params["ffn"]:
+                ffn_out, aux = M.moe_ffn(params["ffn"], h2, cfg, cfg.capacity_factor)
+            elif "w_in" in params["ffn"]:
+                ffn_out = L.mlp(params["ffn"], h2, cfg.act)
+            else:
+                ffn_out = L.swiglu(params["ffn"], h2, cfg.act)
+            if cfg.use_post_norm:
+                ffn_out = _norm(cfg, params["post_ln2"], ffn_out)
+            x = x + ffn_out
+        return x, new_cache, aux
+
+    if kind == "rglru":
+        if mode == "decode":
+            rec_out, new_cache = R.rglru_decode(params["rec"], h, cache, cfg)
+        elif mode == "prefill":
+            rec_out, new_cache = R.rglru_train(params["rec"], h, cfg, return_state=True)
+        else:
+            rec_out = R.rglru_train(params["rec"], h, cfg)
+            new_cache = cache
+        x = x + rec_out
+        h2 = _norm(cfg, params["ln2"], x)
+        x = x + L.swiglu(params["ffn"], h2, cfg.act)
+        return x, new_cache, aux
+
+    if kind == "mlstm":
+        if mode == "decode":
+            out, new_cache = R.mlstm_decode(params["cell"], h, cache, cfg)
+        elif mode == "prefill":
+            out, new_cache = R.mlstm_train_chunked(
+                params["cell"], h, cfg, cfg.mlstm_chunk, return_state=True
+            )
+        else:
+            out = R.mlstm_train_chunked(params["cell"], h, cfg, cfg.mlstm_chunk)
+        return x + out, new_cache, aux
+
+    if kind == "slstm":
+        if mode == "decode":
+            out, new_cache = R.slstm_decode(params["cell"], h, cache, cfg)
+        elif mode == "prefill":
+            out, new_cache = R.slstm_train(params["cell"], h, cfg, return_state=True)
+        else:
+            out = R.slstm_train(params["cell"], h, cfg)
+        return x + out, new_cache, aux
+
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Whole-stack init
+# ---------------------------------------------------------------------------
+
+def init_lm(cfg, key, *, cross_attn: bool = False) -> Params:
+    dtype = cfg.param_dtype()
+    n_units, rem_pattern = cfg.num_units_()
+    keys = jax.random.split(key, 8)
+
+    params: Params = {
+        "embed": L.embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": _norm_init(cfg, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = L.dense_init(keys[1], cfg.d_model, cfg.vocab_size, dtype, scale=0.02)
+
+    # prefix: first_k_dense dense-FFN blocks (outside the scan)
+    if cfg.first_k_dense:
+        pk = jax.random.split(keys[2], cfg.first_k_dense)
+        params["prefix"] = [
+            block_init(pk[i], cfg, "global", dtype, dense_ffn=True, cross_attn=cross_attn)
+            for i in range(cfg.first_k_dense)
+        ]
+
+    # scanned units: stack each pattern element's params along axis 0
+    def one_unit(k):
+        uks = jax.random.split(k, len(cfg.block_pattern))
+        return tuple(
+            block_init(uks[i], cfg, kind, dtype, cross_attn=cross_attn)
+            for i, kind in enumerate(cfg.block_pattern)
+        )
+
+    # account for prefix layers: they replace the first layers of the stack
+    n_prefixed_units = cfg.first_k_dense // max(len(cfg.block_pattern), 1)
+    n_scan = n_units - n_prefixed_units
+    unit_keys = jax.random.split(keys[3], max(n_scan, 1))
+    units = [one_unit(unit_keys[i]) for i in range(n_scan)]
+    if units:
+        params["units"] = jax.tree.map(lambda *xs: jnp.stack(xs), *units)
+
+    if rem_pattern:
+        rk = jax.random.split(keys[4], len(rem_pattern))
+        params["remainder"] = [
+            block_init(rk[i], cfg, kind, dtype, cross_attn=cross_attn)
+            for i, kind in enumerate(rem_pattern)
+        ]
+    return params
+
+
+def count_params(params: Params) -> int:
+    leaves = jax.tree.leaves(
+        {k: v for k, v in params.items() if not k.startswith("_")}
+    )
+    return sum(int(np.prod(l.shape)) for l in leaves if hasattr(l, "shape"))
+
+
+# ---------------------------------------------------------------------------
+# Whole-stack apply
+# ---------------------------------------------------------------------------
+
+def _apply_unit(unit_params, x, cfg, positions, unit_caches, encoder_out, mode):
+    new_caches = []
+    aux_acc = None
+    for i, kind in enumerate(cfg.block_pattern):
+        cache_i = unit_caches[i] if unit_caches is not None else None
+        x, nc, aux = block_apply(
+            unit_params[i], x, cfg, kind,
+            positions=positions, cache=cache_i, encoder_out=encoder_out, mode=mode,
+        )
+        new_caches.append(nc)
+        if aux:
+            aux_acc = aux if aux_acc is None else jax.tree.map(jnp.add, aux_acc, aux)
+    return x, tuple(new_caches), aux_acc
+
+
+def scan_units(
+    units_params,
+    x: jax.Array,
+    cfg,
+    *,
+    positions: jax.Array,
+    unit_caches=None,
+    encoder_out: Optional[jax.Array] = None,
+    mode: str = "train",
+):
+    """The scanned repeating-unit stack — factored out so the dry-run can
+    lower EXACTLY this body standalone for per-unit cost extraction
+    (DESIGN.md §7 scan trip-count correction)."""
+
+    from repro.models.sharding_hints import hint_residual
+
+    def scan_body(carry, xs):
+        h, aux_c = carry
+        unit_p, unit_c = xs
+        # carry boundary = remat-save point: keep it sequence-sharded so the
+        # per-unit residual stack is 1/|model| of the full activation
+        h = hint_residual(h, seq_shard=cfg.seq_shard and mode == "train")
+        h, ncs, aux = _apply_unit(unit_p, h, cfg, positions, unit_c, encoder_out, mode)
+        if aux is not None:
+            aux_c = jax.tree.map(jnp.add, aux_c, aux) if aux_c else aux
+        return (h, aux_c), ncs
+
+    body = scan_body
+    if cfg.remat and mode == "train":
+        # nothing_saveable: residuals are ONLY the bf16 carry + params refs;
+        # without the explicit policy XLA keeps an extra f32 x-shaped stack
+        # per unit (measured 2x the activation bytes at train_4k).
+        body = jax.checkpoint(
+            scan_body,
+            prevent_cse=False,
+            policy=jax.checkpoint_policies.nothing_saveable,
+        )
+
+    aux0 = None
+    if cfg.num_experts > 0:  # MoE aux emitted in every mode
+        aux0 = {
+            "moe_lb_loss": jnp.zeros((), jnp.float32),
+            "moe_z_loss": jnp.zeros((), jnp.float32),
+            "moe_drop_frac": jnp.zeros((), jnp.float32),
+        }
+    return jax.lax.scan(body, (x, aux0), (units_params, unit_caches))
+
+
+def apply_stack(
+    params: Params,
+    x: jax.Array,
+    cfg,
+    *,
+    positions: jax.Array,
+    caches: Optional[Dict[str, Any]] = None,
+    encoder_out: Optional[jax.Array] = None,
+    mode: str = "train",
+) -> Tuple[jax.Array, Optional[Dict[str, Any]], Dict[str, jax.Array]]:
+    """Runs prefix + scanned units + remainder. Returns (x, caches, aux)."""
+    aux_total: Dict[str, jax.Array] = {}
+    new_caches: Dict[str, Any] = {}
+
+    def acc_aux(aux):
+        nonlocal aux_total
+        if aux:
+            aux_total = (
+                aux if not aux_total else jax.tree.map(jnp.add, aux_total, aux)
+            )
+
+    if "prefix" in params:
+        pc = []
+        for i, bp in enumerate(params["prefix"]):
+            c = caches["prefix"][i] if caches else None
+            x, nc, aux = block_apply(
+                bp, x, cfg, "global",
+                positions=positions, cache=c, encoder_out=encoder_out, mode=mode,
+            )
+            pc.append(nc)
+            acc_aux(aux)
+        new_caches["prefix"] = pc
+
+    if "units" in params:
+        unit_caches_stacked = caches["units"] if caches else None
+        (x, aux_scan), scanned_caches = scan_units(
+            params["units"], x, cfg,
+            positions=positions, unit_caches=unit_caches_stacked,
+            encoder_out=encoder_out, mode=mode,
+        )
+        new_caches["units"] = scanned_caches
+        if aux_scan:
+            acc_aux(aux_scan)
+
+    if "remainder" in params:
+        _, rem_pattern = cfg.num_units_()
+        rc = []
+        for i, kind in enumerate(rem_pattern):
+            c = caches["remainder"][i] if caches else None
+            x, nc, aux = block_apply(
+                params["remainder"][i], x, cfg, kind,
+                positions=positions, cache=c, encoder_out=encoder_out, mode=mode,
+            )
+            rc.append(nc)
+            acc_aux(aux)
+        new_caches["remainder"] = rc
+
+    x = _norm(cfg, params["final_norm"], x)
+    return x, (new_caches if caches is not None else None), aux_total
+
+
+def embed_tokens(params: Params, tokens: jax.Array, cfg) -> jax.Array:
+    x = params["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * np.sqrt(cfg.d_model).astype(np.float32)
+    return x
+
+
+def logits_from_hidden(params: Params, x: jax.Array, cfg) -> jax.Array:
+    head = params.get("head")
+    return L.unembed_logits(
+        x, params["embed"], head, cfg.final_softcap, pad_to=cfg.logits_pad_to
+    )
+
+
+def forward_lm(
+    params: Params,
+    tokens: jax.Array,
+    cfg,
+    *,
+    vision_embeds: Optional[jax.Array] = None,
+    positions: Optional[jax.Array] = None,
+    mode: str = "train",
+) -> jax.Array:
+    """Full-sequence forward -> logits [B, T(, +Tv), vocab]."""
+    x = embed_tokens(params, tokens, cfg)
+    if vision_embeds is not None:
+        x = jnp.concatenate([vision_embeds.astype(x.dtype), x], axis=1)
+    T = x.shape[1]
+    pos = positions if positions is not None else jnp.arange(T, dtype=jnp.int32)
+    x, _, aux = apply_stack(params, x, cfg, positions=pos, mode=mode)
+    return logits_from_hidden(params, x, cfg), aux

@@ -1,0 +1,35 @@
+"""VLM wrapper (internvl2 family): InternViT frontend STUB + LM backbone.
+
+Per the assignment, the vision tower is a stub: `input_specs()` supplies
+precomputed patch embeddings [B, T_vision, d_model] (what InternViT + the
+mlp projector would emit).  They are prepended to the text embeddings; the
+loss masks the vision positions.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+
+Params = Dict[str, Any]
+
+
+def init_vlm(cfg, key) -> Params:
+    return T.init_lm(cfg, key)
+
+
+def forward_vlm(
+    params: Params,
+    tokens: jax.Array,          # [B, T_text]
+    vision_embeds: jax.Array,   # [B, T_vision, d_model]
+    cfg,
+    mode: str = "train",
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Returns logits over the FULL (vision + text) sequence; the trainer
+    slices off the vision positions when building the loss."""
+    return T.forward_lm(
+        params, tokens, cfg, vision_embeds=vision_embeds, mode=mode
+    )

@@ -1,0 +1,69 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+Per the assignment, the conv/mel frontend is a STUB: `input_specs()` provides
+precomputed frame embeddings [B, T_audio, d_model] (what the two conv layers
+would emit).  The encoder is a bidirectional transformer; the decoder is the
+unified stack with cross-attention, absolute sinusoidal positions, GELU MLPs
+and LayerNorm (whisper's original choices).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+
+Params = Dict[str, Any]
+
+
+def init_whisper(cfg, key) -> Params:
+    k_enc, k_dec = jax.random.split(key)
+    dtype = cfg.param_dtype()
+    enc_keys = jax.random.split(k_enc, cfg.encoder_layers + 1)
+    encoder = {
+        "blocks": [
+            T.block_init(enc_keys[i], cfg, "global", dtype) for i in range(cfg.encoder_layers)
+        ],
+        "final_norm": L.layer_norm_init(cfg.d_model, dtype)
+        if cfg.norm_kind == "layer"
+        else L.rms_norm_init(cfg.d_model, dtype),
+    }
+    decoder = T.init_lm(cfg, k_dec, cross_attn=True)
+    return {"encoder": encoder, "decoder": decoder}
+
+
+def encode(params: Params, audio_features: jax.Array, cfg) -> jax.Array:
+    """audio_features: [B, T_audio, d_model] (frontend stub output)."""
+    B, Ta, d = audio_features.shape
+    x = audio_features + L.sinusoidal_positions(Ta, d, audio_features.dtype)[None]
+    pos = jnp.arange(Ta, dtype=jnp.int32)
+    for bp in params["encoder"]["blocks"]:
+        x, _, _ = T.block_apply(bp, x, cfg, "global", positions=pos, mode="encode")
+    norm = params["encoder"]["final_norm"]
+    x = (
+        L.layer_norm(norm, x, cfg.norm_eps)
+        if cfg.norm_kind == "layer"
+        else L.rms_norm(norm, x, cfg.norm_eps)
+    )
+    return x
+
+
+def forward_whisper(
+    params: Params,
+    tokens: jax.Array,           # [B, T_text]
+    audio_features: jax.Array,   # [B, T_audio, d_model]
+    cfg,
+    mode: str = "train",
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    enc_out = encode(params, audio_features, cfg)
+    x = T.embed_tokens(params["decoder"], tokens, cfg)
+    Tt = x.shape[1]
+    x = x + L.sinusoidal_positions(Tt, cfg.d_model, x.dtype)[None]
+    pos = jnp.arange(Tt, dtype=jnp.int32)
+    x, _, aux = T.apply_stack(
+        params["decoder"], x, cfg, positions=pos, encoder_out=enc_out, mode=mode
+    )
+    return T.logits_from_hidden(params["decoder"], x, cfg), aux

@@ -1,0 +1,115 @@
+"""PowerSGD-style rank-k gradient compression built on the paper's primitives.
+
+Each 2-D gradient M (m x n) is approximated as M_hat = P_hat Q^T where
+  P = (M + E) Q_prev          (GEMM — the paper's BLAS-3 building block)
+  P_hat = CholeskyQR2(P)      (the paper's orthonormalizer, DESIGN.md §2)
+  Q = (M + E)^T P_hat         (GEMM)
+with error feedback E <- (M + E) - M_hat carried across steps (Vogels et al.
+2019).  This is exactly one step of the paper's randomized range finder with
+a warm-started sketch.
+
+Deployment modes:
+  * in-graph (`compress_tree_grads`) — models the numerics under plain pjit;
+  * cross-pod (`powersgd_psum`) — inside shard_map over the 'pod' axis the
+    all-reduce moves P (m x k) + Q (n x k) instead of M (m x n): the
+    collective-bytes ratio is k(m+n)/(mn) (e.g. 3072x8192 at k=32 -> 1.4%).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qr as qr_mod
+from repro.core.sketch import sketch_matrix
+
+Params = Any
+
+
+class PowerSGDState(NamedTuple):
+    q: Params  # per-leaf Q (n x k) or None
+    e: Params  # per-leaf error feedback (m x n) or None
+
+
+def _compressible(leaf: jax.Array, rank: int) -> bool:
+    # 2-D weights, or scan-stacked [units, m, n] weights (vmapped compression)
+    return leaf.ndim in (2, 3) and min(leaf.shape[-2:]) > 4 * rank
+
+
+def init_state(params: Params, rank: int, seed: int = 17) -> PowerSGDState:
+    def mk_q(p):
+        if _compressible(p, rank):
+            q = sketch_matrix(p.shape[-1], rank, seed, dtype=jnp.float32)
+            if p.ndim == 3:
+                q = jnp.broadcast_to(q[None], (p.shape[0],) + q.shape).copy()
+            return q
+        return None
+
+    def mk_e(p):
+        if _compressible(p, rank):
+            return jnp.zeros(p.shape, jnp.float32)
+        return None
+
+    return PowerSGDState(
+        q=jax.tree.map(mk_q, params),
+        e=jax.tree.map(mk_e, params),
+    )
+
+
+def _compress_one(g: jax.Array, q: jax.Array, e: jax.Array, psum_axes=()):
+    gf = g.astype(jnp.float32) + e
+    p = gf @ q                                   # (m, k) GEMM
+    if psum_axes:
+        p = jax.lax.pmean(p, psum_axes)          # the only cross-pod traffic
+    p_hat, _ = qr_mod.cholesky_qr2(p)            # paper's BLAS-3 orthonormalizer
+    q_new = gf.T @ p_hat                         # (n, k) GEMM
+    if psum_axes:
+        q_new = jax.lax.pmean(q_new, psum_axes)
+    g_hat = p_hat @ q_new.T
+    e_new = gf - g_hat
+    return g_hat.astype(g.dtype), q_new, e_new
+
+
+def compress_tree_grads(
+    grads: Params, state: PowerSGDState, rank: int, psum_axes=()
+) -> Tuple[Params, PowerSGDState, Dict[str, jax.Array]]:
+    """Apply rank-k compression with error feedback to every 2-D leaf."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_q = treedef.flatten_up_to(state.q)
+    flat_e = treedef.flatten_up_to(state.e)
+
+    out_g, out_q, out_e = [], [], []
+    err_num = jnp.zeros((), jnp.float32)
+    err_den = jnp.zeros((), jnp.float32)
+    for g, q, e in zip(flat_g, flat_q, flat_e):
+        if q is None:
+            out_g.append(g)  # small/1-D leaves pass through uncompressed
+            out_q.append(None)
+            out_e.append(None)
+            continue
+        if g.ndim == 3:  # scan-stacked: compress each unit's slice
+            g_hat, q_new, e_new = jax.vmap(
+                lambda gg, qq, ee: _compress_one(gg, qq, ee, psum_axes)
+            )(g, q, e)
+        else:
+            g_hat, q_new, e_new = _compress_one(g, q, e, psum_axes)
+        out_g.append(g_hat)
+        out_q.append(q_new)
+        out_e.append(e_new)
+        err_num = err_num + jnp.sum(e_new**2)
+        err_den = err_den + jnp.sum(g.astype(jnp.float32) ** 2)
+
+    metrics = {"psgd_rel_err": jnp.sqrt(err_num / jnp.maximum(err_den, 1e-20))}
+    return (
+        jax.tree.unflatten(treedef, out_g),
+        PowerSGDState(jax.tree.unflatten(treedef, out_q), jax.tree.unflatten(treedef, out_e)),
+        metrics,
+    )
+
+
+def collective_bytes(shape: Tuple[int, int], rank: int, dtype_bytes: int = 4) -> Tuple[int, int]:
+    """(full all-reduce bytes, PowerSGD bytes) for one matrix — roofline input."""
+    m, n = shape
+    return m * n * dtype_bytes, rank * (m + n) * dtype_bytes

@@ -1,0 +1,199 @@
+"""Three-term roofline from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+  compute    = FLOPs_per_device / PEAK_FLOPS
+  memory     = bytes_per_device / HBM_BW
+  collective = collective_bytes_per_device / ICI_LINK_BW
+
+cost_analysis() reports PER-DEVICE quantities after SPMD partitioning
+(verified empirically — DESIGN.md §7), so no further division by chip count
+is needed.  Scan trip-count correction: XLA cost analysis counts a while
+body once, so every scanned-arch artifact carries a `mini` record (one unit
+lowered standalone with identical shardings) and the composed total is
+
+  total = full + (n_scan - 1) * mini.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from repro.roofline import hw
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops: float                 # per device, composed
+    bytes_accessed: float        # per device, composed
+    coll_bytes: float            # per device, composed
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float           # 6*N*D analytic (global)
+    useful_ratio: float          # model_flops / (flops * n_devices)
+    memory_fit: Dict[str, float]
+    n_devices: int
+    skipped: Optional[str] = None
+
+    def dominant_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def roofline_fraction(self) -> float:
+        """How close the dominant term is to pure-compute: T_comp / T_dom.
+        1.0 = compute-bound at peak; lower = memory/collective overheads."""
+        d = self.dominant_time()
+        return self.t_compute / d if d > 0 else 0.0
+
+
+def _composed(rec: Dict, field_path, default=0.0) -> float:
+    def get(d, path):
+        for p in path:
+            d = d.get(p, {})
+        return d if isinstance(d, (int, float)) else default
+
+    full = get(rec.get("full", {}), field_path)
+    mini = get(rec.get("mini", {}), field_path) if "mini" in rec else 0.0
+    n = max(rec.get("n_scan_units", 1), 1)
+    if full is None or full < 0:
+        return -1.0
+    return float(full) + (n - 1) * float(mini or 0.0)
+
+
+def _attn_flops(cfg, shape) -> float:
+    """Attention score/value FLOPs not captured by 6*N*D (global, per step)."""
+    B, T = shape.global_batch, shape.seq_len
+    H, Dh = cfg.num_heads, cfg.head_dim_()
+    kinds = list(cfg.block_pattern)
+    n_units, rem = cfg.num_units_()
+    counts = {k: kinds.count(k) * n_units + list(rem).count(k) for k in set(kinds + list(rem))}
+    total = 0.0
+    for kind, n_layers in counts.items():
+        if kind == "global":
+            ctx = T
+        elif kind == "local":
+            ctx = min(cfg.window_size or T, T)
+        else:
+            continue  # recurrent kinds are linear — inside 6ND already
+        if shape.kind == "decode":
+            total += n_layers * B * 4 * H * Dh * ctx          # one query token
+        else:
+            mult = 6 if shape.kind == "train" else 2          # fwd(+bwd)
+            total += n_layers * B * mult * 2 * H * Dh * T * ctx / 2  # causal half
+    return total
+
+
+def analytic_model_flops(cfg, shape, params_total: float, params_active: float) -> float:
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6 if shape.kind == "train" else 2
+    return mult * params_active * tokens + _attn_flops(cfg, shape)
+
+
+def analytic_transient_gb(cfg, shape, n_devices: int) -> float:
+    """First-principles per-device transient memory (the XLA-CPU temp number
+    double-counts bf16 buffers as f32 — EXPERIMENTS.md §Dry-run artifact)."""
+    model = 16
+    n_dp = max(n_devices // model, 1)
+    B = shape.global_batch
+    B_loc = max(B // n_dp, 1)
+    d = cfg.d_model
+    if shape.kind == "decode":
+        return 0.2 + B_loc * d * 4 * 8 / 1e9  # a handful of token-width buffers
+    T = shape.seq_len + (cfg.vision_tokens if cfg.vision_stub else 0)
+    T_loc = T // model if (cfg.seq_shard and shape.kind == "train") else T
+    n_scan = max(cfg.num_units_()[0] - cfg.first_k_dense // max(len(cfg.block_pattern), 1), 0)
+    stack = n_scan * B_loc * T_loc * d * 2 if shape.kind == "train" else 0
+    width = max(cfg.d_ff, cfg.moe_d_ff_() * 2 if cfg.num_experts else 0, 4 * d)
+    working = 3 * B_loc * T_loc * width * 4
+    vloc = cfg.padded_vocab_() // model if cfg.padded_vocab_() % model == 0 else cfg.padded_vocab_()
+    logits = (2 * B_loc * T_loc * vloc * 4) if shape.kind == "train" else 0
+    moe = 0
+    if cfg.num_experts:
+        C = 1.25 * B * shape.seq_len * cfg.num_experts_per_tok / cfg.num_experts
+        moe = 2 * (cfg.num_experts // model) * C * d * 2  # EP-sharded buffers
+    return (stack + working + logits + moe) / 1e9
+
+
+def analyze_record(rec: Dict) -> Roofline:
+    if "skipped" in rec:
+        return Roofline(
+            rec["arch"], rec["shape"], rec["mesh"], 0, 0, 0, 0, 0, 0, "skipped",
+            0, 0, {}, rec.get("n_devices", 0), skipped=rec["skipped"],
+        )
+    flops = _composed(rec, ("cost", "flops"))
+    bytes_acc = _composed(rec, ("cost", "bytes_accessed"))
+    coll = _composed(rec, ("collectives", "total"))
+
+    t_c = flops / hw.PEAK_FLOPS_BF16
+    t_m = bytes_acc / hw.HBM_BW
+    t_x = coll / hw.ICI_LINK_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+
+    from repro.configs import get_config
+    from repro.configs.base import SHAPES
+
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    mem = rec["full"]["memory"]
+    n_dev = rec["n_devices"]
+    transient = analytic_transient_gb(cfg, shape, n_dev)
+    fit = {
+        "argument_gb": mem["argument_bytes"] / 1e9,
+        "temp_gb": mem["temp_bytes"] / 1e9,               # raw XLA-CPU (inflated)
+        "analytic_transient_gb": transient,                # first-principles
+        "total_gb": mem["argument_bytes"] / 1e9 + transient,
+        "hbm_gb": hw.HBM_BYTES / 1e9,
+    }
+    model_flops = analytic_model_flops(
+        cfg, shape,
+        rec["analytic"]["params_total"], rec["analytic"]["params_active"],
+    )
+    useful = model_flops / (flops * n_dev) if flops > 0 else 0.0
+    return Roofline(
+        rec["arch"], rec["shape"], rec["mesh"], flops, bytes_acc, coll,
+        t_c, t_m, t_x, bottleneck, model_flops, useful, fit, n_dev,
+    )
+
+
+def load_all(art_dir: str = "artifacts/dryrun") -> List[Roofline]:
+    out = []
+    for p in sorted(pathlib.Path(art_dir).glob("*.json")):
+        out.append(analyze_record(json.loads(p.read_text())))
+    return out
+
+
+def format_table(rows: List[Roofline], mesh: str = "single") -> str:
+    """Markdown roofline table (single-pod per the assignment)."""
+    hdr = (
+        "| arch | shape | T_comp (ms) | T_mem (ms) | T_coll (ms) | bottleneck | "
+        "roofline-frac | useful-FLOP ratio | mem GB/chip (XLA-raw) | fits? |\n"
+        "|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in rows:
+        if r.mesh != mesh:
+            continue
+        if r.skipped:
+            lines.append(f"| {r.arch} | {r.shape} | — | — | — | skipped | — | — | — | {r.skipped} |")
+            continue
+        fits = "yes" if r.memory_fit["total_gb"] <= r.memory_fit["hbm_gb"] else "NO"
+        raw = r.memory_fit["argument_gb"] + r.memory_fit["temp_gb"]
+        lines.append(
+            f"| {r.arch} | {r.shape} | {r.t_compute*1e3:.2f} | {r.t_memory*1e3:.2f} | "
+            f"{r.t_collective*1e3:.2f} | {r.bottleneck} | {r.roofline_fraction():.3f} | "
+            f"{r.useful_ratio:.3f} | {r.memory_fit['total_gb']:.1f} ({raw:.1f}) | {fits} |"
+        )
+    return hdr + "\n".join(lines)
+
+
+def pick_hillclimb_cells(rows: List[Roofline]) -> Dict[str, Roofline]:
+    """worst roofline fraction / most collective-bound / most paper-representative."""
+    live = [r for r in rows if not r.skipped and r.mesh == "single"]
+    worst = min(live, key=lambda r: r.roofline_fraction())
+    coll = max(live, key=lambda r: r.t_collective / max(r.dominant_time(), 1e-12))
+    return {"worst_fraction": worst, "most_collective": coll}

@@ -1,0 +1,10 @@
+"""TPU v5e hardware constants (the assignment's target platform)."""
+
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_LINK_BW = 50e9              # bytes/s per link (assignment figure)
+HBM_BYTES = 16 * 2**30          # 16 GiB per chip
+VMEM_BYTES = 128 * 2**20        # ~128 MiB vector memory
+
+CHIPS_SINGLE_POD = 256
+CHIPS_MULTI_POD = 512

@@ -1,0 +1,92 @@
+"""Batched serving engine: continuous batched generation over a fixed-size
+slot table (vLLM-style static batching, simplified to synchronous slots).
+
+Requests queue up; the engine packs up to `max_batch` prompts, prefills them
+together (right-padded), then decodes in lock-step until every slot emits EOS
+or reaches max_new_tokens.  Weights can be low-rank-compressed with the
+paper's RSVD (cfg.lowrank_serve_rank) before the engine starts.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve import kvcache, serve_step
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray            # [T] int32
+    max_new_tokens: int = 32
+    eos_id: int = -1              # -1: never stops early
+
+
+@dataclass
+class Completion:
+    tokens: np.ndarray
+    prompt_len: int
+
+
+class Engine:
+    def __init__(self, params, cfg, *, max_batch: int = 8, max_len: int = 512):
+        self.params = params
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self._prefill = jax.jit(
+            lambda p, t, c, e: serve_step.prefill_step(p, t, cfg, c, extras=e)
+        )
+        self._decode = jax.jit(
+            lambda p, tok, pos, c, enc: serve_step.decode_step(
+                p, tok, pos, cfg, c, encoder_out=enc
+            )
+        )
+
+    def generate(self, requests: List[Request], extras: Optional[Dict] = None) -> List[Completion]:
+        out: List[Completion] = []
+        for i in range(0, len(requests), self.max_batch):
+            out.extend(self._generate_batch(requests[i : i + self.max_batch], extras))
+        return out
+
+    def _generate_batch(self, reqs: List[Request], extras) -> List[Completion]:
+        B = len(reqs)
+        Tp = max(len(r.prompt) for r in reqs)
+        prompts = np.zeros((B, Tp), np.int32)
+        for i, r in enumerate(reqs):
+            prompts[i, Tp - len(r.prompt) :] = r.prompt  # left-pad to align ends
+
+        caches = kvcache.init_caches(
+            self.cfg, B, self.max_len, dtype=self.cfg.param_dtype()
+        )
+        logits, caches, enc_out = self._prefill(
+            self.params, jnp.asarray(prompts), caches, extras or {}
+        )
+        max_new = max(r.max_new_tokens for r in reqs)
+        tok = serve_step.greedy_sample(logits)
+        pos = Tp + (self.cfg.vision_tokens if self.cfg.vision_stub and extras else 0)
+
+        toks = [np.asarray(tok)[:, 0]]
+        done = np.zeros(B, bool)
+        for step in range(max_new - 1):
+            logits, caches = self._decode(
+                self.params, tok, jnp.asarray(pos + step, jnp.int32), caches, enc_out
+            )
+            tok = serve_step.greedy_sample(logits)
+            t = np.asarray(tok)[:, 0]
+            toks.append(t)
+            for i, r in enumerate(reqs):
+                if r.eos_id >= 0 and t[i] == r.eos_id:
+                    done[i] = True
+            if done.all():
+                break
+
+        gen = np.stack(toks, axis=1)  # [B, n_generated]
+        return [
+            Completion(tokens=gen[i, : reqs[i].max_new_tokens], prompt_len=len(reqs[i].prompt))
+            for i in range(B)
+        ]

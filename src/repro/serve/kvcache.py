@@ -1,0 +1,90 @@
+"""Cache construction for serving: dense KV, sliding-window KV, MLA latent,
+and recurrent state — matching each block kind of each architecture.
+
+Cache sizing policy per kind:
+  global  -> dense KV        [B, Hkv, Tmax, Dh]        (quadratic archs)
+  local   -> windowed KV     [B, Hkv, min(Tmax, W+chunk), Dh]
+  (MLA)   -> latent          [B, Tmax, kv_lora + rope]  (DeepSeek: tiny)
+  rglru   -> RGLRUState      [B, R] + conv tail          O(1)
+  mlstm   -> MLSTMState      [B, H, Dh, Dh]              O(1)
+  slstm   -> SLSTMState      [B, H, Dh]                  O(1)
+
+For long_500k this is the structural reason only the SSM/hybrid archs run:
+their state is O(1)/O(W) in sequence length.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import KVCache, MLACache
+from repro.models import recurrent as R
+
+
+def _kv_len_for(cfg, kind: str, max_len: int) -> int:
+    if kind == "local" and cfg.window_size is not None:
+        return min(max_len, cfg.window_size)
+    return max_len
+
+
+def make_block_cache(cfg, kind: str, batch: int, max_len: int, dtype) -> Any:
+    if kind in ("global", "local"):
+        if cfg.use_mla:
+            return MLACache(
+                c_kv=jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+                k_rope=jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+                length=jnp.zeros((), jnp.int32),
+            )
+        Dh = cfg.head_dim_()
+        # NOTE: we allocate the window+prefill length for local layers only
+        # when the shape engine asks for it (ring-buffer update is a serve
+        # optimization recorded in EXPERIMENTS.md §Perf).
+        return KVCache(
+            k=jnp.zeros((batch, cfg.num_kv_heads, max_len, Dh), dtype),
+            v=jnp.zeros((batch, cfg.num_kv_heads, max_len, Dh), dtype),
+            length=jnp.zeros((), jnp.int32),
+        )
+    if kind == "rglru":
+        return R.rglru_init_state(cfg, batch, dtype)
+    if kind == "mlstm":
+        return R.mlstm_init_state(cfg, batch)
+    if kind == "slstm":
+        return R.slstm_init_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def init_caches(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Cache pytree congruent with the transformer stack layout
+    (prefix list / scanned-unit stacked leaves / remainder list)."""
+    n_units, rem_pattern = cfg.num_units_()
+    n_prefixed_units = cfg.first_k_dense // max(len(cfg.block_pattern), 1)
+    n_scan = n_units - n_prefixed_units
+
+    caches: Dict[str, Any] = {}
+    if cfg.first_k_dense:
+        caches["prefix"] = [
+            make_block_cache(cfg, "global", batch, max_len, dtype)
+            for _ in range(cfg.first_k_dense)
+        ]
+    if n_scan > 0:
+        unit = tuple(
+            make_block_cache(cfg, kind, batch, max_len, dtype)
+            for kind in cfg.block_pattern
+        )
+        caches["units"] = jax.tree.map(
+            lambda leaf: jnp.broadcast_to(leaf[None], (n_scan,) + leaf.shape).copy(),
+            unit,
+        )
+    if rem_pattern:
+        caches["remainder"] = [
+            make_block_cache(cfg, kind, batch, max_len, dtype) for kind in rem_pattern
+        ]
+    return caches
+
+
+def cache_bytes(caches) -> int:
+    return sum(
+        l.size * l.dtype.itemsize for l in jax.tree.leaves(caches) if hasattr(l, "size")
+    )

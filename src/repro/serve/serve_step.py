@@ -1,0 +1,83 @@
+"""Serving steps: prefill (fill caches from a prompt) and decode (one token).
+
+`decode_step` is what the decode_32k / long_500k dry-run cells lower: one new
+token against a seq_len-deep cache.  Low-rank serve compression
+(cfg.lowrank_serve_rank > 0) factorizes selected weights with the paper's
+RSVD before serving — see lowrank.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models import whisper as W
+
+
+def prefill_step(
+    params, tokens: jax.Array, cfg, caches, *, extras: Optional[Dict] = None
+) -> Tuple[jax.Array, Any]:
+    """Run the prompt through the stack, filling caches.
+
+    Returns (last-position logits [B, vocab], caches)."""
+    extras = extras or {}
+    if cfg.is_encoder_decoder:
+        enc_out = W.encode(params, extras["audio_features"], cfg)
+        x = T.embed_tokens(params["decoder"], tokens, cfg)
+        x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model, x.dtype)[None]
+        pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+        x, caches, _ = T.apply_stack(
+            params["decoder"], x, cfg, positions=pos, caches=caches,
+            encoder_out=enc_out, mode="prefill",
+        )
+        logits = T.logits_from_hidden(params["decoder"], x[:, -1:], cfg)
+        return logits[:, 0], caches, enc_out
+
+    x = T.embed_tokens(params, tokens, cfg)
+    if cfg.vision_stub and "vision_embeds" in extras:
+        x = jnp.concatenate([extras["vision_embeds"].astype(x.dtype), x], axis=1)
+    pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+    x, caches, _ = T.apply_stack(
+        params, x, cfg, positions=pos, caches=caches, mode="prefill"
+    )
+    logits = T.logits_from_hidden(params, x[:, -1:], cfg)
+    return logits[:, 0], caches, None
+
+
+def decode_step(
+    params,
+    token: jax.Array,            # [B, 1] the freshly sampled token
+    position: jax.Array,         # scalar int32 — current sequence position
+    cfg,
+    caches,
+    *,
+    encoder_out: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Any]:
+    """One token in, next-token logits out. O(1) state update per layer."""
+    p = params["decoder"] if cfg.is_encoder_decoder else params
+    x = T.embed_tokens(p, token, cfg)
+    if cfg.is_encoder_decoder:
+        # absolute positions: gather the one sinusoidal row we need
+        table = L.sinusoidal_positions(cfg.trained_len_(), cfg.d_model, x.dtype)
+        x = x + jax.lax.dynamic_slice_in_dim(table, position, 1)[None]
+    pos = jnp.full((1,), position, jnp.int32)
+    x, caches, _ = T.apply_stack(
+        p, x, cfg, positions=pos, caches=caches, encoder_out=encoder_out,
+        mode="decode",
+    )
+    logits = T.logits_from_hidden(p, x, cfg)
+    return logits[:, 0], caches
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+
+
+def temperature_sample(logits: jax.Array, key, temperature: float = 1.0) -> jax.Array:
+    return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)[
+        :, None
+    ]

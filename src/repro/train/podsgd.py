@@ -1,0 +1,122 @@
+"""Cross-pod PowerSGD gradient synchronization (hillclimb: collective term).
+
+Baseline multi-pod training all-reduces FULL gradients across the 'pod' axis
+(DCN — the slowest links in the fleet).  This step keeps the intra-pod
+data/model axes on automatic SPMD but takes MANUAL control of 'pod' via
+shard_map(axis_names={'pod'}): backward produces pod-local gradients, and the
+only cross-pod traffic is the PowerSGD factor pair
+
+    P (m x k) and Q (n x k)   instead of   M (m x n)
+
+orthonormalized with the paper's CholeskyQR2 — i.e. the paper's randomized
+range finder, warm-started, used as a gradient codec.  Error feedback is
+pod-local state.  Bytes ratio per weight: k(m+n)/(mn) (phi3 d_ff matrix at
+k=32: 1.44%).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import qr as qr_mod
+from repro.core.sketch import sketch_matrix
+from repro.optim import adamw
+from repro.train.train_step import compute_loss
+
+Params = Any
+
+
+def _compressible(leaf, rank: int) -> bool:
+    return hasattr(leaf, "ndim") and leaf.ndim in (2, 3) and min(leaf.shape[-2:]) > 4 * rank
+
+
+def init_podsgd_state(params: Params, rank: int, n_pods: int, seed: int = 29):
+    """(e, q): e is pod-local (leading pod dim), q is pod-replicated."""
+
+    def mk_e(p):
+        if _compressible(p, rank):
+            return jnp.zeros((n_pods,) + p.shape, jnp.float32)
+        return None
+
+    def mk_q(p):
+        if not _compressible(p, rank):
+            return None
+        q = sketch_matrix(p.shape[-1], rank, seed, dtype=jnp.float32)
+        if p.ndim == 3:
+            q = jnp.broadcast_to(q[None], (p.shape[0],) + q.shape).copy()
+        return q
+
+    return jax.tree.map(mk_e, params), jax.tree.map(mk_q, params)
+
+
+def _compress_one_pod(g, q, e, rank):
+    """One PowerSGD round; cross-pod traffic = pmean of P and Q only."""
+    gf = g.astype(jnp.float32) + e
+    p = gf @ q
+    p = jax.lax.pmean(p, "pod")                  # (m, k) over DCN
+    p_hat, _ = qr_mod.cholesky_qr2(p)            # paper's BLAS-3 orthonormalizer
+    q_new = jnp.swapaxes(gf, -1, -2) @ p_hat
+    q_new = jax.lax.pmean(q_new, "pod")          # (n, k) over DCN
+    g_hat = p_hat @ jnp.swapaxes(q_new, -1, -2)
+    return g_hat.astype(g.dtype), q_new, gf - g_hat
+
+
+def make_podsgd_train_step(cfg, opt_cfg: adamw.AdamWConfig, mesh, logits_sharding=None):
+    rank = cfg.powersgd_rank
+    assert rank > 0, "podsgd requires cfg.powersgd_rank > 0"
+    assert "pod" in mesh.axis_names, "podsgd needs the multi-pod mesh"
+
+    def per_pod(params, opt_state, batch, psgd_e, psgd_q):
+        grad_fn = jax.value_and_grad(compute_loss, has_aux=True)
+        (loss, metrics), grads = grad_fn(params, batch, cfg, logits_sharding)
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_e = treedef.flatten_up_to(psgd_e)
+        flat_q = treedef.flatten_up_to(psgd_q)
+        out_g, out_e, out_q = [], [], []
+        for g, e, q in zip(flat_g, flat_e, flat_q):
+            if q is None:
+                # small leaves: plain cross-pod mean (negligible bytes)
+                out_g.append(jax.lax.pmean(g, "pod"))
+                out_e.append(None)
+                out_q.append(None)
+                continue
+            e_loc = e[0]  # manual pod axis: local block has leading dim 1
+            if g.ndim == 3:
+                g_hat, q_new, e_new = jax.vmap(
+                    functools.partial(_compress_one_pod, rank=rank)
+                )(g, q, e_loc)
+            else:
+                g_hat, q_new, e_new = _compress_one_pod(g, q, e_loc, rank)
+            out_g.append(g_hat)
+            out_e.append(e_new[None])
+            out_q.append(q_new)
+        grads = jax.tree.unflatten(treedef, out_g)
+        psgd_e = jax.tree.unflatten(treedef, out_e)
+        psgd_q = jax.tree.unflatten(treedef, out_q)
+
+        new_params, new_opt, om = adamw.apply_updates(params, grads, opt_state, opt_cfg)
+        metrics.update(om)
+        metrics = jax.tree.map(lambda t: jax.lax.pmean(t, "pod"), metrics)
+        return new_params, new_opt, metrics, psgd_e, psgd_q
+
+    # None leaves are empty subtrees: plain tree.map keeps spec/arg structures
+    # congruent (specs exist only where arrays exist)
+    rep = lambda tree: jax.tree.map(lambda _: P(), tree)
+    podded = lambda tree: jax.tree.map(lambda _: P("pod"), tree)
+
+    def wrap(params, opt_state, batch, psgd_e, psgd_q):
+        return jax.shard_map(
+            per_pod,
+            mesh=mesh,
+            in_specs=(rep(params), rep(opt_state), podded(batch), podded(psgd_e), rep(psgd_q)),
+            out_specs=(rep(params), rep(opt_state), P(), podded(psgd_e), rep(psgd_q)),
+            axis_names={"pod"},
+            check_vma=False,
+        )(params, opt_state, batch, psgd_e, psgd_q)
+
+    return wrap

@@ -1,0 +1,107 @@
+"""Loss + train-step factory (remat, scan, RSVD-based optimizer tricks).
+
+train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+
+Technique integration points (selected by config — DESIGN.md §4):
+  * cfg.powersgd_rank  > 0: gradients of 2-D dense weights are rank-k
+    compressed (power iteration + CholeskyQR — the paper's primitives)
+    before the data-parallel mean, shrinking cross-pod collective bytes.
+  * cfg.galore_rank    > 0: Adam moments for 2-D weights live in an RSVD
+    subspace (handled in optim/galore.py wrapper).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward_model
+from repro.optim import adamw
+from repro.optim.powersgd import compress_tree_grads
+
+Params = Any
+
+
+def cross_entropy_loss(
+    logits: jax.Array,  # [B, T, V]
+    labels: jax.Array,  # [B, T]
+    mask: jax.Array | None = None,
+    z_loss_coef: float = 1e-4,
+    logits_sharding=None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Vocab-sharding-friendly xent: no gather along V (a gather on a
+    'model'-sharded vocab axis forces an all-gather of the full logits —
+    the dominant memory term at 128k vocab).  All V-reductions are
+    elementwise-into-reduce, which XLA fuses and partially reduces per
+    shard + small all-reduce."""
+    if logits_sharding is not None:
+        logits = jax.lax.with_sharding_constraint(logits, logits_sharding)
+    V = logits.shape[-1]
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = (logits - m).astype(jnp.float32)
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0].astype(jnp.float32)
+    onehot = jax.nn.one_hot(labels, V, dtype=logits.dtype)
+    ll = jnp.sum(logits * onehot, axis=-1).astype(jnp.float32)
+    nll = lse - ll
+    z = z_loss_coef * lse**2
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum((nll + z) * mask) / denom
+    acc = jnp.sum((jnp.argmax(logits, -1) == labels) * mask) / denom
+    return loss, {"nll": jnp.sum(nll * mask) / denom, "accuracy": acc}
+
+
+def compute_loss(params, batch, cfg, logits_sharding=None):
+    logits, aux = forward_model(params, batch, cfg, mode="train")
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    if cfg.vision_stub:
+        # logits cover [vision; text]; predictions for text tokens only
+        logits = logits[:, cfg.vision_tokens :, :]
+    loss, metrics = cross_entropy_loss(logits, labels, mask, logits_sharding=logits_sharding)
+    if aux:
+        loss = loss + 0.01 * aux.get("moe_lb_loss", 0.0) + 1e-3 * aux.get("moe_z_loss", 0.0)
+        metrics.update(aux)
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def make_train_step(
+    cfg, opt_cfg: adamw.AdamWConfig, dp_axes: tuple[str, ...] = (), logits_sharding=None
+):
+    """Returns train_step(params, opt_state, batch, psgd_state).
+
+    Under jit-with-shardings the gradient mean over data parallelism is
+    implicit in SPMD; `dp_axes` is only used by the explicit shard_map path
+    and the PowerSGD hook (which compresses before the 'pod' reduction).
+    `logits_sharding` keeps the vocab axis model-sharded through the loss.
+    """
+
+    def train_step(params, opt_state, batch, psgd_state=None):
+        grad_fn = jax.value_and_grad(compute_loss, has_aux=True)
+        (loss, metrics), grads = grad_fn(params, batch, cfg, logits_sharding)
+
+        if cfg.powersgd_rank > 0 and psgd_state is not None:
+            grads, psgd_state, psgd_metrics = compress_tree_grads(
+                grads, psgd_state, rank=cfg.powersgd_rank
+            )
+            metrics.update(psgd_metrics)
+
+        new_params, new_opt, opt_metrics = adamw.apply_updates(
+            params, grads, opt_state, opt_cfg
+        )
+        metrics.update(opt_metrics)
+        return new_params, new_opt, metrics, psgd_state
+
+    return train_step
+
+
+def make_eval_step(cfg):
+    def eval_step(params, batch):
+        _, metrics = compute_loss(params, batch, cfg)
+        return metrics
+
+    return eval_step

@@ -1,0 +1,137 @@
+"""Training loop with the fault-tolerance features of a production deployment:
+
+  * periodic async checkpoints + atomic publish (checkpoint/),
+  * SIGTERM/SIGINT -> synchronous final save, auto-resume on restart,
+  * straggler watchdog: EWMA step time, flags hosts whose step exceeds
+    `straggler_factor` x the EWMA (on real fleets this triggers eviction +
+    the elastic-restart path; here it logs and counts),
+  * loss/metric logging to JSONL (greppable, no tensorboard dependency).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import signal
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.optim import adamw
+from repro.optim import powersgd
+from repro.train.train_step import make_train_step
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 200
+    checkpoint_every: int = 50
+    log_every: int = 10
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep_last: int = 3
+    straggler_factor: float = 3.0
+    ewma_alpha: float = 0.1
+
+
+@dataclass
+class StragglerStats:
+    ewma: float = 0.0
+    flagged_steps: int = 0
+    worst_ratio: float = 0.0
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg,                     # ModelConfig
+        opt_cfg: adamw.AdamWConfig,
+        tcfg: TrainerConfig,
+        *,
+        step_fn: Optional[Callable] = None,
+    ):
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.tcfg = tcfg
+        self.step_fn = step_fn or jax.jit(make_train_step(cfg, opt_cfg))
+        self.ckpt = CheckpointManager(tcfg.checkpoint_dir, keep_last=tcfg.keep_last)
+        self.straggler = StragglerStats()
+        self._stop = False
+        self.log_path = pathlib.Path(tcfg.checkpoint_dir) / "train_log.jsonl"
+
+    def _install_signals(self):
+        def handler(signum, frame):
+            self._stop = True  # finish the current step, then save + exit
+
+        signal.signal(signal.SIGTERM, handler)
+        signal.signal(signal.SIGINT, handler)
+
+    def _watchdog(self, dt: float, step: int) -> bool:
+        s = self.straggler
+        if s.ewma == 0.0:
+            s.ewma = dt
+            return False
+        flagged = dt > self.tcfg.straggler_factor * s.ewma and step > 3
+        s.worst_ratio = max(s.worst_ratio, dt / s.ewma)
+        if flagged:
+            s.flagged_steps += 1
+        s.ewma = (1 - self.tcfg.ewma_alpha) * s.ewma + self.tcfg.ewma_alpha * dt
+        return flagged
+
+    def _log(self, record: Dict[str, Any]):
+        with open(self.log_path, "a") as f:
+            f.write(json.dumps(record) + "\n")
+
+    def run(
+        self,
+        params,
+        data_iter: Iterator[Dict],
+        *,
+        resume: bool = True,
+        psgd_state=None,
+    ):
+        self._install_signals()
+        opt_state = adamw.init_state(params)
+        if self.cfg.powersgd_rank > 0 and psgd_state is None:
+            psgd_state = powersgd.init_state(params, self.cfg.powersgd_rank)
+        start_step = 0
+
+        if resume and self.ckpt.latest_step() is not None:
+            (params, opt_state), start_step = self.ckpt.restore((params, opt_state))
+            start_step += 1
+            self._log({"event": "resumed", "step": start_step})
+
+        metrics = {}
+        for step in range(start_step, self.tcfg.total_steps):
+            batch = next(data_iter)
+            t0 = time.perf_counter()
+            params, opt_state, metrics, psgd_state = self.step_fn(
+                params, opt_state, batch, psgd_state
+            )
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            flagged = self._watchdog(dt, step)
+
+            if step % self.tcfg.log_every == 0 or flagged:
+                rec = {
+                    "step": step,
+                    "loss": float(metrics["loss"]),
+                    "grad_norm": float(metrics["grad_norm"]),
+                    "step_time_s": dt,
+                    "straggler_flag": bool(flagged),
+                }
+                self._log(rec)
+
+            if step > 0 and step % self.tcfg.checkpoint_every == 0:
+                self.ckpt.save(step, (params, opt_state))
+                self._log({"event": "checkpoint", "step": step})
+
+            if self._stop:
+                self.ckpt.save(step, (params, opt_state), blocking=True)
+                self._log({"event": "preempted_save", "step": step})
+                break
+
+        self.ckpt.save(self.tcfg.total_steps - 1, (params, opt_state), blocking=True)
+        return params, opt_state, metrics

@@ -1,0 +1,51 @@
+"""Distributed (shard_map) RSVD == single-device RSVD, via 8-device subprocess."""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _run_driver(name: str) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("XLA_FLAGS", None)  # driver sets its own device count
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / name)],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=900,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    return proc.stdout
+
+
+def test_distributed_rsvd_matches_reference():
+    out = _run_driver("distributed_driver.py")
+    assert "DISTRIBUTED_RSVD_OK" in out
+
+
+def test_elastic_reshard_on_load():
+    """Checkpoint on mesh (8,) -> restore + continue on mesh (2,4)."""
+    out = _run_driver("elastic_driver.py")
+    assert "ELASTIC_OK" in out
+
+
+def test_straggler_watchdog_flags_slow_steps():
+    from repro.train.trainer import Trainer, TrainerConfig
+    from repro.optim import adamw
+    from repro.configs import get_config
+
+    cfg = get_config("llama3.2-1b").reduced()
+    tr = Trainer(cfg, adamw.AdamWConfig(), TrainerConfig(straggler_factor=3.0),
+                 step_fn=lambda *a: a)
+    # steady 100ms steps, then a 10x straggler
+    flags = [tr._watchdog(0.1, s) for s in range(10)]
+    assert not any(flags)
+    assert tr._watchdog(1.0, 10) is True
+    assert tr.straggler.flagged_steps == 1
+    assert tr.straggler.worst_ratio > 5

@@ -1,0 +1,161 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sketch import sketch_matrix
+from repro.kernels import ops, ref
+
+
+def _rand(shape, seed, dtype=jnp.float32):
+    flat = sketch_matrix(int(np.prod(shape[:-1])), shape[-1], seed)
+    return flat.reshape(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "m,k,n", [(8, 8, 8), (128, 128, 128), (256, 384, 128), (100, 70, 30), (1, 5, 3), (130, 257, 129)]
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_shapes_dtypes(m, k, n, dtype):
+    x = _rand((m, k), 0, dtype)
+    y = _rand((k, n), 1, dtype)
+    got = ops.matmul(x, y)
+    want = ref.matmul_ref(x, y)
+    atol = 2e-5 if dtype == jnp.float32 else 2e-1
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=atol, rtol=1e-2
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused sketch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n,s", [(64, 64, 16), (128, 256, 32), (100, 90, 17), (256, 128, 128)])
+@pytest.mark.parametrize("kind", ["gaussian", "rademacher"])
+def test_sketch_matmul_matches_materialized(m, n, s, kind):
+    """The kernel's in-VMEM Omega must equal the materialized Omega bit-wise,
+    so the product matches the oracle to accumulation order."""
+    a = _rand((m, n), 2)
+    got = ops.sketch_matmul(a, s, seed=7, kind=kind)
+    want = ref.sketch_matmul_ref(a, s, seed=7, kind=kind)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+def test_sketch_matmul_independent_of_padding():
+    """Same logical s on different padded widths -> identical result."""
+    a = _rand((64, 64), 3)
+    c1 = ops.sketch_matmul(a, 10, seed=1)
+    # widen input so padding differs
+    a2 = jnp.pad(a, ((0, 0), (0, 64)))
+    c2 = ops.sketch_matmul(a2[:, :64], 10, seed=1)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+# ---------------------------------------------------------------------------
+# gram
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,s", [(64, 16), (256, 64), (300, 40), (128, 130)])
+def test_gram_matches_oracle(m, s):
+    y = _rand((m, s), 4)
+    got = ops.gram(y)
+    want = ref.gram_ref(y)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
+    # exact symmetry by construction
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(got).T)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2), (8, 1)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_gqa(hq, hkv, causal):
+    B, T, D = 2, 64, 32
+    q = _rand((B, hq, T, D), 5) * 0.3
+    k = _rand((B, hkv, T, D), 6) * 0.3
+    v = _rand((B, hkv, T, D), 7) * 0.3
+    got = ops.flash_attention(q, k, v, causal=causal)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=1e-3)
+
+
+@pytest.mark.parametrize("window", [16, 48])
+def test_flash_attention_sliding_window(window):
+    B, H, T, D = 1, 2, 128, 32
+    q = _rand((B, H, T, D), 8) * 0.3
+    k = _rand((B, H, T, D), 9) * 0.3
+    v = _rand((B, H, T, D), 10) * 0.3
+    got = ops.flash_attention(q, k, v, causal=True, window=window)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=1e-3)
+
+
+def test_flash_attention_softcap():
+    B, H, T, D = 1, 2, 64, 32
+    q = _rand((B, H, T, D), 11)
+    k = _rand((B, H, T, D), 12)
+    v = _rand((B, H, T, D), 13) * 0.3
+    got = ops.flash_attention(q, k, v, causal=True, softcap=30.0)
+    want = ref.flash_attention_ref(q, k, v, causal=True, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=1e-3)
+
+
+def test_flash_attention_decode_shape():
+    """Tq=1 decode against a long key timeline (right-aligned queries)."""
+    B, H, Tk, D = 2, 4, 96, 32
+    q = _rand((B, H, 1, D), 14) * 0.3
+    k = _rand((B, H, Tk, D), 15) * 0.3
+    v = _rand((B, H, Tk, D), 16) * 0.3
+    got = ops.flash_attention(q, k, v, causal=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=1e-3)
+
+
+def test_flash_attention_nonmultiple_lengths():
+    B, H, T, D = 1, 2, 100, 32  # pads to 128
+    q = _rand((B, H, T, D), 17) * 0.3
+    k = _rand((B, H, T, D), 18) * 0.3
+    v = _rand((B, H, T, D), 19) * 0.3
+    got = ops.flash_attention(q, k, v, causal=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=10)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 200),
+    n=st.integers(1, 100),
+    seed=st.integers(0, 1000),
+)
+def test_matmul_property(m, k, n, seed):
+    x = _rand((m, k), seed)
+    y = _rand((k, n), seed + 1)
+    np.testing.assert_allclose(
+        np.asarray(ops.matmul(x, y)), np.asarray(ref.matmul_ref(x, y)), atol=1e-4, rtol=1e-3
+    )
+
+
+@settings(deadline=None, max_examples=10)
+@given(m=st.integers(2, 150), n=st.integers(2, 150), s=st.integers(1, 48), seed=st.integers(0, 1000))
+def test_sketch_property(m, n, s, seed):
+    a = _rand((m, n), seed)
+    np.testing.assert_allclose(
+        np.asarray(ops.sketch_matmul(a, s, seed=seed)),
+        np.asarray(ref.sketch_matmul_ref(a, s, seed=seed)),
+        atol=1e-4,
+        rtol=1e-3,
+    )

@@ -1,0 +1,97 @@
+"""Per-architecture smoke tests: REDUCED config, one forward + one train step
+on CPU, asserting output shapes and absence of NaNs.  (The FULL configs are
+exercised only via the dry-run.)
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.configs.base import ShapeConfig
+from repro.data.synthetic import synthetic_batch
+from repro.models import forward_model, init_model
+from repro.models.transformer import count_params
+from repro.optim import adamw
+from repro.train.train_step import compute_loss, make_train_step
+
+SMOKE_SHAPE = ShapeConfig("smoke", seq_len=64, global_batch=2, kind="train")
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def _setup(name):
+    cfg = get_config(name).reduced()
+    if cfg.is_encoder_decoder:
+        cfg = dataclasses.replace(cfg, encoder_seq_len=32)
+    params = init_model(cfg, jax.random.key(0))
+    batch = synthetic_batch(cfg, SMOKE_SHAPE, step=0)
+    return cfg, params, batch
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_forward_shapes_and_finite(name):
+    cfg, params, batch = _setup(name)
+    logits, aux = forward_model(params, batch, cfg, mode="train")
+    B, T = batch["tokens"].shape
+    extra = cfg.vision_tokens if cfg.vision_stub else 0
+    assert logits.shape == (B, T + extra, cfg.padded_vocab_()), logits.shape
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32)))), "NaN/inf in logits"
+    assert count_params(params) > 0
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_train_step_reduces_loss_and_finite(name):
+    cfg, params, batch = _setup(name)
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10, clip_norm=1.0)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+    opt_state = adamw.init_state(params)
+
+    loss0 = float(compute_loss(params, batch, cfg)[0])
+    params2, opt_state, metrics, _ = step_fn(params, opt_state, batch, None)
+    loss1 = float(compute_loss(params2, batch, cfg)[0])
+
+    assert np.isfinite(loss0) and np.isfinite(loss1), (loss0, loss1)
+    assert float(metrics["grad_norm"]) > 0
+    # one step on the same batch should not blow the loss up
+    assert loss1 < loss0 * 1.5, (loss0, loss1)
+    for leaf in jax.tree.leaves(params2):
+        assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32)))), "non-finite param"
+
+
+def test_param_counts_full_configs():
+    """Full (non-reduced) configs must land near their advertised sizes.
+
+    Counted via eval_shape — no memory is allocated.
+    """
+    import numpy as np
+    from repro.models import abstract_params
+
+    expected = {
+        "phi3-mini-3.8b": (3.4e9, 4.4e9),
+        "qwen3-4b": (3.2e9, 5.0e9),
+        "gemma2-2b": (2.0e9, 3.4e9),
+        "llama3.2-1b": (1.0e9, 1.7e9),
+        # assigned config is 48L x 64 experts x 1408: the expert weights alone
+        # are 48*64*3*2048*1408 ~ 26.5B — the assignment's layer count, not the
+        # HF model's 27L, is authoritative (documented in DESIGN.md).
+        "moonshot-v1-16b-a3b": (26e9, 30e9),
+        "deepseek-v2-lite-16b": (13e9, 17e9),
+        "whisper-base": (5e7, 1.1e8),
+        "recurrentgemma-9b": (7.5e9, 11e9),
+        # backbone only (Qwen2-0.5B ~ 0.49B); the InternViT-300M tower is a
+        # stub per the assignment, so it contributes no parameters.
+        "internvl2-1b": (4.4e8, 1.1e9),
+        "xlstm-350m": (2.5e8, 5e8),
+    }
+    for name, (lo, hi) in expected.items():
+        cfg = get_config(name)
+        shapes = abstract_params(cfg)
+        n = sum(
+            int(np.prod(l.shape))
+            for l in jax.tree.leaves(shapes)
+            if hasattr(l, "shape")
+        )
+        assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B params outside [{lo/1e9}, {hi/1e9}]"

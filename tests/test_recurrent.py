@@ -1,0 +1,71 @@
+"""Recurrent-block math: chunkwise mLSTM == quadratic mLSTM, RG-LRU decode
+== train-scan, hypothesis sweeps over chunk sizes."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.sketch import sketch_matrix
+from repro.models import recurrent as R
+
+
+def _cfg():
+    return get_config("xlstm-350m").reduced()
+
+
+def _x(B, T, d, seed=5, scale=0.3):
+    return sketch_matrix(B * T, d, seed).reshape(B, T, d) * scale
+
+
+def test_mlstm_chunked_equals_quadratic():
+    cfg = _cfg()
+    params = R.mlstm_init(jax.random.key(0), cfg, jnp.float32)
+    x = _x(2, 256, cfg.d_model)
+    ref = R.mlstm_train(params, x, cfg)
+    for chunk in (32, 64, 128):
+        got = R.mlstm_train_chunked(params, x, cfg, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5, rtol=1e-4)
+
+
+def test_mlstm_chunked_state_matches_prefill_handoff():
+    cfg = _cfg()
+    params = R.mlstm_init(jax.random.key(1), cfg, jnp.float32)
+    x = _x(2, 128, cfg.d_model, seed=7)
+    _, st_ref = R.mlstm_train(params, x, cfg, return_state=True)
+    _, st_chk = R.mlstm_train_chunked(params, x, cfg, chunk=32, return_state=True)
+    np.testing.assert_allclose(np.asarray(st_ref.C), np.asarray(st_chk.C), atol=2e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_ref.n), np.asarray(st_chk.n), atol=2e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_ref.m), np.asarray(st_chk.m), atol=2e-5, rtol=1e-4)
+
+
+def test_rglru_decode_continues_train():
+    """prefill state hand-off + decode steps == training scan on the longer seq."""
+    cfg = get_config("recurrentgemma-9b").reduced()
+    params = R.rglru_init(jax.random.key(2), cfg, jnp.float32)
+    x = _x(2, 40, cfg.d_model, seed=9)
+    full = R.rglru_train(params, x, cfg)
+
+    out_pre, state = R.rglru_train(params, x[:, :36], cfg, return_state=True)
+    outs = [out_pre]
+    for t in range(36, 40):
+        o, state = R.rglru_decode(params, x[:, t : t + 1], state, cfg)
+        outs.append(o)
+    stitched = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(stitched), np.asarray(full), atol=2e-5, rtol=1e-4)
+
+
+@settings(deadline=None, max_examples=8)
+@given(T=st.sampled_from([64, 96, 128]), chunk=st.sampled_from([16, 32, 64]), seed=st.integers(0, 100))
+def test_mlstm_chunk_invariance_property(T, chunk, seed):
+    cfg = _cfg()
+    params = R.mlstm_init(jax.random.key(3), cfg, jnp.float32)
+    x = _x(1, T, cfg.d_model, seed=seed)
+    ref = R.mlstm_train(params, x, cfg)
+    if T % chunk:
+        return
+    got = R.mlstm_train_chunked(params, x, cfg, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=5e-5, rtol=5e-4)

@@ -1,0 +1,79 @@
+"""Roofline machinery unit tests: HLO collective parser, cost composition,
+hardware-constant arithmetic."""
+import json
+
+import pytest
+
+from repro.launch.dryrun import parse_collectives
+from repro.roofline import hw
+from repro.roofline.analysis import Roofline, _composed, analyze_record
+
+
+def test_parse_collectives_ops_and_bytes():
+    hlo = """
+  %ag = bf16[16,1024]{1,0} all-gather(%x), replica_groups={{0,1}}
+  %ar.1 = f32[256,256]{1,0} all-reduce(%y), to_apply=%add
+  %ars = f32[8]{0} all-reduce-start(%z), to_apply=%add
+  %rs = f32[64,32]{1,0} reduce-scatter(%w), dimensions={0}
+  %a2a = bf16[4,128]{1,0} all-to-all(%v), dimensions={0}
+  %cp = s32[100]{0} collective-permute(%u), source_target_pairs={{0,1}}
+  %not_a_coll = f32[9]{0} add(%a, %b)
+"""
+    out = parse_collectives(hlo)
+    assert out["count"] == 6
+    assert out["per_op"]["all-gather"] == 16 * 1024 * 2
+    assert out["per_op"]["all-reduce"] == 256 * 256 * 4 + 8 * 4
+    assert out["per_op"]["reduce-scatter"] == 64 * 32 * 4
+    assert out["per_op"]["all-to-all"] == 4 * 128 * 2
+    assert out["per_op"]["collective-permute"] == 100 * 4
+    assert out["total"] == sum(out["per_op"].values())
+
+
+def test_composed_scan_correction():
+    rec = {
+        "full": {"cost": {"flops": 100.0}},
+        "mini": {"cost": {"flops": 7.0}},
+        "n_scan_units": 11,
+    }
+    assert _composed(rec, ("cost", "flops")) == 100.0 + 10 * 7.0
+
+
+def test_composed_without_mini():
+    rec = {"full": {"cost": {"flops": 42.0}}, "n_scan_units": 5}
+    assert _composed(rec, ("cost", "flops")) == 42.0
+
+
+def test_analyze_record_terms(tmp_path):
+    rec = {
+        "arch": "llama3.2-1b",
+        "shape": "train_4k",
+        "mesh": "single",
+        "n_devices": 256,
+        "n_scan_units": 16,
+        "full": {
+            "cost": {"flops": 1e14, "bytes_accessed": 1e11, "transcendentals": 0},
+            "collectives": {"total": 1e9, "per_op": {}, "count": 3},
+            "memory": {
+                "argument_bytes": int(1e9), "output_bytes": 0,
+                "temp_bytes": int(5e9), "alias_bytes": 0,
+                "generated_code_bytes": 0,
+            },
+        },
+        "analytic": {"params_total": 1.2e9, "params_active": 1.2e9,
+                     "tokens": 1048576.0, "model_flops": 0},
+    }
+    r = analyze_record(rec)
+    assert r.t_compute == pytest.approx(1e14 / hw.PEAK_FLOPS_BF16)
+    assert r.t_memory == pytest.approx(1e11 / hw.HBM_BW)
+    assert r.t_collective == pytest.approx(1e9 / hw.ICI_LINK_BW)
+    assert r.bottleneck == "compute"
+    assert 0 < r.roofline_fraction() <= 1.0
+    assert r.memory_fit["hbm_gb"] == pytest.approx(hw.HBM_BYTES / 1e9)
+
+
+def test_skip_record():
+    r = analyze_record(
+        {"arch": "phi3-mini-3.8b", "shape": "long_500k", "mesh": "single",
+         "n_devices": 256, "skipped": "quadratic"}
+    )
+    assert r.skipped == "quadratic"
