@@ -31,6 +31,56 @@ def hbm_traffic_model(m, n, s, dtype_bytes=4):
     return base + omega, base
 
 
+def block_size_sweep(m=2048, n=192, k=16, block_rows=(128, 256, 512, 2048)):
+    """Blocked (panel-streaming) rSVD across block sizes vs the dense path.
+
+    On this CPU container the numbers are correctness-proxy timings; the
+    structural payload is the working-set column: device-resident floats
+    drop from m*n to block_rows*n + n*s while the result stays within 1e-4
+    (test_blocked.py).
+    """
+    from repro.core.blocked import blocked_randomized_svd
+    from repro.core.rsvd import RSVDConfig, randomized_svd
+
+    rows = []
+    A = sketch_matrix(m, n, 0)
+    s = k + 10
+    t_dense = _time(lambda a: randomized_svd(a, k), A, reps=1)
+    rows.append(
+        dict(name=f"rsvd_dense_m{m}_n{n}_k{k}", us=t_dense * 1e6,
+             derived=f"workset{m * n}")
+    )
+    for b in block_rows:
+        cfg = RSVDConfig.streaming(block_rows=b)
+        t = _time(lambda a, cfg=cfg: blocked_randomized_svd(a, k, cfg), A, reps=1)
+        rows.append(
+            dict(name=f"rsvd_blocked_m{m}_n{n}_k{k}_b{b}", us=t * 1e6,
+                 derived=f"workset{b * n + n * s};dense_us{t_dense * 1e6:.0f}")
+        )
+    return rows
+
+
+def batch_count_sweep(counts=(1, 4, 16), m=128, n=64, k=8):
+    """Batched (vmap) rSVD vs a per-slice Python loop at growing batch sizes."""
+    from repro.core.blocked import batched_randomized_svd
+    from repro.core.rsvd import randomized_svd
+
+    rows = []
+    for B in counts:
+        A = sketch_matrix(B * m, n, 1).reshape(B, m, n)
+        t_b = _time(lambda a: batched_randomized_svd(a, k), A, reps=1)
+
+        def loop(a):
+            return [randomized_svd(a[i], k, seed=i) for i in range(a.shape[0])]
+
+        t_l = _time(loop, A, reps=1)
+        rows.append(
+            dict(name=f"rsvd_batched_B{B}_m{m}_n{n}_k{k}", us=t_b * 1e6,
+                 derived=f"loop_us{t_l * 1e6:.0f};speedup{t_l / max(t_b, 1e-9):.2f}x")
+        )
+    return rows
+
+
 def run():
     rows = []
     # traffic model at the paper's scales
@@ -41,6 +91,8 @@ def run():
                  us=0.0,
                  derived=f"materialized{mat};fused{fused};saving{mat/fused:.3f}x")
         )
+    rows += block_size_sweep()
+    rows += batch_count_sweep()
     # interpret-mode sanity timings (NOT TPU performance — correctness proxy)
     a = sketch_matrix(512, 512, 0)
     b = sketch_matrix(512, 256, 1)

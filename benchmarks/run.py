@@ -7,8 +7,13 @@
   bench_kernels   -> kernel microbenches + fused-sketch HBM-traffic model
   roofline_report -> §Roofline terms from the dry-run artifacts
 """
+import pathlib
 import sys
 import traceback
+
+# Make `benchmarks` importable when invoked as `python benchmarks/run.py`
+# (script dir, not the repo root, lands on sys.path by default).
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
 
 def main() -> None:

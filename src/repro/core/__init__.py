@@ -8,9 +8,16 @@ from repro.core.rsvd import (  # noqa: F401
     randomized_svd,
     truncation_error,
 )
+from repro.core.blocked import (  # noqa: F401
+    batched_randomized_svd,
+    blocked_randomized_eigvals,
+    blocked_randomized_svd,
+    streamed_sketch,
+)
 from repro.core.qr import (  # noqa: F401
     cholesky_qr,
     cholesky_qr2,
+    cholesky_r_from_gram,
     orthonormalize,
     shifted_cholesky_qr3,
 )

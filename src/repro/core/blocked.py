@@ -1,0 +1,245 @@
+"""Blocked/streaming + batched randomized SVD (beyond-paper subsystem).
+
+Two execution shapes the paper's single-GPU Algorithm 1 cannot serve:
+
+1. **Panel streaming** (`blocked_randomized_svd`): A (m x n, tall) is consumed
+   in row panels of `block_rows` — A may live in host memory (a numpy array)
+   with only one panel on device at a time.  The trick is the same one that
+   makes the *distributed* RSVD collective-cheap (core/distributed.py): every
+   reduction in Algorithm 1 factors through a small accumulated state,
+
+     sketch    Y_p = A_p @ Omega          per-panel GEMM, counter-RNG Omega
+                                          (optionally itself streamed over
+                                          column panels: Y_p += A_pj @ Omega_j
+                                          via the panel-offset sketch kernel)
+     CholeskyQR2  G = sum_p Y_p^T Y_p     s x s accumulator  -> R; Q_p = Y_p R^-1
+     power     Z = sum_p A_p^T Q_p        n x s accumulator  -> orthonormalize
+     project   B = sum_p Q_p^T A_p        s x n accumulator
+     small SVD of B, U_p = Q_p @ U_b      per-panel GEMM
+
+   where the panel sum plays the role of the all-reduce (`jax.lax.psum`) in
+   the distributed path — both call the same `qr.cholesky_r_from_gram`.
+   Device-resident working set: the m x n input A never is (one
+   block_rows x n panel at a time), but the SKETCH-WIDTH panels Y/Q (m x s
+   total) and the assembled U (m x k) are kept on device — an n/s (~20-50x)
+   reduction vs. dense, not full independence from m.  Every per-panel op is
+   local, so a caller needing true O(1)-in-m residency can spill Y_p/Q_p to
+   host between passes; this implementation keeps them resident for speed.
+
+2. **Batched** (`batched_randomized_svd`): a fleet of small SVDs [B, m, n]
+   under one vmap — per-channel PCA, per-layer GaLore projection refresh,
+   scan-stacked weight factorization (serve/lowrank.py).  Sketch seeds are
+   decorrelated per slice through the counter RNG (seed + batch index), which
+   is why `core.sketch` accepts traced seeds.
+
+Dispatch from `randomized_svd` (core/rsvd.py) via `RSVDConfig.block_rows` /
+3-D inputs; see DESIGN.md §"Blocked & batched execution".
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import qr as qr_mod
+from repro.core import sketch as sketch_mod
+from repro.core.rsvd import RSVDConfig, _rsvd_body, _small_svd
+
+
+def _panel_bounds(m: int, b: int) -> List[Tuple[int, int]]:
+    """[(lo, hi), ...] covering [0, m) in strides of b (last panel ragged)."""
+    if b <= 0:
+        raise ValueError(f"panel size must be positive, got {b}")
+    return [(lo, min(lo + b, m)) for lo in range(0, m, b)]
+
+
+def _device(panel) -> jax.Array:
+    """Move one panel to device (no-op for arrays already there)."""
+    return jnp.asarray(panel)
+
+
+# ---------------------------------------------------------------------------
+# Streamed sketch: Y += A_panel @ Omega_panel, Omega never materialized whole
+# ---------------------------------------------------------------------------
+
+def streamed_sketch(
+    A,
+    s: int,
+    seed: int,
+    kind: sketch_mod.SketchKind = "gaussian",
+    block_cols: int | None = None,
+    fused: bool = False,
+) -> jax.Array:
+    """Y = A @ Omega(n, s; seed) accumulated over column panels of A.
+
+    Panel j multiplies rows [j*b, (j+1)*b) of the *logical* Omega, regenerated
+    in place from the counter RNG (`row_offset`), so at most one
+    (block_cols x s) panel of Omega ever exists — and with ``fused`` not even
+    that (the Pallas kernel generates Omega tiles in VMEM).  Bit-wise the
+    panels are the monolithic Omega; only the fp32 summation order differs.
+    """
+    m, n = A.shape
+    b = block_cols or n
+    Y = jnp.zeros((m, s), jnp.float32)
+    for lo, hi in _panel_bounds(n, b):
+        panel = _device(A[:, lo:hi])
+        if fused:
+            from repro.kernels.ops import sketch_matmul
+
+            Y = Y + sketch_matmul(
+                panel, s, seed, kind=kind, out_dtype=jnp.float32, row_offset=lo
+            )
+        else:
+            omega = sketch_mod.sketch_matrix(
+                hi - lo, s, seed, kind, dtype=jnp.float32, row_offset=lo
+            )
+            Y = Y + panel.astype(jnp.float32) @ omega
+    return Y.astype(jnp.asarray(A[:1, :1]).dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blocked CholeskyQR2 — the panel-sum twin of the distributed Gram all-reduce
+# ---------------------------------------------------------------------------
+
+def _blocked_cholesky_qr(Y_panels: Sequence[jax.Array]):
+    """One CholeskyQR pass over a row-panel-split Y. Returns (Q_panels, R)."""
+    G = functools.reduce(jnp.add, [Yp.T @ Yp for Yp in Y_panels])
+    R = qr_mod.cholesky_r_from_gram(G)
+    Q_panels = [
+        jax.scipy.linalg.solve_triangular(R.T, Yp.T, lower=True).T
+        for Yp in Y_panels
+    ]
+    return Q_panels, R
+
+
+def _blocked_cholesky_qr2(Y_panels: Sequence[jax.Array]):
+    """CholeskyQR2 on panels: O(eps) orthogonality for kappa(Y) <~ eps^-1/2,
+    touching each panel twice and reducing only s x s Grams."""
+    Q1, R1 = _blocked_cholesky_qr(Y_panels)
+    Q, R2 = _blocked_cholesky_qr(Q1)
+    return Q, R2 @ R1
+
+
+# ---------------------------------------------------------------------------
+# Panel-streaming randomized SVD
+# ---------------------------------------------------------------------------
+
+def blocked_randomized_svd(
+    A,
+    k: int,
+    cfg: RSVDConfig = RSVDConfig(),
+    seed: int = 0,
+    block_rows: int | None = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Rank-k randomized SVD of A streamed in row panels of the tall side.
+
+    Accepts a jax array OR a host numpy array (the out-of-core case: only
+    `block_rows x n` of A is device-resident at a time; the s-column panels
+    Y/Q — m x s in total — stay on device, see the module docstring).
+    Returns (U, S, Vt) with the same contract as `randomized_svd`; U is
+    assembled from per-panel GEMMs, so for a truly out-of-core caller the
+    per-panel `Q_p @ U_b` products could be written back to host storage
+    panel-by-panel instead.
+    """
+    m, n = A.shape
+    if m < n:
+        # Orientation swap: stream the taller side of A^T.  For numpy inputs
+        # .T is a view — no host copy is made.
+        V, S, Ut = blocked_randomized_svd(A.T, k, cfg, seed=seed, block_rows=block_rows)
+        return Ut.T, S, V.T
+
+    b = block_rows or cfg.block_rows
+    if not b:
+        raise ValueError("blocked_randomized_svd needs block_rows (arg or cfg)")
+    s = min(k + cfg.oversample, n)
+    bounds = _panel_bounds(m, b)
+    panels = lambda: (_device(A[lo:hi]) for lo, hi in bounds)
+
+    # Step 1-2a: per-panel sketch.  Omega is n x s regenerated per panel from
+    # the counter RNG — identical for every panel, no broadcast state.
+    Y = [
+        streamed_sketch(
+            Ap, s, seed, cfg.sketch_kind,
+            block_cols=cfg.block_cols, fused=cfg.fused_sketch,
+        )
+        for Ap in panels()
+    ]
+
+    # Step 2: power iteration through the n x s accumulator Z.
+    for _ in range(cfg.power_iters):
+        if cfg.power_scheme == "plain":
+            Z = functools.reduce(
+                jnp.add, [Ap.T @ Yp for Ap, Yp in zip(panels(), Y)]
+            )
+            Y = [Ap @ Z for Ap in panels()]
+        else:
+            Q, _ = _blocked_cholesky_qr2(Y)
+            Z = functools.reduce(
+                jnp.add, [Ap.T @ Qp for Ap, Qp in zip(panels(), Q)]
+            )
+            Qz = qr_mod.orthonormalize(Z, cfg.qr_method)  # n x s, fits
+            Y = [Ap @ Qz for Ap in panels()]
+
+    # Step 3: orthonormal range basis, panel-split.
+    Q, _ = _blocked_cholesky_qr2(Y)
+
+    # Step 4: B = Q^T A through the s x n accumulator.
+    B = functools.reduce(jnp.add, [Qp.T @ Ap for Ap, Qp in zip(panels(), Q)])
+
+    # Steps 5-6: small SVD (s x n, in-memory) and per-panel U assembly.
+    U_b, S, Vt = _small_svd(B, cfg.small_svd)
+    U = jnp.concatenate([Qp @ U_b[:, :k] for Qp in Q], axis=0)
+    return U, S[:k], Vt[:k, :]
+
+
+def blocked_randomized_eigvals(
+    A, k: int, cfg: RSVDConfig = RSVDConfig(), seed: int = 0,
+    block_rows: int | None = None,
+) -> jax.Array:
+    """k largest singular values, streaming — Sigma-only mode of the above."""
+    _, S, _ = blocked_randomized_svd(A, k, cfg, seed=seed, block_rows=block_rows)
+    return S
+
+
+# ---------------------------------------------------------------------------
+# Batched (vmap) randomized SVD
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k", "cfg"))
+def _batched_tall(A: jax.Array, seeds: jax.Array, k: int, cfg: RSVDConfig):
+    return jax.vmap(lambda a, sd: _rsvd_body(a, k, cfg, sd))(A, seeds)
+
+
+def batched_randomized_svd(
+    A: jax.Array,
+    k: int,
+    cfg: RSVDConfig = RSVDConfig(),
+    seed: int = 0,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Rank-k randomized SVD of every slice of A: [B, m, n] -> (U [B, m, k],
+    S [B, k], Vt [B, k, n]).
+
+    One vmapped program instead of B kernel launches — the fleet-of-small-
+    matrices workload (per-channel PCA, per-layer gradient compression).
+    Slice i sketches with seed + i: the counter RNG makes that a disjoint
+    logical stream, so batching changes nothing statistically vs. a Python
+    loop with per-matrix seeds.
+
+    The fused-sketch Pallas kernel bakes its seed into the compiled program
+    (static), so the batched path always uses the materialized-Omega sketch;
+    at batched (small-matrix) sizes the sketch GEMM is not the bottleneck.
+    """
+    if A.ndim != 3:
+        raise ValueError(f"batched path expects [B, m, n], got shape {A.shape}")
+    _, m, n = A.shape
+    if m < n:
+        V, S, Ut = batched_randomized_svd(jnp.swapaxes(A, -1, -2), k, cfg, seed=seed)
+        return jnp.swapaxes(Ut, -1, -2), S, jnp.swapaxes(V, -1, -2)
+    if cfg.fused_sketch or cfg.block_rows:
+        cfg = dataclasses.replace(cfg, fused_sketch=False, block_rows=None)
+    seeds = jnp.uint32(seed) + jnp.arange(A.shape[0], dtype=jnp.uint32)
+    return _batched_tall(A, seeds, k, cfg)

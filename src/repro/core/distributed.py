@@ -30,17 +30,22 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map as _shard_map
+
+from repro.core import qr as qr_mod
 from repro.core import sketch as sketch_mod
 from repro.core.rsvd import RSVDConfig
 
 
 def _dist_cholesky_qr(Y: jax.Array, axis: str, shift: float = 0.0):
-    """One distributed CholeskyQR pass on row-sharded Y."""
+    """One distributed CholeskyQR pass on row-sharded Y.
+
+    Identical to the single-device and blocked (core/blocked.py) passes
+    except for how the Gram matrix is reduced: psum here, a panel sum there —
+    all three factor the reduced Gram via `qr.cholesky_r_from_gram`.
+    """
     G = jax.lax.psum(Y.T @ Y, axis)
-    s = Y.shape[1]
-    if shift:
-        G = G + shift * jnp.eye(s, dtype=G.dtype)
-    R = jnp.linalg.cholesky(G).T
+    R = qr_mod.cholesky_r_from_gram(G, shift)
     Q = jax.scipy.linalg.solve_triangular(R.T, Y.T, lower=True).T
     return Q, R
 
@@ -109,7 +114,7 @@ def distributed_randomized_svd(
         axis=axis,
         n_shards=n_shards,
     )
-    f = jax.shard_map(
+    f = _shard_map(
         body,
         mesh=mesh,
         in_specs=P(axis, None),

@@ -42,6 +42,28 @@ def pca(X: jax.Array, k: int, cfg: RSVDConfig = RSVDConfig.fast(), seed: int = 0
     )
 
 
+@functools.partial(jax.jit, static_argnames=("k", "cfg", "seed"))
+def batched_pca(
+    X: jax.Array, k: int, cfg: RSVDConfig = RSVDConfig(), seed: int = 0
+) -> PCAResult:
+    """Per-channel PCA: X [C, N, d] -> PCAResult with a leading C axis on
+    every field.  One vmapped randomized SVD (core/blocked.py) instead of C
+    sequential solves — the many-small-matrices workload from DESIGN.md
+    §"Blocked & batched execution"."""
+    from repro.core.blocked import batched_randomized_svd
+
+    mu = jnp.mean(X, axis=1)                      # (C, d)
+    Xc = X - mu[:, None, :]
+    _, S, Vt = batched_randomized_svd(Xc, k, cfg, seed=seed)
+    n = X.shape[1]
+    return PCAResult(
+        components=Vt,
+        explained_variance=S**2 / (n - 1),
+        singular_values=S,
+        mean=mu,
+    )
+
+
 def pca_exact(X: jax.Array, k: int) -> PCAResult:
     """Dense-SVD PCA (the GESVD baseline column in the paper's Fig. 1)."""
     mu = jnp.mean(X, axis=0)

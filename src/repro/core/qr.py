@@ -40,8 +40,14 @@ def _tri_solve_right(Y: jax.Array, R: jax.Array) -> jax.Array:
     return Qt.T
 
 
-def cholesky_qr(Y: jax.Array, shift: jax.Array | float = 0.0) -> Tuple[jax.Array, jax.Array]:
-    """Single-pass CholeskyQR (optionally shifted). Returns (Q, R).
+def cholesky_r_from_gram(G: jax.Array, shift: jax.Array | float = 0.0) -> jax.Array:
+    """Upper-triangular R from an already-reduced Gram matrix G = Y^T Y.
+
+    This is the shared core of every CholeskyQR variant in the codebase: the
+    single-device path forms G locally, the distributed path all-reduces the
+    per-shard Grams (core/distributed.py), and the blocked/streaming path sums
+    the per-panel Grams (core/blocked.py) — all three then factor the SAME
+    s x s matrix here and apply R^{-1} to their local rows of Y.
 
     A trace-scaled floor shift is always applied so the Cholesky succeeds on
     *exactly rank-deficient* panels (e.g. sketching data that lies in a
@@ -51,14 +57,20 @@ def cholesky_qr(Y: jax.Array, shift: jax.Array | float = 0.0) -> Tuple[jax.Array
     directions come out as tiny-norm columns that the downstream small-SVD
     sorts last — mirroring LAPACK's rank-revealing behavior.
     """
-    G = _gram(Y)
-    s = Y.shape[1]
-    eps = jnp.finfo(Y.dtype).eps
+    s = G.shape[0]
+    eps = jnp.finfo(G.dtype).eps
     floor = (s * eps) * (jnp.trace(G) / s + eps)
     total_shift = jnp.maximum(jnp.asarray(shift, G.dtype), floor.astype(G.dtype))
     G = G + total_shift * jnp.eye(s, dtype=G.dtype)
     L = jnp.linalg.cholesky(G)  # lower
-    R = L.T
+    return L.T
+
+
+def cholesky_qr(Y: jax.Array, shift: jax.Array | float = 0.0) -> Tuple[jax.Array, jax.Array]:
+    """Single-pass CholeskyQR (optionally shifted). Returns (Q, R).
+
+    See `cholesky_r_from_gram` for the floor-shift contract."""
+    R = cholesky_r_from_gram(_gram(Y), shift)
     Q = _tri_solve_right(Y, R)
     return Q, R
 

@@ -44,7 +44,25 @@ class RSVDConfig:
     between applications (what cuSOLVER gesvdr implements), NOT a raw GEMM
     chain.  The raw chain is available as power_scheme='plain' for ablation;
     it demonstrably loses the tail singular values to round-off (the sigma^(2q+1)
-    underflow documented in EXPERIMENTS.md)."""
+    underflow documented in EXPERIMENTS.md).
+
+    Execution-shape switches (DESIGN.md §"Blocked & batched execution"):
+      * block_rows  — stream the tall dimension in row panels of this height
+                      through the blocked range finder (core/blocked.py): A
+                      itself (host numpy accepted) is device-resident one
+                      block_rows x n panel at a time, and only sketch-width
+                      (m x s) state stays on device — an n/s reduction vs.
+                      holding A, see core/blocked.py for the exact contract.
+      * block_cols  — optional inner column-panel width for the streamed
+                      sketch accumulation Y += A_panel @ Omega_panel (panel-
+                      offset counter RNG; Omega never materialized whole).
+      * batched     — declare the workload a fleet of small SVDs: the input
+                      MUST be 3-D [B, m, n] (ValueError otherwise) and runs
+                      under one vmap (per-channel PCA, per-layer GaLore /
+                      PowerSGD compression).  3-D inputs take the batched
+                      path automatically even without the flag; setting it
+                      makes an accidental 2-D input fail loudly instead of
+                      silently running one big dense SVD."""
 
     oversample: int = 10          # s = k + oversample   (paper: s = O(k/eps))
     power_iters: int = 2          # q in Algorithm 1 step 2
@@ -53,6 +71,9 @@ class RSVDConfig:
     small_svd: SmallSVD = "lapack"
     sketch_kind: sketch_mod.SketchKind = "gaussian"
     fused_sketch: bool = False    # Pallas fused RNG+GEMM (TPU fast path)
+    block_rows: int | None = None  # panel-stream the tall dimension
+    block_cols: int | None = None  # panel-stream the sketch reduction
+    batched: bool = False          # vmap over a leading batch dimension
 
     @staticmethod
     def faithful() -> "RSVDConfig":
@@ -66,6 +87,18 @@ class RSVDConfig:
             qr_method="cqr2",
             small_svd="gram_jacobi",
             fused_sketch=True,
+        )
+
+    @staticmethod
+    def streaming(block_rows: int = 4096) -> "RSVDConfig":
+        """Out-of-core configuration: CholeskyQR2 accumulation over row
+        panels (Householder QR of a panel-split Y is not expressible as a
+        panel-local op; the Gram trick is — see core/blocked.py)."""
+        return RSVDConfig(
+            power_scheme="stabilized",
+            qr_method="cqr2",
+            small_svd="lapack",
+            block_rows=block_rows,
         )
 
 
@@ -89,26 +122,16 @@ def _sketch(A: jax.Array, s: int, seed: int, cfg: RSVDConfig) -> jax.Array:
     return A @ omega
 
 
-@functools.partial(
-    jax.jit, static_argnames=("k", "cfg", "seed")
-)
-def randomized_svd(
-    A: jax.Array,
-    k: int,
-    cfg: RSVDConfig = RSVDConfig(),
-    seed: int = 0,
+def _rsvd_body(
+    A: jax.Array, k: int, cfg: RSVDConfig, seed
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Rank-k randomized SVD of A (m x n). Returns (U, S, Vt) with
-    U: m x k, S: k, Vt: k x n.
+    """Algorithm 1 steps 1-6 with the range finder on the given orientation.
 
-    Orientation: the range finder works on the *taller* side; if m < n we
-    factor A^T and swap factors at the end (same flop count, better sketch).
+    ``seed`` may be a *traced* value (the batched path decorrelates sketches
+    per matrix) unless ``cfg.fused_sketch`` — the Pallas kernel bakes the
+    seed into the compiled program.
     """
     m, n = A.shape
-    if m < n:
-        V, S, Ut = randomized_svd(A.T, k, cfg, seed)
-        return Ut.T, S, V.T
-
     s = min(k + cfg.oversample, min(m, n))
     Y = _sketch(A, s, seed, cfg)                       # step 1-2a: A @ Omega
     if cfg.power_iters > 0:
@@ -124,6 +147,70 @@ def randomized_svd(
     return U[:, :k], S[:k], Vt[:k, :]
 
 
+@functools.partial(
+    jax.jit, static_argnames=("k", "cfg", "seed")
+)
+def _randomized_svd_dense(
+    A: jax.Array,
+    k: int,
+    cfg: RSVDConfig = RSVDConfig(),
+    seed: int = 0,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-device in-memory path, static seed (fused kernel requirement)."""
+    m, n = A.shape
+    if m < n:
+        V, S, Ut = _rsvd_body(A.T, k, cfg, seed)
+        return Ut.T, S, V.T
+    return _rsvd_body(A, k, cfg, seed)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "cfg"))
+def _randomized_svd_dense_traced(
+    A: jax.Array, seed: jax.Array, k: int, cfg: RSVDConfig
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Same path with a TRACED seed: changing the seed (GaLore refreshes,
+    per-slice loops, seed sweeps) reuses the compiled program — the counter
+    RNG takes the seed as data.  Only the fused Pallas sketch needs the
+    static variant (the kernel closure bakes the seed in)."""
+    m, n = A.shape
+    if m < n:
+        V, S, Ut = _rsvd_body(A.T, k, cfg, seed)
+        return Ut.T, S, V.T
+    return _rsvd_body(A, k, cfg, seed)
+
+
+def randomized_svd(
+    A: jax.Array,
+    k: int,
+    cfg: RSVDConfig = RSVDConfig(),
+    seed: int = 0,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Rank-k randomized SVD of A (m x n). Returns (U, S, Vt) with
+    U: m x k, S: k, Vt: k x n.
+
+    Orientation: the range finder works on the *taller* side; if m < n we
+    factor A^T and swap factors at the end (same flop count, better sketch).
+
+    Dispatch (DESIGN.md §"Blocked & batched execution"):
+      * 3-D input [B, m, n]       -> batched vmap path (one SVD per slice)
+      * cfg.block_rows set        -> panel-streaming blocked path, A may be
+                                     a host (numpy) array larger than device
+                                     memory
+      * otherwise                 -> the dense jitted path above
+    """
+    if getattr(A, "ndim", 2) == 3 or cfg.batched:
+        from repro.core import blocked
+
+        return blocked.batched_randomized_svd(A, k, cfg, seed=seed)
+    if cfg.block_rows:
+        from repro.core import blocked
+
+        return blocked.blocked_randomized_svd(A, k, cfg, seed=seed)
+    if cfg.fused_sketch:
+        return _randomized_svd_dense(A, k, cfg, int(seed))
+    return _randomized_svd_dense_traced(A, jnp.asarray(seed, jnp.uint32), k, cfg)
+
+
 def _stabilized_power(A: jax.Array, Y: jax.Array, cfg: RSVDConfig) -> jax.Array:
     for _ in range(cfg.power_iters):
         Q = qr_mod.orthonormalize(Y, cfg.qr_method)
@@ -133,15 +220,30 @@ def _stabilized_power(A: jax.Array, Y: jax.Array, cfg: RSVDConfig) -> jax.Array:
     return Y
 
 
-@functools.partial(jax.jit, static_argnames=("k", "cfg", "seed"))
 def randomized_eigvals(
     A: jax.Array, k: int, cfg: RSVDConfig = RSVDConfig(), seed: int = 0
 ) -> jax.Array:
     """k largest singular values only (paper's eigenvalue-benchmark mode:
-    steps 1-5 of Algorithm 1, discarding U and V)."""
+    steps 1-5 of Algorithm 1, discarding U and V).  Dispatches on execution
+    shape like `randomized_svd`."""
+    if getattr(A, "ndim", 2) == 3 or cfg.batched:
+        from repro.core import blocked
+
+        return blocked.batched_randomized_svd(A, k, cfg, seed=seed)[1]
+    if cfg.block_rows:
+        from repro.core import blocked
+
+        return blocked.blocked_randomized_eigvals(A, k, cfg, seed=seed)
+    return _randomized_eigvals_dense(A, k, cfg, seed)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "cfg", "seed"))
+def _randomized_eigvals_dense(
+    A: jax.Array, k: int, cfg: RSVDConfig = RSVDConfig(), seed: int = 0
+) -> jax.Array:
     m, n = A.shape
     if m < n:
-        return randomized_eigvals(A.T, k, cfg, seed)
+        return _randomized_eigvals_dense(A.T, k, cfg, seed)
     s = min(k + cfg.oversample, min(m, n))
     Y = _sketch(A, s, seed, cfg)
     if cfg.power_iters > 0:

@@ -52,9 +52,22 @@ def matmul(x: jax.Array, y: jax.Array, out_dtype=None):
     return out[:m, :n]
 
 
-@functools.partial(jax.jit, static_argnames=("s", "seed", "kind", "out_dtype"))
-def sketch_matmul(a: jax.Array, s: int, seed: int = 0, kind: str = "gaussian", out_dtype=None):
-    """C = A @ Omega(n, s; seed) with Omega generated inside the kernel."""
+@functools.partial(
+    jax.jit, static_argnames=("s", "seed", "kind", "out_dtype")
+)
+def sketch_matmul(
+    a: jax.Array,
+    s: int,
+    seed: int = 0,
+    kind: str = "gaussian",
+    out_dtype=None,
+    row_offset=0,
+):
+    """C = A @ Omega[row_offset : row_offset + n, :s] with Omega generated
+    inside the kernel.  ``row_offset=0`` is the monolithic sketch; a nonzero
+    offset lets a column-panel of A consume its panel of the same logical
+    Omega (blocked / out-of-core streaming).  ``row_offset`` is traced —
+    streaming p panels costs ONE kernel compile, not p."""
     m, n = a.shape
     bm, bk = _block(m), _block(n)
     bn = _block(s)
@@ -63,7 +76,7 @@ def sketch_matmul(a: jax.Array, s: int, seed: int = 0, kind: str = "gaussian", o
     out = _sm.sketch_matmul_padded(
         ap, s, seed, s_padded=s_padded, kind=kind,
         bm=bm, bn=bn, bk=bk, out_dtype=out_dtype or a.dtype,
-        interpret=_interpret(),
+        interpret=_interpret(), row_offset=row_offset,
     )
     return out[:m, :s]
 

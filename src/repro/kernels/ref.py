@@ -17,12 +17,15 @@ def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
 
 
 def sketch_matmul_ref(
-    a: jax.Array, s: int, seed: int, kind: str = "gaussian", out_dtype=None
+    a: jax.Array, s: int, seed: int, kind: str = "gaussian", out_dtype=None,
+    row_offset: int = 0,
 ) -> jax.Array:
     """C = A @ Omega(n, s, seed) — Omega materialized (the kernel never does)."""
     out_dtype = out_dtype or a.dtype
     n = a.shape[1]
-    omega = sketch_mod.sketch_matrix(n, s, seed, kind, dtype=jnp.float32)
+    omega = sketch_mod.sketch_matrix(
+        n, s, seed, kind, dtype=jnp.float32, row_offset=row_offset
+    )
     return jnp.matmul(
         a.astype(jnp.float32), omega, preferred_element_type=jnp.float32
     ).astype(out_dtype)

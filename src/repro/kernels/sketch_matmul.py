@@ -70,14 +70,14 @@ def _omega_tile(row0, col0, bk, bn, s, seed, kind):
     raise ValueError(kind)
 
 
-def _sketch_kernel(a_ref, o_ref, acc_ref, *, nk, bk, bn, s, seed, kind):
+def _sketch_kernel(off_ref, a_ref, o_ref, acc_ref, *, nk, bk, bn, s, seed, kind):
     kk = pl.program_id(2)
 
     @pl.when(kk == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    row0 = (kk * bk).astype(jnp.uint32)
+    row0 = (kk * bk).astype(jnp.uint32) + off_ref[0, 0]
     col0 = (pl.program_id(1) * bn).astype(jnp.uint32)
     omega = _omega_tile(row0, col0, bk, bn, s, seed, kind)
     acc_ref[...] += jnp.dot(
@@ -101,6 +101,7 @@ def sketch_matmul_padded(
     bk: int = 128,
     out_dtype=None,
     interpret: bool = False,
+    row_offset: int = 0,
 ) -> jax.Array:
     """C = A @ Omega for A already padded to (m, k) block multiples.
 
@@ -108,6 +109,14 @@ def sketch_matmul_padded(
     are independent of padding); `s_padded` is the padded output width.
     Padded Omega columns (>= s) produce finite garbage that the caller
     slices off; padded A rows are zero so they contribute nothing.
+
+    `row_offset` shifts the RNG row index: the kernel consumes rows
+    [row_offset, row_offset + k) of the logical Omega, so a column-panel
+    of A streamed in a separate call regenerates ITS panel of the same
+    global sketch bit-identically (the out-of-core / blocked contract,
+    mirroring ``core.sketch.sketch_matrix(row_offset=...)``).  It is a
+    TRACED scalar (SMEM operand), so every panel of a streamed sketch
+    shares one compiled program.
     """
     m, k = a.shape
     assert m % bm == 0 and k % bk == 0 and s_padded % bn == 0
@@ -116,12 +125,16 @@ def sketch_matmul_padded(
     kernel = functools.partial(
         _sketch_kernel, nk=nk, bk=bk, bn=bn, s=s, seed=seed, kind=kind
     )
+    off = jnp.asarray(row_offset, jnp.uint32).reshape(1, 1)
     return pl.pallas_call(
         kernel,
         grid=(m // bm, s_padded // bn, nk),
-        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))],
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, s_padded), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-    )(a)
+    )(off, a)

@@ -20,6 +20,8 @@ from typing import Optional
 import jax
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import manual_axis_names
+
 
 def current_mesh():
     from jax._src.mesh import thread_resources
@@ -31,14 +33,7 @@ def current_mesh():
 def _usable_axes(mesh):
     """Mesh axes a with_sharding_constraint may mention: under shard_map the
     Manual axes (e.g. 'pod' in the podsgd step) must not appear in specs."""
-    am = jax.sharding.get_abstract_mesh()
-    manual = set()
-    if am is not None and getattr(am, "axis_types", None):
-        manual = {
-            n
-            for n, t in zip(am.axis_names, am.axis_types)
-            if t == jax.sharding.AxisType.Manual
-        }
+    manual = manual_axis_names()
     return {n for n in mesh.axis_names if n not in manual}
 
 

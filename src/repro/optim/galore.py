@@ -18,6 +18,7 @@ from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.rsvd import RSVDConfig, randomized_svd
 from repro.optim import adamw
@@ -39,8 +40,13 @@ class GaLoreState(NamedTuple):
     dense: adamw.AdamWState  # classic Adam for non-projected leaves
 
 
+def _mT(x: jax.Array) -> jax.Array:
+    return jnp.swapaxes(x, -1, -2)
+
+
 def _projectable(leaf: jax.Array, rank: int) -> bool:
-    return leaf.ndim == 2 and min(leaf.shape) > 2 * rank
+    # 2-D weights, or scan-stacked [units, m, n] weights (batched projection)
+    return leaf.ndim in (2, 3) and min(leaf.shape[-2:]) > 2 * rank
 
 
 def _masked(params: Params, rank: int, keep_projected: bool) -> Params:
@@ -57,12 +63,15 @@ def init_state(params: Params, rank: int, seed: int = 23) -> GaLoreState:
     def mk(p):
         if not _projectable(p, rank):
             return None
-        m, n = p.shape
+        units = p.shape[:-2]  # () for 2-D, (n_units,) for scan-stacked
+        m, n = p.shape[-2:]
         if m <= n:
-            proj = jnp.eye(m, rank, dtype=jnp.float32)
-            return GaLoreLeaf(proj, jnp.zeros((rank, n), jnp.float32), jnp.zeros((rank, n), jnp.float32))
-        proj = jnp.eye(n, rank, dtype=jnp.float32)
-        return GaLoreLeaf(proj, jnp.zeros((m, rank), jnp.float32), jnp.zeros((m, rank), jnp.float32))
+            proj = jnp.broadcast_to(jnp.eye(m, rank, dtype=jnp.float32), units + (m, rank))
+            mom = jnp.zeros(units + (rank, n), jnp.float32)
+        else:
+            proj = jnp.broadcast_to(jnp.eye(n, rank, dtype=jnp.float32), units + (n, rank))
+            mom = jnp.zeros(units + (m, rank), jnp.float32)
+        return GaLoreLeaf(proj, mom, jnp.zeros_like(mom))
 
     dense = adamw.init_state(_masked(params, rank, keep_projected=False))
     return GaLoreState(
@@ -73,8 +82,20 @@ def init_state(params: Params, rank: int, seed: int = 23) -> GaLoreState:
 
 
 def _refresh_projection(g: jax.Array, rank: int) -> jax.Array:
-    """Top-r singular subspace of the gradient via the paper's RSVD."""
-    m, n = g.shape
+    """Top-r singular subspace of the gradient via the paper's RSVD.
+
+    Scan-stacked [units, m, n] gradients refresh every unit's projection in
+    ONE vmapped solve (core/blocked.py batched path) — the projection-refresh
+    overhead is a single kernel launch regardless of layer count."""
+    m, n = g.shape[-2:]
+    if g.ndim == 3:
+        from repro.core.blocked import batched_randomized_svd
+
+        if m <= n:
+            u, _, _ = batched_randomized_svd(g, rank, _RSVD_CFG)
+            return u                  # (units, m, r)
+        _, _, vt = batched_randomized_svd(g, rank, _RSVD_CFG)
+        return _mT(vt)                # (units, n, r)
     if m <= n:
         u, _, _ = randomized_svd(g.astype(jnp.float32), rank, _RSVD_CFG)
         return u                      # (m, r)
@@ -98,18 +119,19 @@ def apply_updates(
 
     def upd(p, g, leaf):
         gf = g.astype(jnp.float32)
-        m_, n_ = gf.shape
+        m_, n_ = gf.shape[-2:]
         left = m_ <= n_
         proj = jax.lax.cond(
             refresh,
             lambda: _refresh_projection(gf, rank),
             lambda: leaf.p,
         )
-        g_proj = proj.T @ gf if left else gf @ proj            # (r,n) or (m,r)
+        # matmul broadcasts over the optional leading units axis
+        g_proj = _mT(proj) @ gf if left else gf @ proj         # (..,r,n)/(..,m,r)
         m_new = opt_cfg.b1 * leaf.m + (1 - opt_cfg.b1) * g_proj
         v_new = opt_cfg.b2 * leaf.v + (1 - opt_cfg.b2) * g_proj * g_proj
         delta_proj = (m_new / b1c) / (jnp.sqrt(v_new / b2c) + opt_cfg.eps)
-        delta = proj @ delta_proj if left else delta_proj @ proj.T
+        delta = proj @ delta_proj if left else delta_proj @ _mT(proj)
         delta = delta + opt_cfg.weight_decay * p.astype(jnp.float32)
         new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
         return new_p, GaLoreLeaf(proj, m_new, v_new)
@@ -150,8 +172,9 @@ def memory_savings(params: Params, rank: int) -> Tuple[int, int]:
     lowrank = 0
     for p in jax.tree.leaves(params):
         if _projectable(p, rank):
-            m, n = p.shape
-            dense += 2 * m * n
+            units = int(np.prod(p.shape[:-2])) if p.ndim > 2 else 1
+            m, n = p.shape[-2:]
+            dense += units * 2 * m * n
             r = rank
-            lowrank += (min(m, n) * r) + 2 * r * max(m, n)
+            lowrank += units * ((min(m, n) * r) + 2 * r * max(m, n))
     return dense, lowrank

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.blocked import batched_randomized_svd
 from repro.core.rsvd import RSVDConfig, low_rank_error, randomized_svd
 
 _RSVD = RSVDConfig(oversample=16, power_iters=2, qr_method="cqr2", small_svd="gram")
@@ -38,6 +39,17 @@ def _factorize_2d(W: jax.Array, rank: int):
     return U * root[None, :], root[:, None] * Vt, low_rank_error(W, U, S, Vt)
 
 
+def _factorize_stacked(W: jax.Array, rank: int):
+    """[units, m, n] leaf: one batched RSVD (core/blocked.py) for all units,
+    with per-unit decorrelated sketch seeds."""
+    U, S, Vt = batched_randomized_svd(W, rank, _RSVD)
+    root = jnp.sqrt(S)
+    A = U * root[:, None, :]
+    B = root[:, :, None] * Vt
+    err = jax.vmap(low_rank_error)(W, U, S, Vt)
+    return A, B, err
+
+
 def factorize_params(params, rank: int) -> Tuple[Any, Dict[str, float]]:
     """Replace each target weight W with {'lr_a': A, 'lr_b': B}.
 
@@ -55,7 +67,7 @@ def factorize_params(params, rank: int) -> Tuple[Any, Dict[str, float]]:
             A, B, err = _factorize_2d(W, rank)
             report[name] = float(err)
         else:
-            A, B, err = jax.vmap(lambda w: _factorize_2d(w, rank))(W)
+            A, B, err = _factorize_stacked(W, rank)
             report[name] = float(jnp.mean(err))
         return {"lr_a": A.astype(leaf.dtype), "lr_b": B.astype(leaf.dtype)}
 

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map as _shard_map
 from repro.core import qr as qr_mod
 from repro.core.sketch import sketch_matrix
 from repro.optim import adamw
@@ -110,7 +111,7 @@ def make_podsgd_train_step(cfg, opt_cfg: adamw.AdamWConfig, mesh, logits_shardin
     podded = lambda tree: jax.tree.map(lambda _: P("pod"), tree)
 
     def wrap(params, opt_state, batch, psgd_e, psgd_q):
-        return jax.shard_map(
+        return _shard_map(
             per_pod,
             mesh=mesh,
             in_specs=(rep(params), rep(opt_state), podded(batch), podded(psgd_e), rep(psgd_q)),

@@ -1,0 +1,102 @@
+"""Hypothesis import shim: the real package when installed, otherwise a tiny
+deterministic example-based fallback so tier-1 collects and runs green in
+containers without ``hypothesis``.
+
+Usage in test modules::
+
+    from _hypothesis_compat import given, settings, st
+
+The fallback implements exactly the subset this suite uses:
+
+  * ``st.integers(lo, hi)``, ``st.floats(lo, hi)``, ``st.sampled_from(seq)``
+  * ``@settings(deadline=..., max_examples=N)`` (other kwargs ignored)
+  * ``@given(name=strategy, ...)`` (keyword style only)
+
+Fallback semantics: each ``@given`` test runs ``min(max_examples, 2)``
+examples drawn from a numpy Generator seeded by the test's qualified name
+(crc32 — stable across processes, unlike ``hash``).  No shrinking, no
+example database — failures print the drawn kwargs instead.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic fallback
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import zlib
+
+    import numpy as _np
+
+    # Tier-1 budget: each example of the kernel sweeps recompiles an
+    # interpret-mode Pallas program (seconds), so the fallback runs few,
+    # fixed examples — breadth comes from the real-hypothesis CI lane.
+    _FALLBACK_CAP = 2
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1))
+            )
+
+        @staticmethod
+        def floats(min_value, max_value, **_):
+            lo, hi = float(min_value), float(max_value)
+            return _Strategy(lambda rng: lo + (hi - lo) * float(rng.random()))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+    st = _Strategies()
+
+    def settings(*, max_examples=10, **_ignored):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = min(
+                    getattr(wrapper, "_compat_max_examples", None)
+                    or getattr(fn, "_compat_max_examples", 10),
+                    _FALLBACK_CAP,
+                )
+                rng = _np.random.default_rng(
+                    zlib.crc32(fn.__qualname__.encode())
+                )
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    try:
+                        fn(*args, **kwargs, **drawn)
+                    except Exception as e:  # surface the failing example
+                        raise AssertionError(
+                            f"{fn.__qualname__} failed on fallback example "
+                            f"{drawn}: {e}"
+                        ) from e
+
+            # pytest must not see the strategy params as fixtures: drop the
+            # __wrapped__ breadcrumb functools.wraps leaves and pin an empty
+            # signature (mirrors what real hypothesis does).
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+
+        return deco

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import RSVDConfig, low_rank_error, truncation_error
 from repro.core.distributed import distributed_randomized_svd
 from repro.core.spectra import make_test_matrix
@@ -43,7 +44,7 @@ def main():
 
     # collective cost: the HLO must contain all-reduces but no all-gather of A
     fn = jax.jit(
-        jax.shard_map(
+        shard_map(
             lambda a: a,
             mesh=mesh,
             in_specs=P("data", None),

@@ -1,0 +1,157 @@
+"""Blocked/streaming + batched randomized SVD vs. the dense in-memory path.
+
+Covers the DESIGN.md §"Blocked & batched execution" contracts:
+  * panel streaming reproduces the dense result for dividing AND non-dividing
+    block_rows (the acceptance case: 4096x512 at block_rows=256, <=1e-4);
+  * the (1+eps) near-optimality guarantee survives blocking;
+  * the batched vmap path equals a per-slice Python loop, in both the tall
+    and the wide (orientation-swap) layouts;
+  * the streamed sketch accumulation (panel-offset counter RNG) equals the
+    monolithic sketch.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    RSVDConfig,
+    batched_randomized_svd,
+    blocked_randomized_svd,
+    low_rank_error,
+    randomized_svd,
+    streamed_sketch,
+    truncation_error,
+)
+from repro.core.spectra import make_test_matrix
+from repro.kernels import ref
+
+
+def _recon(U, S, Vt):
+    return np.asarray((U * S[None, :]) @ Vt)
+
+
+def _rel_fro(X, Y, A):
+    return float(np.linalg.norm(X - Y) / np.linalg.norm(np.asarray(A)))
+
+
+# ---------------------------------------------------------------------------
+# (a) blocked == unblocked across block sizes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("block_rows", [100, 128, 512])  # 100 non-dividing
+def test_blocked_matches_dense(block_rows):
+    A, _ = make_test_matrix(512, 96, "fast", seed=1)
+    k = 12
+    U0, S0, Vt0 = randomized_svd(A, k)
+    U1, S1, Vt1 = blocked_randomized_svd(A, k, seed=0, block_rows=block_rows)
+    assert U1.shape == (512, k) and S1.shape == (k,) and Vt1.shape == (k, 96)
+    assert _rel_fro(_recon(U0, S0, Vt0), _recon(U1, S1, Vt1), A) <= 1e-4
+    np.testing.assert_allclose(np.asarray(S1), np.asarray(S0), rtol=1e-4)
+
+
+def test_blocked_acceptance_4096x512():
+    """The PR acceptance case: block_rows=256 on 4096x512, <=1e-4 rel Fro."""
+    A, _ = make_test_matrix(4096, 512, "fast", seed=2)
+    k = 16
+    cfg = RSVDConfig(power_iters=1, qr_method="cqr2")  # same cfg on both paths
+    U0, S0, Vt0 = randomized_svd(A, k, cfg)
+    U1, S1, Vt1 = blocked_randomized_svd(A, k, cfg, seed=0, block_rows=256)
+    assert _rel_fro(_recon(U0, S0, Vt0), _recon(U1, S1, Vt1), A) <= 1e-4
+
+
+def test_blocked_accepts_host_numpy_and_cfg_dispatch():
+    """Out-of-core shape: a host numpy array through the RSVDConfig dispatch."""
+    A_host = np.asarray(make_test_matrix(256, 64, "fast", seed=3)[0])
+    cfg = RSVDConfig.streaming(block_rows=128)
+    U, S, Vt = randomized_svd(A_host, 8, cfg)
+    U2, S2, Vt2 = blocked_randomized_svd(A_host, 8, cfg, seed=0)
+    np.testing.assert_array_equal(np.asarray(S), np.asarray(S2))
+    err = float(low_rank_error(jnp.asarray(A_host), U, S, Vt))
+    assert err < 0.2
+
+
+# ---------------------------------------------------------------------------
+# (b) near-optimality on decaying spectra
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["fast", "sharp"])
+def test_blocked_near_optimal_error(kind):
+    A, sig = make_test_matrix(384, 96, kind, seed=4)
+    k = 16
+    cfg = RSVDConfig.streaming(block_rows=100)  # non-dividing on purpose
+    U, S, Vt = blocked_randomized_svd(A, k, cfg, seed=0)
+    err = float(low_rank_error(A, U, S, Vt))
+    opt = float(truncation_error(sig, k))
+    assert err <= 1.10 * opt + 1e-6, (err, opt)
+
+
+def test_blocked_wide_matrix_orientation_swap():
+    """m < n streams the taller side of A^T; factors keep the A orientation."""
+    A, _ = make_test_matrix(256, 64, "fast", seed=5)
+    At = A.T  # 64 x 256 wide
+    U, S, Vt = blocked_randomized_svd(At, 10, seed=0, block_rows=96)
+    assert U.shape == (64, 10) and Vt.shape == (10, 256)
+    err = float(low_rank_error(At, U, S, Vt))
+    S_dense = jnp.linalg.svd(At, compute_uv=False)
+    assert err <= 1.10 * float(truncation_error(S_dense, 10)) + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# (c) batched path == Python loop; wide batched
+# ---------------------------------------------------------------------------
+
+def _stack(B, m, n, kind="fast"):
+    return jnp.stack([make_test_matrix(m, n, kind, seed=10 + i)[0] for i in range(B)])
+
+
+def test_batched_matches_python_loop():
+    A = _stack(4, 96, 48)
+    k, seed = 8, 5
+    Ub, Sb, Vtb = batched_randomized_svd(A, k, seed=seed)
+    for i in range(A.shape[0]):
+        # slice i sketches with seed + i — the loop equivalent
+        Ui, Si, Vti = randomized_svd(A[i], k, seed=seed + i)
+        np.testing.assert_allclose(np.asarray(Sb[i]), np.asarray(Si), rtol=2e-5)
+        np.testing.assert_allclose(
+            _recon(Ub[i], Sb[i], Vtb[i]), _recon(Ui, Si, Vti), atol=2e-4
+        )
+
+
+def test_batched_wide_matches_loop():
+    A = _stack(3, 40, 120)  # m < n: orientation swap inside the batch
+    k = 6
+    Ub, Sb, Vtb = batched_randomized_svd(A, k, seed=2)
+    assert Ub.shape == (3, 40, k) and Vtb.shape == (3, k, 120)
+    for i in range(3):
+        Ui, Si, Vti = randomized_svd(A[i], k, seed=2 + i)
+        np.testing.assert_allclose(np.asarray(Sb[i]), np.asarray(Si), rtol=2e-5)
+        np.testing.assert_allclose(
+            _recon(Ub[i], Sb[i], Vtb[i]), _recon(Ui, Si, Vti), atol=2e-4
+        )
+
+
+def test_three_d_input_dispatches_to_batched():
+    A = _stack(2, 64, 32)
+    U3, S3, Vt3 = randomized_svd(A, 4, seed=9)     # dispatcher
+    Ub, Sb, Vtb = batched_randomized_svd(A, 4, seed=9)
+    np.testing.assert_array_equal(np.asarray(S3), np.asarray(Sb))
+    np.testing.assert_array_equal(np.asarray(U3), np.asarray(Ub))
+
+
+def test_batched_rejects_2d():
+    with pytest.raises(ValueError):
+        batched_randomized_svd(jnp.zeros((8, 4)), 2)
+
+
+# ---------------------------------------------------------------------------
+# (d) streamed sketch accumulation == monolithic sketch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["gaussian", "rademacher"])
+@pytest.mark.parametrize("fused", [False, True])
+def test_streamed_sketch_matches_monolithic(kind, fused):
+    A, _ = make_test_matrix(64, 96, "fast", seed=6)
+    # block_cols=40 leaves a ragged 16-wide last panel on purpose
+    got = streamed_sketch(A, 17, seed=3, kind=kind, block_cols=40, fused=fused)
+    want = ref.sketch_matmul_ref(A, 17, seed=3, kind=kind)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4, rtol=2e-4)

@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.eigh_jacobi import jacobi_eigh, svd_via_gram
 from repro.core.sketch import sketch_matrix
@@ -13,7 +13,9 @@ def _sym(n, seed, scale=1.0):
     return jnp.asarray((G + G.T) / 2 * scale)
 
 
-@pytest.mark.parametrize("n", [2, 3, 8, 17, 32, 64])
+@pytest.mark.parametrize(
+    "n", [2, 3, 8, 17, 32, pytest.param(64, marks=pytest.mark.slow)]
+)
 def test_matches_eigh(n):
     A = _sym(n, seed=n)
     w, V = jacobi_eigh(A)

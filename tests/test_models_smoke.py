@@ -21,6 +21,14 @@ SMOKE_SHAPE = ShapeConfig("smoke", seq_len=64, global_batch=2, kind="train")
 
 ALL_ARCHS = sorted(ARCHS)
 
+# Tier-1 runs one cheap representative arch; the full per-arch sweep (each
+# train step costs 5-15s of CPU compile) is slow-marked for the nightly lane.
+FAST_ARCHS = {"llama3.2-1b"}
+ARCH_PARAMS = [
+    n if n in FAST_ARCHS else pytest.param(n, marks=pytest.mark.slow)
+    for n in ALL_ARCHS
+]
+
 
 def _setup(name):
     cfg = get_config(name).reduced()
@@ -31,7 +39,7 @@ def _setup(name):
     return cfg, params, batch
 
 
-@pytest.mark.parametrize("name", ALL_ARCHS)
+@pytest.mark.parametrize("name", ARCH_PARAMS)
 def test_forward_shapes_and_finite(name):
     cfg, params, batch = _setup(name)
     logits, aux = forward_model(params, batch, cfg, mode="train")
@@ -42,7 +50,7 @@ def test_forward_shapes_and_finite(name):
     assert count_params(params) > 0
 
 
-@pytest.mark.parametrize("name", ALL_ARCHS)
+@pytest.mark.parametrize("name", ARCH_PARAMS)
 def test_train_step_reduces_loss_and_finite(name):
     cfg, params, batch = _setup(name)
     opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10, clip_norm=1.0)
@@ -61,6 +69,7 @@ def test_train_step_reduces_loss_and_finite(name):
         assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32)))), "non-finite param"
 
 
+@pytest.mark.slow
 def test_param_counts_full_configs():
     """Full (non-reduced) configs must land near their advertised sizes.
 

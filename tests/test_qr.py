@@ -3,8 +3,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
+from repro.compat import enable_x64
 from repro.core import qr as qr_mod
 from repro.core.sketch import sketch_matrix
 
@@ -43,7 +44,7 @@ def test_cqr2_beats_cqr_on_moderate_condition():
 
 def test_cqr3_survives_ill_conditioning():
     """Shifted CQR3 stays orthonormal where plain CQR's Cholesky breaks."""
-    with jax.enable_x64(True):
+    with enable_x64():
         Y = _cond_matrix(500, 20, cond=1e9).astype(jnp.float64)
         Q = qr_mod.orthonormalize(Y, "cqr3")
         err = np.abs(np.asarray(Q.T @ Q) - np.eye(20)).max()

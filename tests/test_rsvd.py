@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import enable_x64
 from repro.core import (
     RSVDConfig,
     low_rank_error,
@@ -33,7 +34,7 @@ def test_near_optimal_error_fast_path(kind):
 def test_faithful_path_f64(kind):
     """Paper's Algorithm 1 verbatim, in float64 as the paper's dgesvd setting;
     reproduces the <=1e-8 relative-error-vs-GESVD claim on decaying spectra."""
-    with jax.enable_x64(True):
+    with enable_x64():
         A, sig = make_test_matrix(300, 200, kind, seed=2, dtype=jnp.float64)
         k = 20
         # Paper §4: "we kept the relative error on the limit of at most 1e-8"
@@ -90,7 +91,7 @@ def test_deterministic_given_seed():
 
 def test_lanczos_baseline_agrees():
     """The SVDS baseline must agree with dense SVD (fair comparison check)."""
-    with jax.enable_x64(True):
+    with enable_x64():
         A, _ = make_test_matrix(200, 120, "fast", seed=8, dtype=jnp.float64)
         U, S, Vt = lanczos_svd(A, 10, extra=20)
         S_dense = jnp.linalg.svd(A, compute_uv=False)[:10]

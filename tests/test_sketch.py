@@ -3,7 +3,7 @@ the paper's 'fast parallel RNG' pillar, TPU edition."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.sketch import (
     hash_u32,

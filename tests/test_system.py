@@ -20,6 +20,9 @@ from repro.train.trainer import Trainer, TrainerConfig
 
 SHAPE = ShapeConfig("e2e", seq_len=64, global_batch=4, kind="train")
 
+# Full train->checkpoint->restore->compress->serve chain: minutes of CPU work.
+pytestmark = pytest.mark.slow
+
 
 def test_end_to_end_train_checkpoint_serve(tmp_path):
     cfg = dataclasses.replace(get_config("llama3.2-1b").reduced(), attn_chunk=32)
