@@ -81,6 +81,34 @@ def batch_count_sweep(counts=(1, 4, 16), m=128, n=64, k=8):
     return rows
 
 
+def kernel_block_autotune(m=512, k=512, n=256):
+    """Sweep (bm, bn, bk) for the matmul kernel and record the winner in the
+    autotune cache (persisted iff $REPRO_AUTOTUNE_CACHE is set); ops.matmul
+    consults the cache at trace time for every shape in the same bucket."""
+    import jax.numpy as jnp
+
+    from repro.kernels import autotune as at
+    from repro.kernels.matmul import matmul_padded
+
+    a = sketch_matrix(m, k, 0)
+    b = sketch_matrix(k, n, 1)
+
+    def run_cand(blocks):
+        pad = lambda x, ms: jnp.pad(x, [(0, (-d) % mm) for d, mm in zip(x.shape, ms)])
+        return matmul_padded(
+            pad(a, (blocks.bm, blocks.bk)), pad(b, (blocks.bk, blocks.bn)),
+            bm=blocks.bm, bn=blocks.bn, bk=blocks.bk, interpret=True,
+        )
+
+    best = at.autotune(
+        "matmul", run_cand, (m, n, k), "float32", "interpret",
+        candidates=((128, 128, 128), (256, 128, 128), (128, 128, 256)),
+    )
+    path = at.save()
+    return [dict(name=f"autotune_matmul_{m}x{k}x{n}", us=0.0,
+                 derived=f"best{best.astuple()};cache{path or 'in-memory'}")]
+
+
 def run():
     rows = []
     # traffic model at the paper's scales
@@ -93,6 +121,7 @@ def run():
         )
     rows += block_size_sweep()
     rows += batch_count_sweep()
+    rows += kernel_block_autotune()
     # interpret-mode sanity timings (NOT TPU performance — correctness proxy)
     a = sketch_matrix(512, 512, 0)
     b = sketch_matrix(512, 256, 1)

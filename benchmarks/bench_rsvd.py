@@ -1,0 +1,132 @@
+"""rSVD variant benchmark + the analytic HBM-traffic model, persisted.
+
+Emits ``BENCH_rsvd.json`` (cwd, or --out PATH): per-variant wall time on the
+current backend (CPU-container numbers are interpret-mode correctness
+proxies, NOT TPU performance) plus the structural HBM-traffic model that the
+fused one-pass range finder is built on — the perf trajectory the ROADMAP's
+"fast as the hardware allows" is measured against.  EXPERIMENTS.md records
+the history.
+
+Traffic model (fp32 words, per stabilized power iteration, A is m x n with
+sketch width s; reads+writes of every operand, Grams/TRSMs included):
+
+  unfused:  Z = AᵀQ and Y' = A·Qz are separate GEMMs  -> A read TWICE
+            + CQR2 of Y reads Y twice and round-trips Q1/Q
+  fused:    kernels/power_step.py reads A ONCE, returns (Y, W=AᵀY, G=YᵀY);
+            Z = W R⁻¹ is a sketch-width TRSM, G kills CQR's first pass
+
+so bytes/iter drop from ~2mn + 8ms + 8ns to ~mn + 4ms + 10ns — asymptotically
+2x, and >= 1.5x at every paper benchmark shape (asserted in the smoke lane).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def hbm_bytes_per_power_iter(m: int, n: int, s: int, fused: bool, dtype_bytes: int = 4) -> int:
+    """Analytic HBM traffic of ONE stabilized power iteration (see module doc)."""
+    if fused:
+        # power_step: read A + read Qz + write Y + write W (G is s x s, ~0)
+        kernel = m * n + n * s + m * s + n * s
+        # CQR2 with free first Gram: TRSM(Y)->Q1 (read Y, write Q1), gram(Q1)
+        cqr = 3 * m * s
+        # Z = W R^-1 (read W, write Z) + orthonormalize(Z) ~ CQR2 on n x s
+        small = 2 * n * s + 6 * n * s
+        return (kernel + cqr + small) * dtype_bytes
+    # Z = A^T Q (read A, read Q, write Z) + Y' = A Qz (read A, read Qz, write Y)
+    gemms = (m * n + m * s + n * s) + (m * n + n * s + m * s)
+    # CQR2 of Y: gram(Y) + TRSM(Y)->Q1 + gram(Q1) + TRSM(Q1)->Q
+    cqr = 6 * m * s
+    small = 6 * n * s  # orthonormalize(Z)
+    return (gemms + cqr + small) * dtype_bytes
+
+
+def traffic_rows(shapes=((2000, 2000, 100), (8192, 8192, 256), (65536, 4096, 128))):
+    rows = []
+    for m, n, s in shapes:
+        unfused = hbm_bytes_per_power_iter(m, n, s, fused=False)
+        fused = hbm_bytes_per_power_iter(m, n, s, fused=True)
+        rows.append(
+            dict(m=m, n=n, s=s, unfused_bytes_per_iter=unfused,
+                 fused_bytes_per_iter=fused, saving=round(unfused / fused, 3))
+        )
+    return rows
+
+
+def _time(fn, *args, reps=1):
+    jax.block_until_ready(fn(*args))  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def variant_rows(m=512, n=256, k=16):
+    from repro.core.rsvd import RSVDConfig, _use_fused_power, randomized_svd
+    from repro.core.spectra import make_test_matrix
+
+    A, _ = make_test_matrix(m, n, "fast", seed=0)
+    variants = [
+        ("faithful", RSVDConfig.faithful()),
+        ("cqr2_unfused", RSVDConfig(power_scheme="stabilized", qr_method="cqr2",
+                                    small_svd="gram_jacobi")),
+        ("fast_fused", RSVDConfig.fast()),
+    ]
+    rows = []
+    for name, cfg in variants:
+        t = _time(lambda a, c=cfg: randomized_svd(a, k, c), A)
+        q = cfg.power_iters
+        # fused (when it actually DISPATCHES at this shape/dtype — the VMEM
+        # guard or f64 can veto the flag): sketch_power emits W=AᵀY, each
+        # iteration reads A once, and the final projection reuses the last
+        # W.  unfused: sketch + two reads per iteration + final B = QᵀA.
+        s = min(k + cfg.oversample, min(m, n))
+        fused = _use_fused_power(A, cfg, s)
+        rows.append(
+            dict(name=name, m=m, n=n, k=k, wall_s=round(t, 4),
+                 reads_of_A=(1 + q) if fused else (2 * q + 2),
+                 backend=jax.default_backend())
+        )
+    return rows
+
+
+def build_report(smoke: bool = False) -> dict:
+    report = {
+        "schema": "bench_rsvd/v1",
+        "backend": jax.default_backend(),
+        "interpret_mode": jax.default_backend() != "tpu",
+        "traffic_model_per_power_iter": traffic_rows(),
+        "variants": variant_rows(*((128, 64, 8) if smoke else (512, 256, 16))),
+    }
+    for row in report["traffic_model_per_power_iter"]:
+        assert row["saving"] >= 1.5, (
+            f"fused power step must save >=1.5x HBM bytes/iter, got {row}")
+    return report
+
+
+def main(out_path: str = "BENCH_rsvd.json", smoke: bool = False) -> None:
+    report = build_report(smoke=smoke)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1)
+    for row in report["traffic_model_per_power_iter"]:
+        print(f"rsvd_traffic_m{row['m']}_n{row['n']}_s{row['s']},0,"
+              f"saving{row['saving']}x")
+    for row in report["variants"]:
+        print(f"rsvd_variant_{row['name']},{row['wall_s'] * 1e6:.0f},"
+              f"readsA{row['reads_of_A']}")
+    print(f"# wrote {out_path}")
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--out", default="BENCH_rsvd.json")
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny shapes for the CI interpret-mode smoke lane")
+    args = p.parse_args()
+    main(args.out, smoke=args.smoke)

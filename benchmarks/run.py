@@ -5,6 +5,7 @@
   bench_pca       -> Fig 1    (PCA at increasing image resolution)
   bench_sumc      -> Table 1  (SuMC subspace clustering, solver swap)
   bench_kernels   -> kernel microbenches + fused-sketch HBM-traffic model
+  bench_rsvd      -> rSVD variants + fused-power traffic model -> BENCH_rsvd.json
   roofline_report -> §Roofline terms from the dry-run artifacts
 """
 import pathlib
@@ -17,14 +18,15 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
 
 def main() -> None:
-    from benchmarks import bench_kernels, bench_pca, bench_spectra, bench_sumc
-    from benchmarks import roofline_report
+    from benchmarks import bench_kernels, bench_pca, bench_rsvd, bench_spectra
+    from benchmarks import bench_sumc, roofline_report
 
     modules = [
         ("spectra", bench_spectra),
         ("pca", bench_pca),
         ("sumc", bench_sumc),
         ("kernels", bench_kernels),
+        ("rsvd", bench_rsvd),
         ("roofline", roofline_report),
     ]
     failures = 0

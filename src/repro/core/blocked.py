@@ -105,21 +105,31 @@ def streamed_sketch(
 # Blocked CholeskyQR2 — the panel-sum twin of the distributed Gram all-reduce
 # ---------------------------------------------------------------------------
 
-def _blocked_cholesky_qr(Y_panels: Sequence[jax.Array]):
-    """One CholeskyQR pass over a row-panel-split Y. Returns (Q_panels, R)."""
-    G = functools.reduce(jnp.add, [Yp.T @ Yp for Yp in Y_panels])
-    R = qr_mod.cholesky_r_from_gram(G)
+def _blocked_cholesky_qr(Y_panels: Sequence[jax.Array], G: jax.Array | None = None):
+    """One CholeskyQR pass over a row-panel-split Y. Returns (Q_panels, R).
+
+    The per-panel Gram and the R⁻¹ application go through the active kernel
+    backend (qr.kernel_backend): "pallas" routes them to the SYRK and TRSM
+    kernels, exactly as the dense and distributed paths do.  ``G`` lets the
+    caller pass an already-reduced Gram (the sketch_gram epilogue) so the
+    first pass skips re-reading every panel."""
+    dtype = Y_panels[0].dtype
+    if G is None:
+        G = functools.reduce(jnp.add, [qr_mod.gram(Yp) for Yp in Y_panels])
+    # Factor and solve at >= fp32 (LAPACK has no bf16 Cholesky/TRSM), then
+    # cast Q back so the panel dtype — and the assembled U — is preserved.
+    fdtype = jnp.promote_types(dtype, jnp.float32)
+    R = qr_mod.cholesky_r_from_gram(G.astype(fdtype))
     Q_panels = [
-        jax.scipy.linalg.solve_triangular(R.T, Yp.T, lower=True).T
-        for Yp in Y_panels
+        qr_mod.tri_solve_right(Yp.astype(fdtype), R).astype(dtype) for Yp in Y_panels
     ]
     return Q_panels, R
 
 
-def _blocked_cholesky_qr2(Y_panels: Sequence[jax.Array]):
+def _blocked_cholesky_qr2(Y_panels: Sequence[jax.Array], G1: jax.Array | None = None):
     """CholeskyQR2 on panels: O(eps) orthogonality for kappa(Y) <~ eps^-1/2,
     touching each panel twice and reducing only s x s Grams."""
-    Q1, R1 = _blocked_cholesky_qr(Y_panels)
+    Q1, R1 = _blocked_cholesky_qr(Y_panels, G1)
     Q, R2 = _blocked_cholesky_qr(Q1)
     return Q, R2 @ R1
 
@@ -159,15 +169,36 @@ def blocked_randomized_svd(
     bounds = _panel_bounds(m, b)
     panels = lambda: (_device(A[lo:hi]) for lo, hi in bounds)
 
+    with qr_mod.kernel_backend(cfg.kernel_backend):
+        return _blocked_body(panels, k, s, cfg, seed, _device(A[:1, :1]).dtype)
+
+
+def _blocked_body(panels, k: int, s: int, cfg: RSVDConfig, seed, dtype):
+    """Steps 1-6 over the panel generator, under the active kernel backend."""
     # Step 1-2a: per-panel sketch.  Omega is n x s regenerated per panel from
-    # the counter RNG — identical for every panel, no broadcast state.
-    Y = [
-        streamed_sketch(
-            Ap, s, seed, cfg.sketch_kind,
-            block_cols=cfg.block_cols, fused=cfg.fused_sketch,
-        )
-        for Ap in panels()
-    ]
+    # the counter RNG — identical for every panel, no broadcast state.  The
+    # fused whole-panel sketch rides the Gram epilogue: each panel's
+    # contribution to G = YᵀY is accumulated while Y_p is produced, so the
+    # first CQR2 pass below never re-reads Y.  (Column-paneled sketches
+    # accumulate Y_p across block_cols calls, so no per-call Gram exists;
+    # f64 — the faithful enable_x64 setting — stays on the jnp sketch, like
+    # the dense path's guard.)
+    G1 = None
+    if cfg.fused_sketch and not cfg.block_cols and dtype != jnp.float64:
+        from repro.kernels.ops import sketch_gram
+
+        pairs = [sketch_gram(Ap, s, seed, kind=cfg.sketch_kind) for Ap in panels()]
+        Y = [y for y, _ in pairs]
+        G1 = functools.reduce(jnp.add, [g for _, g in pairs])
+    else:
+        Y = [
+            streamed_sketch(
+                Ap, s, seed, cfg.sketch_kind,
+                block_cols=cfg.block_cols,
+                fused=cfg.fused_sketch and dtype != jnp.float64,
+            )
+            for Ap in panels()
+        ]
 
     # Step 2: power iteration through the n x s accumulator Z.
     for _ in range(cfg.power_iters):
@@ -177,15 +208,16 @@ def blocked_randomized_svd(
             )
             Y = [Ap @ Z for Ap in panels()]
         else:
-            Q, _ = _blocked_cholesky_qr2(Y)
+            Q, _ = _blocked_cholesky_qr2(Y, G1)
             Z = functools.reduce(
                 jnp.add, [Ap.T @ Qp for Ap, Qp in zip(panels(), Q)]
             )
             Qz = qr_mod.orthonormalize(Z, cfg.qr_method)  # n x s, fits
             Y = [Ap @ Qz for Ap in panels()]
+        G1 = None  # Y was replaced; the sketch-pass Gram no longer matches
 
     # Step 3: orthonormal range basis, panel-split.
-    Q, _ = _blocked_cholesky_qr2(Y)
+    Q, _ = _blocked_cholesky_qr2(Y, G1)
 
     # Step 4: B = Q^T A through the s x n accumulator.
     B = functools.reduce(jnp.add, [Qp.T @ Ap for Ap, Qp in zip(panels(), Q)])
@@ -211,7 +243,8 @@ def blocked_randomized_eigvals(
 
 @functools.partial(jax.jit, static_argnames=("k", "cfg"))
 def _batched_tall(A: jax.Array, seeds: jax.Array, k: int, cfg: RSVDConfig):
-    return jax.vmap(lambda a, sd: _rsvd_body(a, k, cfg, sd))(A, seeds)
+    with qr_mod.kernel_backend(cfg.kernel_backend):
+        return jax.vmap(lambda a, sd: _rsvd_body(a, k, cfg, sd))(A, seeds)
 
 
 def batched_randomized_svd(
@@ -229,9 +262,11 @@ def batched_randomized_svd(
     logical stream, so batching changes nothing statistically vs. a Python
     loop with per-matrix seeds.
 
-    The fused-sketch Pallas kernel bakes its seed into the compiled program
-    (static), so the batched path always uses the materialized-Omega sketch;
-    at batched (small-matrix) sizes the sketch GEMM is not the bottleneck.
+    The fused-sketch kernel takes its seed as a traced SMEM scalar, so the
+    per-slice seeds vmap straight through it — the batched path uses the
+    in-VMEM Omega generation like the dense path does.  The fused POWER
+    path is disabled under vmap (its n x s VMEM accumulators would be
+    per-slice); at batched (small-matrix) sizes power GEMMs are cheap.
     """
     if A.ndim != 3:
         raise ValueError(f"batched path expects [B, m, n], got shape {A.shape}")
@@ -239,7 +274,7 @@ def batched_randomized_svd(
     if m < n:
         V, S, Ut = batched_randomized_svd(jnp.swapaxes(A, -1, -2), k, cfg, seed=seed)
         return jnp.swapaxes(Ut, -1, -2), S, jnp.swapaxes(V, -1, -2)
-    if cfg.fused_sketch or cfg.block_rows:
-        cfg = dataclasses.replace(cfg, fused_sketch=False, block_rows=None)
+    if cfg.fused_power or cfg.block_rows:
+        cfg = dataclasses.replace(cfg, fused_power=False, block_rows=None)
     seeds = jnp.uint32(seed) + jnp.arange(A.shape[0], dtype=jnp.uint32)
     return _batched_tall(A, seeds, k, cfg)

@@ -42,11 +42,14 @@ def _dist_cholesky_qr(Y: jax.Array, axis: str, shift: float = 0.0):
 
     Identical to the single-device and blocked (core/blocked.py) passes
     except for how the Gram matrix is reduced: psum here, a panel sum there —
-    all three factor the reduced Gram via `qr.cholesky_r_from_gram`.
+    all three factor the reduced Gram via `qr.cholesky_r_from_gram`, and all
+    three route the local Gram (SYRK) and the R⁻¹ application (TRSM) through
+    the active kernel backend (qr.kernel_backend): with "pallas" the
+    per-shard work runs on the same kernels as the dense path.
     """
-    G = jax.lax.psum(Y.T @ Y, axis)
+    G = jax.lax.psum(qr_mod.gram(Y), axis)
     R = qr_mod.cholesky_r_from_gram(G, shift)
-    Q = jax.scipy.linalg.solve_triangular(R.T, Y.T, lower=True).T
+    Q = qr_mod.tri_solve_right(Y, R)
     return Q, R
 
 
@@ -119,8 +122,14 @@ def distributed_randomized_svd(
         mesh=mesh,
         in_specs=P(axis, None),
         out_specs=(P(axis, None), P(), P()),
+        # pallas_call has no replication rule, so the per-shard kernel route
+        # needs the VMA/replication check off; the collectives are unchanged.
+        check_vma=(False if cfg.kernel_backend == "pallas" else None),
     )
-    return jax.jit(f)(A)
+    # Backend choice is trace-time state; the context must be live while the
+    # shard_map body traces (the first jit call below).
+    with qr_mod.kernel_backend(cfg.kernel_backend):
+        return jax.jit(f)(A)
 
 
 def collective_bytes_estimate(n: int, k: int, cfg: RSVDConfig, dtype_bytes: int = 4) -> int:

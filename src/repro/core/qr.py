@@ -20,6 +20,7 @@ positivity.
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Literal, Tuple
 
 import jax
@@ -27,17 +28,76 @@ import jax.numpy as jnp
 
 QRMethod = Literal["householder", "cqr", "cqr2", "cqr3"]
 
+KernelBackend = Literal["jnp", "pallas"]
 
-def _gram(Y: jax.Array) -> jax.Array:
-    """G = Y^T Y with fp32/64 accumulation (the gram Pallas kernel mirrors this)."""
+# ---------------------------------------------------------------------------
+# Pluggable kernel backend for the CholeskyQR primitives (Gram + TRSM).
+#
+# The CholeskyQR family reduces to exactly two large-matrix primitives —
+# G = YᵀY (SYRK) and Q = Y R⁻¹ (TRSM) — shared by the dense (core/rsvd.py),
+# blocked (core/blocked.py), and distributed (core/distributed.py) paths.
+# `kernel_backend("pallas")` routes both through the Pallas kernels
+# (kernels/gram.py, kernels/trsm.py); the default "jnp" uses plain XLA ops.
+# The flag is read at TRACE time (a Python contextvar-style module global),
+# so it composes with jit / vmap / shard_map: whichever backend is active
+# while a program is being traced is baked into that program.
+#
+# float64 inputs always take the jnp path — the Pallas kernels accumulate in
+# fp32, which would silently downgrade the paper's f64 faithful setting.
+# ---------------------------------------------------------------------------
+
+_active_backend: KernelBackend = "jnp"
+
+
+@contextlib.contextmanager
+def kernel_backend(name: KernelBackend):
+    """Trace-time scope: route Gram/TRSM through the named backend."""
+    global _active_backend
+    if name not in ("jnp", "pallas"):
+        raise ValueError(f"unknown kernel backend: {name}")
+    prev = _active_backend
+    _active_backend = name
+    try:
+        yield
+    finally:
+        _active_backend = prev
+
+
+def active_kernel_backend() -> KernelBackend:
+    return _active_backend
+
+
+def _use_pallas(Y: jax.Array) -> bool:
+    return _active_backend == "pallas" and Y.dtype != jnp.float64
+
+
+def gram(Y: jax.Array) -> jax.Array:
+    """G = Y^T Y through the active kernel backend.
+
+    The Pallas route computes the upper block triangle on the MXU (SYRK
+    saving) and accumulates fp32; the jnp route is a plain GEMM in the
+    input precision (f64 under enable_x64 — the faithful setting)."""
+    if _use_pallas(Y):
+        from repro.kernels.ops import gram as _pallas_gram
+
+        return _pallas_gram(Y, out_dtype=Y.dtype)
     return Y.T @ Y
 
 
-def _tri_solve_right(Y: jax.Array, R: jax.Array) -> jax.Array:
+def tri_solve_right(Y: jax.Array, R: jax.Array) -> jax.Array:
     """Q = Y R^{-1} for upper-triangular R (a BLAS-3 triangular solve)."""
+    if _use_pallas(Y):
+        from repro.kernels.ops import tri_solve_right as _pallas_trsm
+
+        return _pallas_trsm(Y, R.astype(Y.dtype))
     # Solve R^T X^T = Y^T  (lower-triangular, many RHS), then transpose.
     Qt = jax.scipy.linalg.solve_triangular(R.T, Y.T, lower=True)
     return Qt.T
+
+
+# Backwards-compatible private aliases (pre-backend names).
+_gram = gram
+_tri_solve_right = tri_solve_right
 
 
 def cholesky_r_from_gram(G: jax.Array, shift: jax.Array | float = 0.0) -> jax.Array:
@@ -70,8 +130,8 @@ def cholesky_qr(Y: jax.Array, shift: jax.Array | float = 0.0) -> Tuple[jax.Array
     """Single-pass CholeskyQR (optionally shifted). Returns (Q, R).
 
     See `cholesky_r_from_gram` for the floor-shift contract."""
-    R = cholesky_r_from_gram(_gram(Y), shift)
-    Q = _tri_solve_right(Y, R)
+    R = cholesky_r_from_gram(gram(Y), shift)
+    Q = tri_solve_right(Y, R)
     return Q, R
 
 

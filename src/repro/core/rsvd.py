@@ -71,6 +71,8 @@ class RSVDConfig:
     small_svd: SmallSVD = "lapack"
     sketch_kind: sketch_mod.SketchKind = "gaussian"
     fused_sketch: bool = False    # Pallas fused RNG+GEMM (TPU fast path)
+    fused_power: bool = False     # one-pass Aᵀ(A·X) power step (EXPERIMENTS.md)
+    kernel_backend: str = "jnp"   # "pallas" routes CQR Gram+TRSM through kernels
     block_rows: int | None = None  # panel-stream the tall dimension
     block_cols: int | None = None  # panel-stream the sketch reduction
     batched: bool = False          # vmap over a leading batch dimension
@@ -81,12 +83,16 @@ class RSVDConfig:
 
     @staticmethod
     def fast() -> "RSVDConfig":
-        """The TPU-optimized configuration (beyond-paper)."""
+        """The TPU-optimized configuration (beyond-paper): CholeskyQR2 with
+        Pallas-backed Gram + TRSM, the in-VMEM RNG sketch fused with its
+        first Gram, and the one-pass-per-iteration fused power step."""
         return RSVDConfig(
             power_scheme="stabilized",
             qr_method="cqr2",
             small_svd="gram_jacobi",
             fused_sketch=True,
+            fused_power=True,
+            kernel_backend="pallas",
         )
 
     @staticmethod
@@ -112,9 +118,11 @@ def _small_svd(B: jax.Array, method: SmallSVD):
     raise ValueError(f"unknown small_svd: {method}")
 
 
-def _sketch(A: jax.Array, s: int, seed: int, cfg: RSVDConfig) -> jax.Array:
-    if cfg.fused_sketch:
+def _sketch(A: jax.Array, s: int, seed, cfg: RSVDConfig) -> jax.Array:
+    if cfg.fused_sketch and A.dtype != jnp.float64:
         # Fused RNG+GEMM Pallas kernel — Omega never materialized in HBM.
+        # The seed is a traced SMEM scalar: seed sweeps / GaLore refreshes /
+        # the batched vmap path all reuse one compiled program.
         from repro.kernels.ops import sketch_matmul
 
         return sketch_matmul(A, s, seed, kind=cfg.sketch_kind)
@@ -122,17 +130,119 @@ def _sketch(A: jax.Array, s: int, seed: int, cfg: RSVDConfig) -> jax.Array:
     return A @ omega
 
 
+def _use_fused_power(A: jax.Array, cfg: RSVDConfig, s: int) -> bool:
+    """The one-pass power path needs fp32-accumulating kernels (not the f64
+    faithful setting), a CholeskyQR-family range finder (the Y-side
+    re-orthonormalization is expressed through Gram + TRSM), and a working
+    set — the A strip plus the n x s accumulators — that fits real-TPU
+    VMEM (interpret mode has no limit, but the config path must not select
+    a kernel that cannot compile on hardware; beyond the budget the
+    blocked/streaming and distributed paths are the intended scale-out)."""
+    from repro.kernels.ops import _block, _select_blocks
+    from repro.kernels.power_step import VMEM_BUDGET_BYTES, fused_power_vmem_bytes
+
+    m, n = A.shape
+    # Model the kernel's ACTUAL footprint: the bm the wrapper will select
+    # (autotune cache included) and the padded dims it will allocate.
+    bm = _select_blocks("power_step", (m, n, s), A.dtype)[0]
+    n_pad = n + (-n) % _block(n)
+    s_pad = s + (-s) % _block(s)
+    # cqr3 (shifted, for kappa up to ~1/eps) and single-pass cqr are
+    # deliberately excluded: the fused body hardwires CQR2-style
+    # re-orthonormalization, and a caller asking for a different variant
+    # should get exactly that, unfused.
+    return (
+        cfg.fused_power
+        and A.dtype != jnp.float64
+        and (cfg.power_scheme == "plain" or cfg.qr_method == "cqr2")
+        and fused_power_vmem_bytes(n_pad, s_pad, bm=bm) <= VMEM_BUDGET_BYTES
+    )
+
+
+def _cqr2_factor(Y: jax.Array, G1: jax.Array | None):
+    """CholeskyQR2 of Y reusing an already-accumulated first Gram.
+
+    Returns (Q1, R2, R_tot): Q1 is the first-pass basis, Q = Q1 R2⁻¹ is
+    materialized lazily by callers that actually need it, and R_tot = R2 R1
+    satisfies Y ≈ Q R_tot.  G1 comes for free from the fused kernels'
+    Gram epilogue (sketch_gram / power_step), killing CQR's first pass
+    over Y; when None it is computed through the active kernel backend.
+    """
+    if G1 is None:
+        G1 = qr_mod.gram(Y)
+    R1 = qr_mod.cholesky_r_from_gram(G1.astype(Y.dtype))
+    Q1 = qr_mod.tri_solve_right(Y, R1)
+    R2 = qr_mod.cholesky_r_from_gram(qr_mod.gram(Q1).astype(Y.dtype))
+    return Q1, R2, R2 @ R1
+
+
+def _rsvd_body_fused(
+    A: jax.Array, k: int, cfg: RSVDConfig, seed
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Algorithm 1 with the one-pass range finder (kernels/power_step.py).
+
+    Each stabilized power iteration does exactly ONE read of A: the fused
+    kernel returns Y = A·Qz, W = AᵀY, and G = YᵀY together, and CholeskyQR
+    turns W into the next projection without touching A again —
+    Q = Y R⁻¹  ⇒  AᵀQ = W R⁻¹  (a sketch-width TRSM), and the final
+    projection B = QᵀA = (W R⁻¹)ᵀ falls out of the last W.  The sketch pass
+    itself emits W (sketch_power), so reads of A total 1 + q, vs 2q + 2
+    unfused (two per iteration plus the sketch and the final projection).
+    """
+    from repro.kernels import ops
+
+    m, n = A.shape
+    s = min(k + cfg.oversample, min(m, n))
+
+    if cfg.power_scheme == "plain":
+        # Ablation path: Y = A (AᵀA)^q Ω as a chain of fused steps (each one
+        # read of A), materialized Omega (the plain scheme is the paper's
+        # raw-GEMM ablation, not the production path).
+        omega = sketch_mod.sketch_matrix(n, s, seed, cfg.sketch_kind, dtype=A.dtype)
+        X = omega
+        for _ in range(cfg.power_iters):
+            _, X = ops.power_step(A, X)
+        Y = A @ X
+        Q = qr_mod.orthonormalize(Y, cfg.qr_method)
+        B = Q.T @ A
+        U_b, S, Vt = _small_svd(B, cfg.small_svd)
+        U = Q @ U_b
+        return U[:, :k], S[:k], Vt[:k, :]
+
+    # Stabilized scheme, CholeskyQR-family orthonormalization on the Y side.
+    # The sketch pass already emits W = AᵀY (sketch_power strip layout), so
+    # even the FIRST power iteration closes through a sketch-width TRSM
+    # instead of re-reading A: reads of A = 1 + q exactly.
+    if cfg.fused_sketch:
+        Y, W, G1 = ops.sketch_power(A, s, seed, kind=cfg.sketch_kind)
+    else:
+        omega = sketch_mod.sketch_matrix(n, s, seed, cfg.sketch_kind, dtype=A.dtype)
+        Y, W, G1 = ops.power_step(A, omega, with_gram=True)
+    for _ in range(cfg.power_iters):
+        Q1, R2, R_tot = _cqr2_factor(Y, G1)
+        Z = qr_mod.tri_solve_right(W, R_tot)           # AᵀQ without reading A
+        Qz = qr_mod.orthonormalize(Z, cfg.qr_method)   # n x s, sketch-width
+        Y, W, G1 = ops.power_step(A, Qz, with_gram=True)
+    Q1, R2, R_tot = _cqr2_factor(Y, G1)
+    Q = qr_mod.tri_solve_right(Q1, R2)                 # step 3 basis
+    B = qr_mod.tri_solve_right(W, R_tot).T             # step 4 without reading A
+    U_b, S, Vt = _small_svd(B, cfg.small_svd)          # step 5
+    U = Q @ U_b                                        # step 6
+    return U[:, :k], S[:k], Vt[:k, :]
+
+
 def _rsvd_body(
     A: jax.Array, k: int, cfg: RSVDConfig, seed
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Algorithm 1 steps 1-6 with the range finder on the given orientation.
 
-    ``seed`` may be a *traced* value (the batched path decorrelates sketches
-    per matrix) unless ``cfg.fused_sketch`` — the Pallas kernel bakes the
-    seed into the compiled program.
+    ``seed`` is always traced (the counter RNG takes it as data, in jnp and
+    in the Pallas kernels alike).
     """
     m, n = A.shape
     s = min(k + cfg.oversample, min(m, n))
+    if _use_fused_power(A, cfg, s):
+        return _rsvd_body_fused(A, k, cfg, seed)
     Y = _sketch(A, s, seed, cfg)                       # step 1-2a: A @ Omega
     if cfg.power_iters > 0:
         if cfg.power_scheme == "plain":
@@ -147,36 +257,20 @@ def _rsvd_body(
     return U[:, :k], S[:k], Vt[:k, :]
 
 
-@functools.partial(
-    jax.jit, static_argnames=("k", "cfg", "seed")
-)
-def _randomized_svd_dense(
-    A: jax.Array,
-    k: int,
-    cfg: RSVDConfig = RSVDConfig(),
-    seed: int = 0,
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Single-device in-memory path, static seed (fused kernel requirement)."""
-    m, n = A.shape
-    if m < n:
-        V, S, Ut = _rsvd_body(A.T, k, cfg, seed)
-        return Ut.T, S, V.T
-    return _rsvd_body(A, k, cfg, seed)
-
-
 @functools.partial(jax.jit, static_argnames=("k", "cfg"))
-def _randomized_svd_dense_traced(
+def _randomized_svd_dense(
     A: jax.Array, seed: jax.Array, k: int, cfg: RSVDConfig
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Same path with a TRACED seed: changing the seed (GaLore refreshes,
-    per-slice loops, seed sweeps) reuses the compiled program — the counter
-    RNG takes the seed as data.  Only the fused Pallas sketch needs the
-    static variant (the kernel closure bakes the seed in)."""
-    m, n = A.shape
-    if m < n:
-        V, S, Ut = _rsvd_body(A.T, k, cfg, seed)
-        return Ut.T, S, V.T
-    return _rsvd_body(A, k, cfg, seed)
+    """Single-device in-memory path.  The seed is TRACED: changing it
+    (GaLore refreshes, per-slice loops, seed sweeps) reuses the compiled
+    program — the counter RNG takes the seed as data, including inside the
+    fused Pallas sketch (an SMEM scalar operand)."""
+    with qr_mod.kernel_backend(cfg.kernel_backend):
+        m, n = A.shape
+        if m < n:
+            V, S, Ut = _rsvd_body(A.T, k, cfg, seed)
+            return Ut.T, S, V.T
+        return _rsvd_body(A, k, cfg, seed)
 
 
 def randomized_svd(
@@ -206,9 +300,7 @@ def randomized_svd(
         from repro.core import blocked
 
         return blocked.blocked_randomized_svd(A, k, cfg, seed=seed)
-    if cfg.fused_sketch:
-        return _randomized_svd_dense(A, k, cfg, int(seed))
-    return _randomized_svd_dense_traced(A, jnp.asarray(seed, jnp.uint32), k, cfg)
+    return _randomized_svd_dense(A, jnp.asarray(seed, jnp.uint32), k, cfg)
 
 
 def _stabilized_power(A: jax.Array, Y: jax.Array, cfg: RSVDConfig) -> jax.Array:
@@ -234,37 +326,38 @@ def randomized_eigvals(
         from repro.core import blocked
 
         return blocked.blocked_randomized_eigvals(A, k, cfg, seed=seed)
-    return _randomized_eigvals_dense(A, k, cfg, seed)
+    return _randomized_eigvals_dense(A, jnp.asarray(seed, jnp.uint32), k, cfg)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "cfg", "seed"))
+@functools.partial(jax.jit, static_argnames=("k", "cfg"))
 def _randomized_eigvals_dense(
-    A: jax.Array, k: int, cfg: RSVDConfig = RSVDConfig(), seed: int = 0
+    A: jax.Array, seed, k: int, cfg: RSVDConfig = RSVDConfig()
 ) -> jax.Array:
     m, n = A.shape
     if m < n:
-        return _randomized_eigvals_dense(A.T, k, cfg, seed)
-    s = min(k + cfg.oversample, min(m, n))
-    Y = _sketch(A, s, seed, cfg)
-    if cfg.power_iters > 0:
-        if cfg.power_scheme == "plain":
-            for _ in range(cfg.power_iters):
-                Y = A @ (A.T @ Y)
+        return _randomized_eigvals_dense(A.T, seed, k, cfg)
+    with qr_mod.kernel_backend(cfg.kernel_backend):
+        s = min(k + cfg.oversample, min(m, n))
+        Y = _sketch(A, s, seed, cfg)
+        if cfg.power_iters > 0:
+            if cfg.power_scheme == "plain":
+                for _ in range(cfg.power_iters):
+                    Y = A @ (A.T @ Y)
+            else:
+                Y = _stabilized_power(A, Y, cfg)
+        Q = qr_mod.orthonormalize(Y, cfg.qr_method)
+        B = Q.T @ A
+        if cfg.small_svd == "lapack":
+            S = jnp.linalg.svd(B, compute_uv=False)
         else:
-            Y = _stabilized_power(A, Y, cfg)
-    Q = qr_mod.orthonormalize(Y, cfg.qr_method)
-    B = Q.T @ A
-    if cfg.small_svd == "lapack":
-        S = jnp.linalg.svd(B, compute_uv=False)
-    else:
-        G = B @ B.T
-        if cfg.small_svd == "gram_jacobi":
-            from repro.core.eigh_jacobi import jacobi_eigh
+            G = B @ B.T
+            if cfg.small_svd == "gram_jacobi":
+                from repro.core.eigh_jacobi import jacobi_eigh
 
-            w, _ = jacobi_eigh(G)
-        else:
-            w = jnp.linalg.eigvalsh(G)[::-1]
-        S = jnp.sqrt(jnp.maximum(w, 0.0))
+                w, _ = jacobi_eigh(G)
+            else:
+                w = jnp.linalg.eigvalsh(G)[::-1]
+            S = jnp.sqrt(jnp.maximum(w, 0.0))
     return S[:k]
 
 

@@ -1,0 +1,174 @@
+"""Block-size autotuner for the Pallas kernels.
+
+The kernels historically hard-coded 128 (the MXU-native tile).  That is the
+right default, but the best (bm, bn, bk) depends on shape, dtype, and
+backend (VMEM pressure vs. pipeline depth), so this module provides:
+
+  * a persistent cache: JSON keyed by backend -> kernel -> (shape-bucket,
+    dtype) -> {"bm": ..., "bn": ..., "bk": ...}, loaded lazily and
+    consulted by ops.py on every wrapper call (trace-time, pure Python);
+  * ``autotune(...)``: sweep candidate block sizes for a kernel closure,
+    time each (wall clock, ``block_until_ready``), record the winner.
+
+Shapes are bucketed to the next power of two per dimension so one sweep
+covers a neighborhood of shapes instead of a single point.  Lookups happen
+at jit TRACE time: results recorded after a shape/dtype has already been
+traced do not retroactively retune live executables (run the sweep before
+the hot loop, or clear jax's jit caches).
+
+On the CPU container the kernels run in interpret mode, so recorded timings
+are correctness-proxy numbers; the cache mechanics (bucketing, hit/miss,
+JSON round-trip) are identical on real TPUs, where ``backend='tpu'`` keys a
+separate namespace.  Persistence is OPT-IN: nothing touches the filesystem
+unless a cache path is given (or $REPRO_AUTOTUNE_CACHE is set).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass
+from typing import Callable, Iterable, Sequence
+
+_ENV_VAR = "REPRO_AUTOTUNE_CACHE"
+
+# In-memory table: {backend: {kernel: {bucket_key: {"bm":..,"bn":..,"bk":..}}}}
+_table: dict = {}
+_loaded_from: str | None = None
+
+
+@dataclass(frozen=True)
+class BlockSizes:
+    bm: int
+    bn: int
+    bk: int
+
+    def astuple(self) -> tuple[int, int, int]:
+        return (self.bm, self.bn, self.bk)
+
+
+def shape_bucket(shape: Sequence[int]) -> tuple[int, ...]:
+    """Round each dim up to the next power of two (1 stays 1)."""
+    out = []
+    for d in shape:
+        b = 1
+        while b < d:
+            b *= 2
+        out.append(b)
+    return tuple(out)
+
+
+def _bucket_key(shape: Sequence[int], dtype) -> str:
+    return "x".join(str(d) for d in shape_bucket(shape)) + f"_{str(dtype)}"
+
+
+def cache_path() -> str | None:
+    return os.environ.get(_ENV_VAR) or None
+
+
+def _ensure_loaded(path: str | None = None) -> None:
+    global _loaded_from
+    path = path or cache_path()
+    if path is None or _loaded_from == path:
+        return
+    if os.path.exists(path):
+        with open(path) as f:
+            loaded = json.load(f)
+        for backend, kernels in loaded.items():
+            dst = _table.setdefault(backend, {})
+            for kernel, entries in kernels.items():
+                bucket = dst.setdefault(kernel, {})
+                for key, entry in entries.items():
+                    # In-memory entries win: anything recorded this process
+                    # (a fresh autotune sweep) is newer than the file.
+                    bucket.setdefault(key, entry)
+    _loaded_from = path
+
+
+def save(path: str | None = None) -> str | None:
+    """Persist the table; returns the path written (or None).
+
+    Merges the existing file first (in-memory entries winning) so saving a
+    sweep for one kernel never drops previously persisted entries for
+    other kernels/shapes/backends."""
+    path = path or cache_path()
+    if path is None:
+        return None
+    _ensure_loaded(path)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(_table, f, indent=1, sort_keys=True)
+    return path
+
+
+def clear() -> None:
+    """Drop the in-memory table (tests; does not delete any JSON file)."""
+    global _loaded_from
+    _table.clear()
+    _loaded_from = None
+
+
+def record(
+    kernel: str,
+    shape: Sequence[int],
+    dtype,
+    blocks: BlockSizes,
+    backend: str,
+    us: float | None = None,
+) -> None:
+    entry = {"bm": blocks.bm, "bn": blocks.bn, "bk": blocks.bk}
+    if us is not None:
+        entry["us"] = us
+    _table.setdefault(backend, {}).setdefault(kernel, {})[
+        _bucket_key(shape, dtype)
+    ] = entry
+
+
+def lookup(
+    kernel: str, shape: Sequence[int], dtype, backend: str
+) -> BlockSizes | None:
+    """Tuned block sizes for (kernel, shape-bucket, dtype, backend), or None."""
+    _ensure_loaded()
+    entry = (
+        _table.get(backend, {}).get(kernel, {}).get(_bucket_key(shape, dtype))
+    )
+    if entry is None:
+        return None
+    return BlockSizes(entry["bm"], entry["bn"], entry["bk"])
+
+
+def autotune(
+    kernel: str,
+    run: Callable[[BlockSizes], object],
+    shape: Sequence[int],
+    dtype,
+    backend: str,
+    candidates: Iterable[tuple[int, int, int]] = ((128, 128, 128), (256, 128, 128), (128, 128, 256), (256, 256, 256)),
+    reps: int = 1,
+) -> BlockSizes:
+    """Time ``run(blocks)`` for each candidate, record + return the winner.
+
+    ``run`` must execute the kernel end-to-end and return a jax array (we
+    block on it).  Candidates that raise (e.g. a block size exceeding the
+    padded dim) are skipped; at least one must survive.
+    """
+    import jax
+
+    best, best_t = None, float("inf")
+    for cand in candidates:
+        blocks = BlockSizes(*cand)
+        try:
+            jax.block_until_ready(run(blocks))  # compile + warm
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                out = run(blocks)
+            jax.block_until_ready(out)
+            t = (time.perf_counter() - t0) / reps
+        except Exception:
+            continue
+        if t < best_t:
+            best, best_t = blocks, t
+    if best is None:
+        raise ValueError(f"no candidate block size succeeded for {kernel} {shape}")
+    record(kernel, shape, dtype, best, backend, us=best_t * 1e6)
+    return best

@@ -38,6 +38,21 @@ def _gram_kernel(yl_ref, yr_ref, o_ref, acc_ref, *, nk: int):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _left_index(i, j, kk):
+    # Pruned (j < i) sweeps clamp the reduction index to 0 so the whole
+    # skipped kk sweep maps onto ONE already-resident block: consecutive
+    # grid steps with an unchanged block index issue no DMA, so the lower
+    # triangle costs at most one fetch per (i, j) cell instead of nk.
+    k_eff = jnp.where(j < i, 0, kk)
+    return (k_eff, i)
+
+
+def _right_index(i, j, kk):
+    k_eff = jnp.where(j < i, 0, kk)
+    j_eff = jnp.where(j < i, i, j)  # also pin the column: constant across the skipped prefix j = 0..i-1
+    return (k_eff, j_eff)
+
+
 def gram_padded(
     y: jax.Array,
     *,
@@ -56,9 +71,9 @@ def gram_padded(
         grid=(s // bs, s // bs, nk),
         in_specs=[
             # left operand: block column i of Y (transposed in-kernel)
-            pl.BlockSpec((bk, bs), lambda i, j, kk: (kk, i)),
+            pl.BlockSpec((bk, bs), _left_index),
             # right operand: block column j of Y
-            pl.BlockSpec((bk, bs), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk, bs), _right_index),
         ],
         out_specs=pl.BlockSpec((bs, bs), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((s, s), out_dtype),
@@ -76,7 +91,7 @@ def symmetrize_upper(upper: jax.Array, bs: int = 128) -> jax.Array:
     block-diagonal part (counted twice by U + U^T).
     """
     s = upper.shape[0]
-    nb = s // bs
-    eye_blocks = jnp.kron(jnp.eye(nb, dtype=upper.dtype), jnp.ones((bs, bs), upper.dtype))
-    block_diag = upper * eye_blocks
+    blk = jnp.arange(s) // bs
+    block_diag_mask = blk[:, None] == blk[None, :]
+    block_diag = jnp.where(block_diag_mask, upper, jnp.zeros((), upper.dtype))
     return upper + upper.T - block_diag

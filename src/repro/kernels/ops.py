@@ -10,10 +10,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import autotune as _at
 from repro.kernels import flash_attention as _fa
 from repro.kernels import gram as _gram
 from repro.kernels import matmul as _mm
+from repro.kernels import power_step as _ps
 from repro.kernels import sketch_matmul as _sm
+from repro.kernels import trsm as _trsm
 
 
 def _on_tpu() -> bool:
@@ -23,6 +26,10 @@ def _on_tpu() -> bool:
 def _interpret() -> bool:
     # Kernels execute in interpret mode everywhere except real TPUs.
     return not _on_tpu()
+
+
+def _backend_name() -> str:
+    return "tpu" if _on_tpu() else "interpret"
 
 
 def _pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
@@ -37,12 +44,27 @@ def _block(dim: int, pref: int = 128) -> int:
     return pref if dim >= pref else max(8, int(2 ** np.ceil(np.log2(max(dim, 1)))))
 
 
+def _select_blocks(kernel: str, shape: tuple[int, ...], dtype) -> tuple[int, int, int]:
+    """(bm, bn, bk) for a kernel call: the autotuner cache if it has an entry
+    for this (shape-bucket, dtype, backend), else the 128 heuristic.
+
+    Runs at trace time (pure Python over static shapes); `shape` is the
+    logical problem shape (m, n, k) and tuned sizes are clamped per-dim so a
+    cache entry recorded at a bigger bucket still yields a legal tiling.
+    """
+    m, n, k = shape
+    tuned = _at.lookup(kernel, shape, jnp.dtype(dtype).name, _backend_name())
+    if tuned is None:
+        return _block(m), _block(n), _block(k)
+    return _block(m, tuned.bm), _block(n, tuned.bn), _block(k, tuned.bk)
+
+
 @functools.partial(jax.jit, static_argnames=("out_dtype",))
 def matmul(x: jax.Array, y: jax.Array, out_dtype=None):
     """C = X @ Y via the tiled Pallas kernel (padded to MXU tiles)."""
     m, k = x.shape
     _, n = y.shape
-    bm, bn, bk = _block(m), _block(n), _block(k)
+    bm, bn, bk = _select_blocks("matmul", (m, n, k), x.dtype)
     xp = _pad_to(x, (bm, bk))
     yp = _pad_to(y, (bk, bn))
     out = _mm.matmul_padded(
@@ -53,12 +75,12 @@ def matmul(x: jax.Array, y: jax.Array, out_dtype=None):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("s", "seed", "kind", "out_dtype")
+    jax.jit, static_argnames=("s", "kind", "out_dtype")
 )
 def sketch_matmul(
     a: jax.Array,
     s: int,
-    seed: int = 0,
+    seed=0,
     kind: str = "gaussian",
     out_dtype=None,
     row_offset=0,
@@ -66,11 +88,12 @@ def sketch_matmul(
     """C = A @ Omega[row_offset : row_offset + n, :s] with Omega generated
     inside the kernel.  ``row_offset=0`` is the monolithic sketch; a nonzero
     offset lets a column-panel of A consume its panel of the same logical
-    Omega (blocked / out-of-core streaming).  ``row_offset`` is traced —
-    streaming p panels costs ONE kernel compile, not p."""
+    Omega (blocked / out-of-core streaming).  ``row_offset`` AND ``seed``
+    are traced (SMEM scalars) — panel streams, seed sweeps, and the batched
+    vmap path all cost ONE kernel compile."""
     m, n = a.shape
-    bm, bk = _block(m), _block(n)
-    bn = _block(s)
+    bm, bn, bk = _select_blocks("sketch_matmul", (m, s, n), a.dtype)
+    bn = min(bn, _block(s))
     ap = _pad_to(a, (bm, bk))
     s_padded = s + (-s) % bn
     out = _sm.sketch_matmul_padded(
@@ -81,15 +104,109 @@ def sketch_matmul(
     return out[:m, :s]
 
 
+@functools.partial(jax.jit, static_argnames=("s", "kind", "out_dtype"))
+def sketch_gram(
+    a: jax.Array,
+    s: int,
+    seed=0,
+    kind: str = "gaussian",
+    out_dtype=None,
+    row_offset=0,
+):
+    """(Y, G) = (A @ Omega, Yᵀ Y) in ONE pass over A: the fused sketch with
+    a Gram epilogue, so CholeskyQR's first Gram costs no extra pass over Y.
+    G is fp32.  ``seed`` / ``row_offset`` are traced, as in `sketch_matmul`."""
+    m, n = a.shape
+    bm, _, bk = _select_blocks("sketch_gram", (m, s, n), a.dtype)
+    ap = _pad_to(a, (bm, bk))
+    s_padded = s + (-s) % _block(s)
+    y, g = _sm.sketch_gram_padded(
+        ap, s, seed, s_padded=s_padded, kind=kind,
+        bm=bm, bk=bk, out_dtype=out_dtype or a.dtype,
+        interpret=_interpret(), row_offset=row_offset,
+    )
+    return y[:m, :s], g[:s, :s]
+
+
+@functools.partial(jax.jit, static_argnames=("s", "kind", "out_dtype"))
+def sketch_power(
+    a: jax.Array,
+    s: int,
+    seed=0,
+    kind: str = "gaussian",
+    out_dtype=None,
+):
+    """(Y, W, G) = (A @ Omega, Aᵀ Y, Yᵀ Y) in ONE pass over A: the fused
+    RNG sketch through the power-step strip layout, so the stabilized
+    one-pass range finder starts with W = AᵀY already accumulated."""
+    m, n = a.shape
+    bm, _, _ = _select_blocks("power_step", (m, n, s), a.dtype)
+    nlane = _block(n)
+    ap = _pad_to(a, (bm, nlane))
+    sp = s + (-s) % _block(s)
+    y, w, g = _ps.sketch_power_padded(
+        ap, s, seed, s_padded=sp, kind=kind, bm=bm,
+        out_dtype=out_dtype or a.dtype, interpret=_interpret(),
+    )
+    return y[:m, :s], w[:n, :s], g[:s, :s]
+
+
 @functools.partial(jax.jit, static_argnames=("out_dtype",))
 def gram(y: jax.Array, out_dtype=jnp.float32):
     """G = Y^T Y via the symmetric (SYRK-style) kernel."""
     m, s = y.shape
-    bs, bk = _block(s), _block(m)
+    _, bs, bk = _select_blocks("gram", (s, s, m), y.dtype)
+    bs = min(bs, _block(s))
     yp = _pad_to(y, (bk, bs))
     upper = _gram.gram_padded(yp, bs=bs, bk=bk, out_dtype=out_dtype, interpret=_interpret())
     full = _gram.symmetrize_upper(upper, bs=bs)
     return full[:s, :s]
+
+
+@functools.partial(jax.jit, static_argnames=("with_gram", "out_dtype"))
+def power_step(a: jax.Array, x: jax.Array, with_gram: bool = False, out_dtype=None):
+    """(Y, Z[, G]) = (A @ X, Aᵀ @ Y[, Yᵀ Y]) — the fused two-sided power
+    step: each A tile is read once per pass (see kernels/power_step.py).
+
+    ``a`` is A (m x n, tall), ``x`` is X (n x s, sketch-width)."""
+    m, n = a.shape
+    _, s = x.shape
+    bm, _, _ = _select_blocks("power_step", (m, n, s), a.dtype)
+    sp = _block(s)
+    nlane = _block(n)
+    ap = _pad_to(a, (bm, nlane))
+    xp = _pad_to(x, (nlane, sp))
+    outs = _ps.power_step_padded(
+        ap, xp, bm=bm, out_dtype=out_dtype or a.dtype,
+        with_gram=with_gram, interpret=_interpret(),
+    )
+    if with_gram:
+        y, z, g = outs
+        return y[:m, :s], z[:n, :s], g[:s, :s]
+    y, z = outs
+    return y[:m, :s], z[:n, :s]
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype",))
+def tri_solve_right(y: jax.Array, r: jax.Array, out_dtype=None):
+    """Q = Y R⁻¹ for upper-triangular R via the tiled TRSM kernel
+    (forward substitution over column blocks, inverted diagonal blocks)."""
+    m, s = y.shape
+    bm, bs, _ = _select_blocks("trsm", (m, s, s), y.dtype)
+    bs = min(bs, _block(s))
+    yp = _pad_to(y, (bm, bs))
+    sp = yp.shape[1]
+    rp = jnp.zeros((sp, sp), r.dtype).at[:s, :s].set(r)
+    if sp > s:
+        # identity on the padded diagonal keeps every block invertible
+        pad_diag = jnp.arange(sp) >= s
+        rp = rp + jnp.diag(pad_diag.astype(r.dtype))
+    dinv = _trsm.invert_diag_blocks(rp, bs)
+    q = _trsm.tri_solve_right_padded(
+        yp, rp, dinv, bm=bm, bs=bs,
+        out_dtype=out_dtype or y.dtype, interpret=_interpret(),
+    )
+    return q[:m, :s]
 
 
 @functools.partial(

@@ -38,6 +38,53 @@ def gram_ref(y: jax.Array, out_dtype=None) -> jax.Array:
     return jnp.matmul(yf.T, yf, preferred_element_type=jnp.float32).astype(out_dtype)
 
 
+def sketch_gram_ref(
+    a: jax.Array, s: int, seed, kind: str = "gaussian", out_dtype=None,
+    row_offset: int = 0,
+):
+    """(Y, G) oracle for the one-pass sketch+gram kernel: Y materialized via
+    the jnp sketch, G = YᵀY in fp32."""
+    y = sketch_matmul_ref(a, s, seed, kind, jnp.float32, row_offset)
+    g = gram_ref(y, jnp.float32)
+    return y.astype(out_dtype or a.dtype), g
+
+
+def sketch_power_ref(
+    a: jax.Array, s: int, seed, kind: str = "gaussian", out_dtype=None
+):
+    """(Y, W, G) = (A Ω, Aᵀ Y, Yᵀ Y) with Ω materialized — the one-pass
+    sketch+power kernel's oracle."""
+    out_dtype = out_dtype or a.dtype
+    omega = sketch_mod.sketch_matrix(a.shape[1], s, seed, kind, dtype=jnp.float32)
+    af = a.astype(jnp.float32)
+    y = jnp.matmul(af, omega, preferred_element_type=jnp.float32)
+    w = jnp.matmul(af.T, y, preferred_element_type=jnp.float32)
+    g = jnp.matmul(y.T, y, preferred_element_type=jnp.float32)
+    return y.astype(out_dtype), w.astype(out_dtype), g
+
+
+def power_step_ref(a: jax.Array, x: jax.Array, with_gram: bool = False, out_dtype=None):
+    """(Y, Z[, G]) = (A X, Aᵀ Y[, Yᵀ Y]) — the two unfused GEMMs the fused
+    kernel replaces, fp32 accumulation throughout."""
+    out_dtype = out_dtype or a.dtype
+    af = a.astype(jnp.float32)
+    y = jnp.matmul(af, x.astype(jnp.float32), preferred_element_type=jnp.float32)
+    z = jnp.matmul(af.T, y, preferred_element_type=jnp.float32)
+    if with_gram:
+        g = jnp.matmul(y.T, y, preferred_element_type=jnp.float32)
+        return y.astype(out_dtype), z.astype(out_dtype), g
+    return y.astype(out_dtype), z.astype(out_dtype)
+
+
+def tri_solve_right_ref(y: jax.Array, r: jax.Array, out_dtype=None) -> jax.Array:
+    """Q = Y R⁻¹ via the LAPACK triangular solve (the TRSM kernel's oracle)."""
+    out_dtype = out_dtype or y.dtype
+    qt = jax.scipy.linalg.solve_triangular(
+        r.T.astype(jnp.float32), y.T.astype(jnp.float32), lower=True
+    )
+    return qt.T.astype(out_dtype)
+
+
 def flash_attention_ref(
     q: jax.Array,
     k: jax.Array,

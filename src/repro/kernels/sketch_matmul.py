@@ -70,7 +70,7 @@ def _omega_tile(row0, col0, bk, bn, s, seed, kind):
     raise ValueError(kind)
 
 
-def _sketch_kernel(off_ref, a_ref, o_ref, acc_ref, *, nk, bk, bn, s, seed, kind):
+def _sketch_kernel(off_ref, seed_ref, a_ref, o_ref, acc_ref, *, nk, bk, bn, s, kind):
     kk = pl.program_id(2)
 
     @pl.when(kk == 0)
@@ -79,7 +79,7 @@ def _sketch_kernel(off_ref, a_ref, o_ref, acc_ref, *, nk, bk, bn, s, seed, kind)
 
     row0 = (kk * bk).astype(jnp.uint32) + off_ref[0, 0]
     col0 = (pl.program_id(1) * bn).astype(jnp.uint32)
-    omega = _omega_tile(row0, col0, bk, bn, s, seed, kind)
+    omega = _omega_tile(row0, col0, bk, bn, s, seed_ref[0, 0], kind)
     acc_ref[...] += jnp.dot(
         a_ref[...].astype(jnp.float32), omega, preferred_element_type=jnp.float32
     )
@@ -114,22 +114,25 @@ def sketch_matmul_padded(
     [row_offset, row_offset + k) of the logical Omega, so a column-panel
     of A streamed in a separate call regenerates ITS panel of the same
     global sketch bit-identically (the out-of-core / blocked contract,
-    mirroring ``core.sketch.sketch_matrix(row_offset=...)``).  It is a
-    TRACED scalar (SMEM operand), so every panel of a streamed sketch
-    shares one compiled program.
+    mirroring ``core.sketch.sketch_matrix(row_offset=...)``).  Both
+    `row_offset` AND `seed` are TRACED scalars (SMEM operands), so panel
+    streams, seed sweeps, GaLore refreshes, and the batched vmap path all
+    share ONE compiled program.
     """
     m, k = a.shape
     assert m % bm == 0 and k % bk == 0 and s_padded % bn == 0
     nk = k // bk
     out_dtype = out_dtype or a.dtype
     kernel = functools.partial(
-        _sketch_kernel, nk=nk, bk=bk, bn=bn, s=s, seed=seed, kind=kind
+        _sketch_kernel, nk=nk, bk=bk, bn=bn, s=s, kind=kind
     )
     off = jnp.asarray(row_offset, jnp.uint32).reshape(1, 1)
+    sd = jnp.asarray(seed, jnp.uint32).reshape(1, 1)
     return pl.pallas_call(
         kernel,
         grid=(m // bm, s_padded // bn, nk),
         in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0), memory_space=pltpu.SMEM),
             pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0), memory_space=pltpu.SMEM),
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
         ],
@@ -137,4 +140,97 @@ def sketch_matmul_padded(
         out_shape=jax.ShapeDtypeStruct((m, s_padded), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-    )(off, a)
+    )(off, sd, a)
+
+
+# ---------------------------------------------------------------------------
+# Sketch + Gram epilogue: Y = A @ Omega and G = Y^T Y in ONE pass over A
+# ---------------------------------------------------------------------------
+
+def _sketch_gram_kernel(
+    off_ref, seed_ref, a_ref, y_ref, g_ref, yacc_ref, gacc_ref,
+    *, ni, nk, bk, sp, s, kind,
+):
+    i, kk = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(kk == 0)
+    def _init_y():
+        yacc_ref[...] = jnp.zeros_like(yacc_ref)
+
+    @pl.when((i == 0) & (kk == 0))
+    def _init_g():
+        gacc_ref[...] = jnp.zeros_like(gacc_ref)
+
+    row0 = (kk * bk).astype(jnp.uint32) + off_ref[0, 0]
+    omega = _omega_tile(row0, jnp.uint32(0), bk, sp, s, seed_ref[0, 0], kind)
+    yacc_ref[...] += jnp.dot(
+        a_ref[...].astype(jnp.float32), omega, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(kk == nk - 1)
+    def _row_done():
+        y = yacc_ref[...]
+        y_ref[...] = y.astype(y_ref.dtype)
+        # Gram epilogue: Y's block row is complete and still resident in
+        # VMEM — accumulate its contribution to G = Y^T Y with no extra
+        # pass over Y (CQR's first Gram rides along for free).
+        gacc_ref[...] += jnp.dot(y.T, y, preferred_element_type=jnp.float32)
+
+    @pl.when((i == ni - 1) & (kk == nk - 1))
+    def _flush_g():
+        g_ref[...] = gacc_ref[...].astype(g_ref.dtype)
+
+
+def sketch_gram_padded(
+    a: jax.Array,
+    s: int,
+    seed,
+    *,
+    s_padded: int,
+    kind: str = "gaussian",
+    bm: int = 128,
+    bk: int = 128,
+    out_dtype=None,
+    interpret: bool = False,
+    row_offset=0,
+):
+    """(Y, G) = (A @ Omega, Y^T Y) with Omega generated in VMEM — one pass.
+
+    The sketch width is held as a single block (``s_padded`` columns, no j
+    grid axis), so the completed (bm x s_padded) block row of Y is resident
+    when its Gram contribution is accumulated; sketch widths are small
+    (s = k + oversampling), so this fits VMEM comfortably.  G is fp32 and
+    includes padded columns (garbage that the wrapper slices off); logical
+    entries are uncontaminated because padded A rows/cols are zero.
+    """
+    m, k = a.shape
+    assert m % bm == 0 and k % bk == 0
+    ni, nk = m // bm, k // bk
+    out_dtype = out_dtype or a.dtype
+    kernel = functools.partial(
+        _sketch_gram_kernel, ni=ni, nk=nk, bk=bk, sp=s_padded, s=s, kind=kind
+    )
+    off = jnp.asarray(row_offset, jnp.uint32).reshape(1, 1)
+    sd = jnp.asarray(seed, jnp.uint32).reshape(1, 1)
+    return pl.pallas_call(
+        kernel,
+        grid=(ni, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, kk: (0, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda i, kk: (0, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((bm, bk), lambda i, kk: (i, kk)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, s_padded), lambda i, kk: (i, 0)),
+            pl.BlockSpec((s_padded, s_padded), lambda i, kk: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, s_padded), out_dtype),
+            jax.ShapeDtypeStruct((s_padded, s_padded), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bm, s_padded), jnp.float32),
+            pltpu.VMEM((s_padded, s_padded), jnp.float32),
+        ],
+        interpret=interpret,
+    )(off, sd, a)

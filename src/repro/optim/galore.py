@@ -25,6 +25,11 @@ from repro.optim import adamw
 
 Params = Any
 
+# Seeds are traced through the counter RNG, so per-refresh/per-unit seeds
+# reuse one compiled program on every path.  fused_sketch now vmaps too
+# (traced SMEM seed) and is worth enabling on real TPUs; the default stays
+# off because off-TPU it runs in Pallas interpret mode (~18x slower than
+# the XLA GEMM for zero HBM benefit).
 _RSVD_CFG = RSVDConfig(oversample=8, power_iters=1, qr_method="cqr2", small_svd="gram")
 
 

@@ -1,0 +1,137 @@
+"""Block-size autotuner: bucketing, cache hit/miss, JSON round-trip, and the
+ops.py consultation path."""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune as at
+from repro.kernels import ops, ref
+from repro.core.sketch import sketch_matrix
+
+
+@pytest.fixture(autouse=True)
+def _clean_table():
+    at.clear()
+    yield
+    at.clear()
+
+
+def test_shape_bucket_rounds_up_to_pow2():
+    assert at.shape_bucket((100, 257, 1)) == (128, 512, 1)
+    assert at.shape_bucket((128,)) == (128,)
+    assert at.shape_bucket((129,)) == (256,)
+
+
+def test_lookup_miss_then_hit():
+    assert at.lookup("matmul", (300, 300, 300), "float32", "interpret") is None
+    at.record("matmul", (300, 300, 300), "float32",
+              at.BlockSizes(256, 128, 128), "interpret")
+    got = at.lookup("matmul", (300, 300, 300), "float32", "interpret")
+    assert got == at.BlockSizes(256, 128, 128)
+    # same bucket (512^3), different concrete shape -> hit
+    assert at.lookup("matmul", (400, 290, 500), "float32", "interpret") == got
+    # different bucket / dtype / backend / kernel -> miss
+    assert at.lookup("matmul", (600, 300, 300), "float32", "interpret") is None
+    assert at.lookup("matmul", (300, 300, 300), "bfloat16", "interpret") is None
+    assert at.lookup("matmul", (300, 300, 300), "float32", "tpu") is None
+    assert at.lookup("gram", (300, 300, 300), "float32", "interpret") is None
+
+
+def test_json_roundtrip(tmp_path, monkeypatch):
+    at.record("gram", (128, 128, 1024), "float32",
+              at.BlockSizes(128, 64, 256), "interpret", us=42.0)
+    path = str(tmp_path / "cache.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+    assert at.save() == path
+    payload = json.load(open(path))
+    assert payload["interpret"]["gram"]
+    at.clear()
+    assert at.lookup("gram", (128, 128, 1024), "float32", "interpret") == \
+        at.BlockSizes(128, 64, 256)  # lazily reloaded from $REPRO_AUTOTUNE_CACHE
+
+
+def test_fresh_record_survives_lazy_file_load(tmp_path, monkeypatch):
+    """A winner recorded THIS process must not be clobbered when the stale
+    cache file is lazily loaded by a later lookup."""
+    path = str(tmp_path / "cache.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+    json.dump({"interpret": {"matmul": {"512x512x512_float32":
+              {"bm": 128, "bn": 128, "bk": 128}}}}, open(path, "w"))
+    # fresh sweep records a new winner BEFORE any lookup touches the file
+    at.record("matmul", (300, 300, 300), "float32",
+              at.BlockSizes(256, 256, 256), "interpret")
+    got = at.lookup("matmul", (300, 300, 300), "float32", "interpret")
+    assert got == at.BlockSizes(256, 256, 256)  # in-memory wins over stale file
+
+
+def test_save_merges_existing_file(tmp_path, monkeypatch):
+    """Saving a sweep for one kernel must keep other kernels' persisted
+    entries intact."""
+    path = str(tmp_path / "cache.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+    json.dump({"tpu": {"gram": {"256x256x256_float32":
+              {"bm": 128, "bn": 128, "bk": 128}}}}, open(path, "w"))
+    at.record("matmul", (64, 64, 64), "float32", at.BlockSizes(64, 64, 64), "interpret")
+    at.save()
+    payload = json.load(open(path))
+    assert "gram" in payload["tpu"] and "matmul" in payload["interpret"]
+
+
+def test_no_persistence_without_path(monkeypatch):
+    monkeypatch.delenv("REPRO_AUTOTUNE_CACHE", raising=False)
+    at.record("matmul", (64, 64, 64), "float32", at.BlockSizes(64, 64, 64), "interpret")
+    assert at.save() is None
+
+
+def test_autotune_sweep_records_winner():
+    a = sketch_matrix(96, 64, 0)
+    b = sketch_matrix(64, 32, 1)
+
+    def run(blocks):
+        # exercise the real kernel at the candidate tiling
+        from repro.kernels.matmul import matmul_padded
+
+        pad = lambda x, ms: jnp.pad(x, [(0, (-d) % m) for d, m in zip(x.shape, ms)])
+        xp = pad(a, (blocks.bm, blocks.bk))
+        yp = pad(b, (blocks.bk, blocks.bn))
+        return matmul_padded(xp, yp, bm=blocks.bm, bn=blocks.bn, bk=blocks.bk,
+                             interpret=True)
+
+    cands = [(32, 32, 32), (64, 32, 64), (0, 0, 0)]  # last one must be skipped
+    best = at.autotune("matmul", run, (96, 32, 64), "float32", "interpret",
+                       candidates=cands)
+    assert best.astuple() in cands[:2]
+    assert at.lookup("matmul", (96, 32, 64), "float32", "interpret") == best
+
+
+def test_autotune_all_candidates_fail():
+    with pytest.raises(ValueError):
+        at.autotune("matmul", lambda b: 1 / 0, (8, 8, 8), "float32", "interpret",
+                    candidates=[(8, 8, 8)])
+
+
+def test_ops_consults_tuned_blocks_and_stays_correct():
+    """A tuned entry changes the tiling ops.py picks; results must still
+    match the oracle (padding adapts to the tuned block)."""
+    m, k, n = 200, 150, 70
+    sel0 = ops._select_blocks("matmul", (m, n, k), jnp.float32)
+    assert sel0 == (128, 128, 128)  # heuristic default
+    at.record("matmul", (m, n, k), "float32", at.BlockSizes(256, 64, 32), "interpret")
+    sel1 = ops._select_blocks("matmul", (m, n, k), jnp.float32)
+    assert sel1 == (256, 64, 32)
+    x = sketch_matrix(m, k, 2)
+    y = sketch_matrix(k, n, 3)
+    np.testing.assert_allclose(
+        np.asarray(ops.matmul(x, y)), np.asarray(ref.matmul_ref(x, y)),
+        atol=1e-4, rtol=1e-3,
+    )
+
+
+def test_ops_clamps_tuned_blocks_to_small_dims():
+    """A cache entry recorded at a big bucket must not produce an oversized
+    block for a tiny dim (the _block clamp)."""
+    at.record("matmul", (16, 16, 16), "float32", at.BlockSizes(256, 256, 256), "interpret")
+    bm, bn, bk = ops._select_blocks("matmul", (16, 16, 16), jnp.float32)
+    assert (bm, bn, bk) == (16, 16, 16)
