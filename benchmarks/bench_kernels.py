@@ -39,20 +39,20 @@ def block_size_sweep(m=2048, n=192, k=16, block_rows=(128, 256, 512, 2048)):
     drop from m*n to block_rows*n + n*s while the result stays within 1e-4
     (test_blocked.py).
     """
-    from repro.core.blocked import blocked_randomized_svd
-    from repro.core.rsvd import RSVDConfig, randomized_svd
+    from repro import linalg
+    from repro.core.rsvd import RSVDConfig
 
     rows = []
     A = sketch_matrix(m, n, 0)
     s = k + 10
-    t_dense = _time(lambda a: randomized_svd(a, k), A, reps=1)
+    t_dense = _time(lambda a: linalg.svd(a, k, overrides=RSVDConfig()), A, reps=1)
     rows.append(
         dict(name=f"rsvd_dense_m{m}_n{n}_k{k}", us=t_dense * 1e6,
              derived=f"workset{m * n}")
     )
     for b in block_rows:
         cfg = RSVDConfig.streaming(block_rows=b)
-        t = _time(lambda a, cfg=cfg: blocked_randomized_svd(a, k, cfg), A, reps=1)
+        t = _time(lambda a, cfg=cfg: linalg.svd(a, k, overrides=cfg), A, reps=1)
         rows.append(
             dict(name=f"rsvd_blocked_m{m}_n{n}_k{k}_b{b}", us=t * 1e6,
                  derived=f"workset{b * n + n * s};dense_us{t_dense * 1e6:.0f}")
@@ -62,16 +62,17 @@ def block_size_sweep(m=2048, n=192, k=16, block_rows=(128, 256, 512, 2048)):
 
 def batch_count_sweep(counts=(1, 4, 16), m=128, n=64, k=8):
     """Batched (vmap) rSVD vs a per-slice Python loop at growing batch sizes."""
-    from repro.core.blocked import batched_randomized_svd
-    from repro.core.rsvd import randomized_svd
+    from repro import linalg
+    from repro.core.rsvd import RSVDConfig
 
+    cfg = RSVDConfig()  # same numerical variant on both sides of the ratio
     rows = []
     for B in counts:
         A = sketch_matrix(B * m, n, 1).reshape(B, m, n)
-        t_b = _time(lambda a: batched_randomized_svd(a, k), A, reps=1)
+        t_b = _time(lambda a: linalg.svd(a, k, overrides=cfg), A, reps=1)
 
         def loop(a):
-            return [randomized_svd(a[i], k, seed=i) for i in range(a.shape[0])]
+            return [linalg.svd(a[i], k, overrides=cfg, seed=i) for i in range(a.shape[0])]
 
         t_l = _time(loop, A, reps=1)
         rows.append(
@@ -100,8 +101,10 @@ def kernel_block_autotune(m=512, k=512, n=256):
             bm=blocks.bm, bn=blocks.bn, bk=blocks.bk, interpret=True,
         )
 
+    from repro.kernels import ops as kops
+
     best = at.autotune(
-        "matmul", run_cand, (m, n, k), "float32", "interpret",
+        "matmul", run_cand, (m, n, k), "float32", kops._backend_name(),
         candidates=((128, 128, 128), (256, 128, 128), (128, 128, 256)),
     )
     path = at.save()

@@ -2,48 +2,24 @@
 
 Emits ``BENCH_rsvd.json`` (cwd, or --out PATH): per-variant wall time on the
 current backend (CPU-container numbers are interpret-mode correctness
-proxies, NOT TPU performance) plus the structural HBM-traffic model that the
-fused one-pass range finder is built on — the perf trajectory the ROADMAP's
-"fast as the hardware allows" is measured against.  EXPERIMENTS.md records
-the history.
-
-Traffic model (fp32 words, per stabilized power iteration, A is m x n with
-sketch width s; reads+writes of every operand, Grams/TRSMs included):
-
-  unfused:  Z = AᵀQ and Y' = A·Qz are separate GEMMs  -> A read TWICE
-            + CQR2 of Y reads Y twice and round-trips Q1/Q
-  fused:    kernels/power_step.py reads A ONCE, returns (Y, W=AᵀY, G=YᵀY);
-            Z = W R⁻¹ is a sketch-width TRSM, G kills CQR's first pass
-
-so bytes/iter drop from ~2mn + 8ms + 8ns to ~mn + 4ms + 10ns — asymptotically
-2x, and >= 1.5x at every paper benchmark shape (asserted in the smoke lane).
+proxies, NOT TPU performance), the structural HBM-traffic model that the
+fused one-pass range finder is built on (now shared with the execution
+planner — repro/roofline/rsvd_model.py), and the EXECUTED `ExecutionPlan`
+for every variant, so a BENCH_rsvd.json row says exactly which path / fused
+flags / block sizes produced its number.  EXPERIMENTS.md records the
+history; the traffic-model derivation lives in rsvd_model.py.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
 import jax
 import jax.numpy as jnp
 
-
-def hbm_bytes_per_power_iter(m: int, n: int, s: int, fused: bool, dtype_bytes: int = 4) -> int:
-    """Analytic HBM traffic of ONE stabilized power iteration (see module doc)."""
-    if fused:
-        # power_step: read A + read Qz + write Y + write W (G is s x s, ~0)
-        kernel = m * n + n * s + m * s + n * s
-        # CQR2 with free first Gram: TRSM(Y)->Q1 (read Y, write Q1), gram(Q1)
-        cqr = 3 * m * s
-        # Z = W R^-1 (read W, write Z) + orthonormalize(Z) ~ CQR2 on n x s
-        small = 2 * n * s + 6 * n * s
-        return (kernel + cqr + small) * dtype_bytes
-    # Z = A^T Q (read A, read Q, write Z) + Y' = A Qz (read A, read Qz, write Y)
-    gemms = (m * n + m * s + n * s) + (m * n + n * s + m * s)
-    # CQR2 of Y: gram(Y) + TRSM(Y)->Q1 + gram(Q1) + TRSM(Q1)->Q
-    cqr = 6 * m * s
-    small = 6 * n * s  # orthonormalize(Z)
-    return (gemms + cqr + small) * dtype_bytes
+from repro.roofline.rsvd_model import hbm_bytes_per_power_iter  # noqa: F401  (model home)
 
 
 def traffic_rows(shapes=((2000, 2000, 100), (8192, 8192, 256), (65536, 4096, 128))):
@@ -68,7 +44,8 @@ def _time(fn, *args, reps=1):
 
 
 def variant_rows(m=512, n=256, k=16):
-    from repro.core.rsvd import RSVDConfig, _use_fused_power, randomized_svd
+    from repro import linalg
+    from repro.core.rsvd import RSVDConfig
     from repro.core.spectra import make_test_matrix
 
     A, _ = make_test_matrix(m, n, "fast", seed=0)
@@ -80,25 +57,24 @@ def variant_rows(m=512, n=256, k=16):
     ]
     rows = []
     for name, cfg in variants:
-        t = _time(lambda a, c=cfg: randomized_svd(a, k, c), A)
-        q = cfg.power_iters
-        # fused (when it actually DISPATCHES at this shape/dtype — the VMEM
-        # guard or f64 can veto the flag): sketch_power emits W=AᵀY, each
-        # iteration reads A once, and the final projection reuses the last
-        # W.  unfused: sketch + two reads per iteration + final B = QᵀA.
-        s = min(k + cfg.oversample, min(m, n))
-        fused = _use_fused_power(A, cfg, s)
+        # Plan once, execute the pinned plan: the recorded plan IS what ran
+        # (fused_power in the plan is the EFFECTIVE decision — the VMEM
+        # guard or f64 can veto the config flag).
+        pl = linalg.plan(linalg.DenseOp(A), k, overrides=cfg)
+        t = _time(lambda a, p=pl: linalg.svd(a, k, plan=p), A)
+        q = pl.power_iters
         rows.append(
             dict(name=name, m=m, n=n, k=k, wall_s=round(t, 4),
-                 reads_of_A=(1 + q) if fused else (2 * q + 2),
-                 backend=jax.default_backend())
+                 reads_of_A=(1 + q) if pl.fused_power else (2 * q + 2),
+                 backend=jax.default_backend(),
+                 plan=dataclasses.asdict(pl))
         )
     return rows
 
 
 def build_report(smoke: bool = False) -> dict:
     report = {
-        "schema": "bench_rsvd/v1",
+        "schema": "bench_rsvd/v2",
         "backend": jax.default_backend(),
         "interpret_mode": jax.default_backend() != "tpu",
         "traffic_model_per_power_iter": traffic_rows(),
@@ -107,6 +83,17 @@ def build_report(smoke: bool = False) -> dict:
     for row in report["traffic_model_per_power_iter"]:
         assert row["saving"] >= 1.5, (
             f"fused power step must save >=1.5x HBM bytes/iter, got {row}")
+    for row in report["variants"]:
+        # the executed plan's whole-solve prediction must come from the SAME
+        # roofline model the planner uses (guards model drift)
+        from repro.roofline import rsvd_model
+
+        p = row["plan"]
+        assert p["predicted_hbm_bytes"] == rsvd_model.predicted_hbm_bytes(
+            p["m"], p["n"], p["s"], p["power_iters"], p["fused_power"],
+            p["fused_sketch"], dtype_bytes=jnp.dtype(p["dtype"]).itemsize,
+            batch=p["batch"],
+        ), row
     return report
 
 
@@ -119,7 +106,7 @@ def main(out_path: str = "BENCH_rsvd.json", smoke: bool = False) -> None:
               f"saving{row['saving']}x")
     for row in report["variants"]:
         print(f"rsvd_variant_{row['name']},{row['wall_s'] * 1e6:.0f},"
-              f"readsA{row['reads_of_A']}")
+              f"readsA{row['reads_of_A']};path={row['plan']['path']}")
     print(f"# wrote {out_path}")
 
 

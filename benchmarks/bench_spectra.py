@@ -22,7 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import RSVDConfig, randomized_eigvals
+from repro import linalg
+from repro.core import RSVDConfig
 from repro.core.lanczos import lanczos_singular_values
 from repro.core.spectra import make_test_matrix
 
@@ -53,10 +54,10 @@ def run(sizes=(512, 1024), fracs=(0.01, 0.05, 0.10), kinds=("fast", "sharp", "sl
                 k = max(1, int(np.ceil(frac * n)))
 
                 t_ours, s_ours = _time(
-                    functools.partial(randomized_eigvals, k=k, cfg=OURS), A
+                    lambda a: linalg.eigvals(a, k, overrides=OURS), A
                 )
                 t_rsvd, _ = _time(
-                    functools.partial(randomized_eigvals, k=k, cfg=NAIVE), A
+                    lambda a: linalg.eigvals(a, k, overrides=NAIVE), A
                 )
                 t_svds, _ = _time(
                     functools.partial(lanczos_singular_values, k=k, extra=10), A

@@ -1,6 +1,10 @@
 # The paper's primary contribution — randomized k-SVD reformulated as
 # BLAS-3 + fast counter-based RNG — plus its applications (PCA, subspace
 # clustering) and the multi-device distribution layer.
+#
+# The public call-site pattern is the `repro.linalg` facade (operator
+# sources + execution plans); `randomized_svd` / `randomized_eigvals` are
+# deprecated shims kept for pre-facade callers.
 from repro.core.rsvd import (  # noqa: F401
     RSVDConfig,
     low_rank_error,
@@ -12,7 +16,10 @@ from repro.core.blocked import (  # noqa: F401
     batched_randomized_svd,
     blocked_randomized_eigvals,
     blocked_randomized_svd,
+    eigvals_streamed,
     streamed_sketch,
+    svd_batched,
+    svd_streamed,
 )
 from repro.core.qr import (  # noqa: F401
     cholesky_qr,

@@ -32,8 +32,11 @@ Two execution shapes the paper's single-GPU Algorithm 1 cannot serve:
    decorrelated per slice through the counter RNG (seed + batch index), which
    is why `core.sketch` accepts traced seeds.
 
-Dispatch from `randomized_svd` (core/rsvd.py) via `RSVDConfig.block_rows` /
-3-D inputs; see DESIGN.md §"Blocked & batched execution".
+Dispatch now lives in the execution planner (`repro.linalg.plan`): HostOp /
+`block_rows` plans execute `svd_streamed`, StackedOp (3-D) plans execute
+`svd_batched`; the deprecated `core.rsvd.randomized_svd` shim routes here
+through the same planner.  See DESIGN.md §"Blocked & batched execution" and
+§"API: operators and plans".
 """
 from __future__ import annotations
 
@@ -138,7 +141,7 @@ def _blocked_cholesky_qr2(Y_panels: Sequence[jax.Array], G1: jax.Array | None = 
 # Panel-streaming randomized SVD
 # ---------------------------------------------------------------------------
 
-def blocked_randomized_svd(
+def svd_streamed(
     A,
     k: int,
     cfg: RSVDConfig = RSVDConfig(),
@@ -150,7 +153,7 @@ def blocked_randomized_svd(
     Accepts a jax array OR a host numpy array (the out-of-core case: only
     `block_rows x n` of A is device-resident at a time; the s-column panels
     Y/Q — m x s in total — stay on device, see the module docstring).
-    Returns (U, S, Vt) with the same contract as `randomized_svd`; U is
+    Returns (U, S, Vt) with the same contract as `linalg.svd`; U is
     assembled from per-panel GEMMs, so for a truly out-of-core caller the
     per-panel `Q_p @ U_b` products could be written back to host storage
     panel-by-panel instead.
@@ -159,12 +162,12 @@ def blocked_randomized_svd(
     if m < n:
         # Orientation swap: stream the taller side of A^T.  For numpy inputs
         # .T is a view — no host copy is made.
-        V, S, Ut = blocked_randomized_svd(A.T, k, cfg, seed=seed, block_rows=block_rows)
+        V, S, Ut = svd_streamed(A.T, k, cfg, seed=seed, block_rows=block_rows)
         return Ut.T, S, V.T
 
     b = block_rows or cfg.block_rows
     if not b:
-        raise ValueError("blocked_randomized_svd needs block_rows (arg or cfg)")
+        raise ValueError("svd_streamed needs block_rows (arg or cfg)")
     s = min(k + cfg.oversample, n)
     bounds = _panel_bounds(m, b)
     panels = lambda: (_device(A[lo:hi]) for lo, hi in bounds)
@@ -228,12 +231,12 @@ def _blocked_body(panels, k: int, s: int, cfg: RSVDConfig, seed, dtype):
     return U, S[:k], Vt[:k, :]
 
 
-def blocked_randomized_eigvals(
+def eigvals_streamed(
     A, k: int, cfg: RSVDConfig = RSVDConfig(), seed: int = 0,
     block_rows: int | None = None,
 ) -> jax.Array:
     """k largest singular values, streaming — Sigma-only mode of the above."""
-    _, S, _ = blocked_randomized_svd(A, k, cfg, seed=seed, block_rows=block_rows)
+    _, S, _ = svd_streamed(A, k, cfg, seed=seed, block_rows=block_rows)
     return S
 
 
@@ -247,7 +250,7 @@ def _batched_tall(A: jax.Array, seeds: jax.Array, k: int, cfg: RSVDConfig):
         return jax.vmap(lambda a, sd: _rsvd_body(a, k, cfg, sd))(A, seeds)
 
 
-def batched_randomized_svd(
+def svd_batched(
     A: jax.Array,
     k: int,
     cfg: RSVDConfig = RSVDConfig(),
@@ -272,9 +275,16 @@ def batched_randomized_svd(
         raise ValueError(f"batched path expects [B, m, n], got shape {A.shape}")
     _, m, n = A.shape
     if m < n:
-        V, S, Ut = batched_randomized_svd(jnp.swapaxes(A, -1, -2), k, cfg, seed=seed)
+        V, S, Ut = svd_batched(jnp.swapaxes(A, -1, -2), k, cfg, seed=seed)
         return jnp.swapaxes(Ut, -1, -2), S, jnp.swapaxes(V, -1, -2)
     if cfg.fused_power or cfg.block_rows:
         cfg = dataclasses.replace(cfg, fused_power=False, block_rows=None)
     seeds = jnp.uint32(seed) + jnp.arange(A.shape[0], dtype=jnp.uint32)
     return _batched_tall(A, seeds, k, cfg)
+
+
+# Pre-facade names, kept importable for downstream code; the repo itself
+# calls the new names (or, preferably, `repro.linalg.svd`).
+blocked_randomized_svd = svd_streamed
+blocked_randomized_eigvals = eigvals_streamed
+batched_randomized_svd = svd_batched

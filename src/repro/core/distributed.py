@@ -92,7 +92,7 @@ def _local_rsvd_body(
     return U_loc, S[:k], Vt[:k, :]
 
 
-def distributed_randomized_svd(
+def svd_sharded(
     A: jax.Array,
     k: int,
     mesh: jax.sharding.Mesh,
@@ -103,6 +103,7 @@ def distributed_randomized_svd(
     """Rank-k randomized SVD of row-sharded A on `mesh` along `axis`.
 
     Returns (U, S, Vt); U is row-sharded like A, S and Vt are replicated.
+    The facade spelling is `linalg.svd(ShardedOp(A, mesh, axis), k)`.
     """
     m, n = A.shape
     s = min(k + cfg.oversample, min(m, n))
@@ -130,6 +131,10 @@ def distributed_randomized_svd(
     # shard_map body traces (the first jit call below).
     with qr_mod.kernel_backend(cfg.kernel_backend):
         return jax.jit(f)(A)
+
+
+# Pre-facade name, kept importable for downstream code.
+distributed_randomized_svd = svd_sharded
 
 
 def collective_bytes_estimate(n: int, k: int, cfg: RSVDConfig, dtype_bytes: int = 4) -> int:

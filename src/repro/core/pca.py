@@ -5,17 +5,21 @@ flattened CelebA images at resolutions 8x8 ... 52x52.  PCA reduces to the
 SVD of the centered data matrix: for X in R^{N x d} with column means mu,
 the principal axes are the right singular vectors of (X - mu) and the
 explained variances are sigma_i^2 / (N - 1).
+
+The centered matrix is an OPERATOR, not an array: `pca` runs the range
+finder over `linalg.CenteredOp(X)` (matmat/rmatmat carry the -1 muᵀ
+correction), so the N x d centered temporary this module used to
+materialize is gone — and host-resident X streams row panels.
 """
 from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.rsvd import RSVDConfig, randomized_svd
+from repro.core.rsvd import RSVDConfig
 
 
 @jax.tree_util.register_dataclass
@@ -27,19 +31,13 @@ class PCAResult:
     mean: jax.Array                # (d,)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "cfg", "seed"))
-def pca(X: jax.Array, k: int, cfg: RSVDConfig = RSVDConfig.fast(), seed: int = 0) -> PCAResult:
-    """Top-k principal components of X (N x d) via randomized SVD."""
-    mu = jnp.mean(X, axis=0)
-    Xc = X - mu[None, :]
-    _, S, Vt = randomized_svd(Xc, k, cfg, seed)
-    n = X.shape[0]
-    return PCAResult(
-        components=Vt,
-        explained_variance=S**2 / (n - 1),
-        singular_values=S,
-        mean=mu,
-    )
+def pca(X, k: int, cfg: RSVDConfig = RSVDConfig.fast(), seed: int = 0) -> PCAResult:
+    """Top-k principal components of X (N x d) via randomized SVD on the
+    centered operator (X itself may be a device array, a host numpy array,
+    or any 2-D LinOp)."""
+    from repro import linalg
+
+    return linalg.pca(X, k, overrides=cfg, seed=seed)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "cfg", "seed"))
@@ -47,14 +45,14 @@ def batched_pca(
     X: jax.Array, k: int, cfg: RSVDConfig = RSVDConfig(), seed: int = 0
 ) -> PCAResult:
     """Per-channel PCA: X [C, N, d] -> PCAResult with a leading C axis on
-    every field.  One vmapped randomized SVD (core/blocked.py) instead of C
-    sequential solves — the many-small-matrices workload from DESIGN.md
-    §"Blocked & batched execution"."""
-    from repro.core.blocked import batched_randomized_svd
+    every field.  One vmapped randomized SVD (the StackedOp execution path)
+    instead of C sequential solves — the many-small-matrices workload from
+    DESIGN.md §"Blocked & batched execution"."""
+    from repro import linalg
 
     mu = jnp.mean(X, axis=1)                      # (C, d)
     Xc = X - mu[:, None, :]
-    _, S, Vt = batched_randomized_svd(Xc, k, cfg, seed=seed)
+    _, S, Vt = linalg.svd(linalg.StackedOp(Xc), k, overrides=cfg, seed=seed)
     n = X.shape[1]
     return PCAResult(
         components=Vt,

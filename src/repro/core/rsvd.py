@@ -22,6 +22,7 @@ mode (steps 1-5, Sigma only), used in the PCA / spectra experiments.
 from __future__ import annotations
 
 import functools
+import warnings
 from dataclasses import dataclass
 from typing import Literal, Tuple
 
@@ -130,17 +131,24 @@ def _sketch(A: jax.Array, s: int, seed, cfg: RSVDConfig) -> jax.Array:
     return A @ omega
 
 
-def _use_fused_power(A: jax.Array, cfg: RSVDConfig, s: int) -> bool:
+def _use_fused_power(
+    A: jax.Array, cfg: RSVDConfig, s: int, vmem_budget: int | None = None
+) -> bool:
     """The one-pass power path needs fp32-accumulating kernels (not the f64
     faithful setting), a CholeskyQR-family range finder (the Y-side
     re-orthonormalization is expressed through Gram + TRSM), and a working
     set — the A strip plus the n x s accumulators — that fits real-TPU
     VMEM (interpret mode has no limit, but the config path must not select
     a kernel that cannot compile on hardware; beyond the budget the
-    blocked/streaming and distributed paths are the intended scale-out)."""
+    blocked/streaming and distributed paths are the intended scale-out).
+    The execution planner (repro/linalg/planner.py) evaluates the same gate
+    at plan time, parameterized by its Budget — `vmem_budget` keeps the two
+    in lockstep."""
     from repro.kernels.ops import _block, _select_blocks
     from repro.kernels.power_step import VMEM_BUDGET_BYTES, fused_power_vmem_bytes
 
+    if vmem_budget is None:
+        vmem_budget = VMEM_BUDGET_BYTES
     m, n = A.shape
     # Model the kernel's ACTUAL footprint: the bm the wrapper will select
     # (autotune cache included) and the padded dims it will allocate.
@@ -155,7 +163,7 @@ def _use_fused_power(A: jax.Array, cfg: RSVDConfig, s: int) -> bool:
         cfg.fused_power
         and A.dtype != jnp.float64
         and (cfg.power_scheme == "plain" or cfg.qr_method == "cqr2")
-        and fused_power_vmem_bytes(n_pad, s_pad, bm=bm) <= VMEM_BUDGET_BYTES
+        and fused_power_vmem_bytes(n_pad, s_pad, bm=bm) <= vmem_budget
     )
 
 
@@ -273,34 +281,39 @@ def _randomized_svd_dense(
         return _rsvd_body(A, k, cfg, seed)
 
 
+def _as_plannable(A):
+    """Wrap a raw array the way the historical dispatch understood it:
+    3-D -> StackedOp; 2-D -> DenseOp even for host numpy (the old entry
+    point moved host arrays to device wholesale unless cfg.block_rows
+    streamed them, and the planner's `overrides` dispatch keys on
+    cfg.block_rows/batched, not on residency)."""
+    from repro.linalg.operators import DenseOp, StackedOp
+
+    if getattr(A, "ndim", 2) == 3:
+        return StackedOp(A)
+    return DenseOp(A)
+
+
 def randomized_svd(
     A: jax.Array,
     k: int,
     cfg: RSVDConfig = RSVDConfig(),
     seed: int = 0,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Rank-k randomized SVD of A (m x n). Returns (U, S, Vt) with
-    U: m x k, S: k, Vt: k x n.
-
-    Orientation: the range finder works on the *taller* side; if m < n we
-    factor A^T and swap factors at the end (same flop count, better sketch).
-
-    Dispatch (DESIGN.md §"Blocked & batched execution"):
-      * 3-D input [B, m, n]       -> batched vmap path (one SVD per slice)
-      * cfg.block_rows set        -> panel-streaming blocked path, A may be
-                                     a host (numpy) array larger than device
-                                     memory
-      * otherwise                 -> the dense jitted path above
+    """DEPRECATED shim over `repro.linalg.svd` — kept so pre-facade callers
+    keep working unchanged.  The planner reproduces this entry point's
+    historical dispatch exactly (3-D -> batched, cfg.block_rows ->
+    streamed, else dense), so fixed-seed results are bit-identical.
     """
-    if getattr(A, "ndim", 2) == 3 or cfg.batched:
-        from repro.core import blocked
+    warnings.warn(
+        "randomized_svd is deprecated; use repro.linalg.svd (operator sources"
+        " + execution plans — see DESIGN.md §'API: operators and plans')",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro import linalg
 
-        return blocked.batched_randomized_svd(A, k, cfg, seed=seed)
-    if cfg.block_rows:
-        from repro.core import blocked
-
-        return blocked.blocked_randomized_svd(A, k, cfg, seed=seed)
-    return _randomized_svd_dense(A, jnp.asarray(seed, jnp.uint32), k, cfg)
+    return linalg.svd(_as_plannable(A), k, overrides=cfg, seed=seed)
 
 
 def _stabilized_power(A: jax.Array, Y: jax.Array, cfg: RSVDConfig) -> jax.Array:
@@ -315,18 +328,17 @@ def _stabilized_power(A: jax.Array, Y: jax.Array, cfg: RSVDConfig) -> jax.Array:
 def randomized_eigvals(
     A: jax.Array, k: int, cfg: RSVDConfig = RSVDConfig(), seed: int = 0
 ) -> jax.Array:
-    """k largest singular values only (paper's eigenvalue-benchmark mode:
-    steps 1-5 of Algorithm 1, discarding U and V).  Dispatches on execution
-    shape like `randomized_svd`."""
-    if getattr(A, "ndim", 2) == 3 or cfg.batched:
-        from repro.core import blocked
+    """DEPRECATED shim over `repro.linalg.eigvals` (paper's eigenvalue-
+    benchmark mode: steps 1-5 of Algorithm 1, discarding U and V)."""
+    warnings.warn(
+        "randomized_eigvals is deprecated; use repro.linalg.eigvals (operator"
+        " sources + execution plans — see DESIGN.md §'API: operators and plans')",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro import linalg
 
-        return blocked.batched_randomized_svd(A, k, cfg, seed=seed)[1]
-    if cfg.block_rows:
-        from repro.core import blocked
-
-        return blocked.blocked_randomized_eigvals(A, k, cfg, seed=seed)
-    return _randomized_eigvals_dense(A, jnp.asarray(seed, jnp.uint32), k, cfg)
+    return linalg.eigvals(_as_plannable(A), k, overrides=cfg, seed=seed)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "cfg"))
@@ -362,7 +374,11 @@ def _randomized_eigvals_dense(
 
 
 def low_rank_error(A: jax.Array, U: jax.Array, S: jax.Array, Vt: jax.Array) -> jax.Array:
-    """Relative Frobenius error ||A - U S Vt||_F / ||A||_F (paper's metric)."""
+    """Relative Frobenius error ||A - U S Vt||_F / ||A||_F (paper's metric).
+
+    Materializes the full m x n reconstruction — fine for in-core arrays.
+    Streamed/host/composed sources should use `repro.linalg.residual`, the
+    panel-wise version that never forms an m x n temporary."""
     R = A - (U * S[None, :]) @ Vt
     return jnp.sqrt(jnp.sum(R * R) / jnp.sum(A * A))
 

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.rsvd import RSVDConfig, randomized_svd
+from repro.core.rsvd import RSVDConfig
 
 
 # ---------------------------------------------------------------------------
@@ -48,11 +48,13 @@ def rsvd_solver(Xc: jax.Array, q: int, cfg: RSVDConfig = RSVDConfig()) -> jax.Ar
     space (zero rows contribute nothing to X^T X) and caps the number of
     compilations at log2(n_max) — the production fix for ragged solver
     batches."""
+    from repro import linalg
+
     n = Xc.shape[0]
     n_pad = 1 << max(int(np.ceil(np.log2(max(n, 2)))), 1)
     if n_pad != n:
         Xc = jnp.pad(Xc, ((0, n_pad - n), (0, 0)))
-    _, _, Vt = randomized_svd(Xc, q, cfg)
+    _, _, Vt = linalg.svd(Xc, q, overrides=cfg)
     return Vt.T
 
 

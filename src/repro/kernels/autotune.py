@@ -18,9 +18,12 @@ the hot loop, or clear jax's jit caches).
 
 On the CPU container the kernels run in interpret mode, so recorded timings
 are correctness-proxy numbers; the cache mechanics (bucketing, hit/miss,
-JSON round-trip) are identical on real TPUs, where ``backend='tpu'`` keys a
-separate namespace.  Persistence is OPT-IN: nothing touches the filesystem
-unless a cache path is given (or $REPRO_AUTOTUNE_CACHE is set).
+JSON round-trip) are identical on real TPUs.  The backend namespace is
+``"<mode>:<device-kind>"`` (ops._backend_name — e.g. "interpret:cpu",
+"tpu:tpu-v5e"): the device kind is part of the bucket so CPU-interpret
+timings can never shadow TPU winners, nor one TPU generation another.
+Persistence is OPT-IN: nothing touches the filesystem unless a cache path
+is given (or $REPRO_AUTOTUNE_CACHE is set).
 """
 from __future__ import annotations
 

@@ -29,7 +29,14 @@ def _interpret() -> bool:
 
 
 def _backend_name() -> str:
-    return "tpu" if _on_tpu() else "interpret"
+    """Autotune-cache namespace: execution mode PLUS the device kind.
+
+    The device kind matters on both sides of the split: "interpret:cpu"
+    timings can't shadow real-TPU winners, and winners recorded on one TPU
+    generation (v5e) can't shadow another (v6e) — different VMEM/MXU
+    envelopes want different tiles."""
+    kind = jax.devices()[0].device_kind.lower().replace(" ", "-")
+    return ("tpu" if _on_tpu() else "interpret") + f":{kind}"
 
 
 def _pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:

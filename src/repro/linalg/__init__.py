@@ -1,0 +1,19 @@
+# repro.linalg — the operator-source + execution-planner facade over every
+# randomized-SVD path in the repo (dense / streamed / batched / sharded /
+# matrix-free).  See DESIGN.md §"API: operators and plans".
+from repro.core.rsvd import RSVDConfig, low_rank_error, truncation_error  # noqa: F401
+from repro.linalg.api import eigvals, pca, plan, residual, svd  # noqa: F401
+from repro.linalg.operators import (  # noqa: F401
+    CenteredOp,
+    DenseOp,
+    HostOp,
+    LinOp,
+    LowRankUpdateOp,
+    ScaledOp,
+    ShardedOp,
+    StackedOp,
+    as_linop,
+    column_means,
+    deflated,
+)
+from repro.linalg.planner import Budget, ExecutionPlan  # noqa: F401

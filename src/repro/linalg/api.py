@@ -1,0 +1,256 @@
+"""`repro.linalg` public facade: one call-site pattern for every rSVD path.
+
+    U, S, Vt = linalg.svd(source, k)                 # planner picks the path
+    pl       = linalg.plan(source, k)                # inspect before running
+    U, S, Vt = linalg.svd(source, k, plan=pl)        # execute a pinned plan
+    err      = linalg.residual(source, (U, S, Vt))   # panel-wise, no m x n temp
+
+`source` is anything `as_linop` accepts: a device array (DenseOp), a host
+numpy array (HostOp, panel-streamed), a 3-D stack (StackedOp), a
+`ShardedOp(A, mesh, axis)`, or a composed operator (CenteredOp, ScaledOp,
+LowRankUpdateOp) — the last class runs the generic operator body, nothing
+materialized.  Execution delegates to the SAME numerics as the historical
+entry points (`core/rsvd.py`, `core/blocked.py`, `core/distributed.py`), so
+fixed-seed results are bit-identical to the pre-facade paths.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qr as qr_mod
+from repro.core import sketch as sketch_mod
+from repro.core.rsvd import RSVDConfig
+from repro.linalg import planner as planner_mod
+from repro.linalg.operators import LinOp, ShardedOp, as_linop
+from repro.linalg.planner import Budget, ExecutionPlan
+
+SVDResult = Tuple[jax.Array, jax.Array, jax.Array]
+
+
+def plan(op, k: int, budget: Optional[Budget] = None,
+         overrides: Optional[RSVDConfig] = None) -> ExecutionPlan:
+    """See planner.plan — re-exported as part of the facade."""
+    return planner_mod.plan(op, k, budget=budget, overrides=overrides)
+
+
+def _dense_array(op: LinOp) -> jax.Array:
+    """The device array a dense plan executes on (host numpy under a dense
+    plan moves wholesale, matching the historical entry point)."""
+    return op.array if isinstance(op.array, jax.Array) else jnp.asarray(op.array)
+
+
+def svd(
+    a,
+    k: int,
+    *,
+    plan: Optional[ExecutionPlan] = None,
+    overrides: Optional[RSVDConfig] = None,
+    budget: Optional[Budget] = None,
+    seed: int = 0,
+) -> SVDResult:
+    """Rank-k randomized SVD of any operator source.  Returns (U, S, Vt)
+    with U: m x k, S: k, Vt: k x n (leading batch axis for StackedOp)."""
+    op = as_linop(a)
+    pl = plan if plan is not None else planner_mod.plan(op, k, budget=budget, overrides=overrides)
+    cfg = pl.to_config()
+    if pl.path == "dense":
+        from repro.core import rsvd as rsvd_mod
+
+        return rsvd_mod._randomized_svd_dense(
+            _dense_array(op), jnp.asarray(seed, jnp.uint32), k, cfg
+        )
+    if pl.path == "streamed":
+        from repro.core import blocked
+
+        return blocked.svd_streamed(op.array, k, cfg, seed=seed)
+    if pl.path == "batched":
+        from repro.core import blocked
+
+        return blocked.svd_batched(op.array, k, cfg, seed=seed)
+    if pl.path == "sharded":
+        from repro.core import distributed
+
+        mesh, axis = op.sharding
+        return distributed.svd_sharded(op.array, k, mesh, axis, cfg, seed=seed)
+    if pl.path == "matfree":
+        return _matfree_svd(op, k, pl, seed)
+    raise ValueError(f"unknown execution path: {pl.path}")
+
+
+def eigvals(
+    a,
+    k: int,
+    *,
+    plan: Optional[ExecutionPlan] = None,
+    overrides: Optional[RSVDConfig] = None,
+    budget: Optional[Budget] = None,
+    seed: int = 0,
+) -> jax.Array:
+    """k largest singular values only (the paper's eigenvalue-benchmark
+    mode: Algorithm 1 steps 1-5, Sigma only)."""
+    op = as_linop(a)
+    pl = plan if plan is not None else planner_mod.plan(op, k, budget=budget, overrides=overrides)
+    cfg = pl.to_config()
+    if pl.path == "dense":
+        from repro.core import rsvd as rsvd_mod
+
+        return rsvd_mod._randomized_eigvals_dense(
+            _dense_array(op), jnp.asarray(seed, jnp.uint32), k, cfg
+        )
+    if pl.path == "streamed":
+        from repro.core import blocked
+
+        return blocked.eigvals_streamed(op.array, k, cfg, seed=seed)
+    if pl.path == "matfree":
+        return _matfree_svd(op, k, pl, seed, want_uv=False)
+    # batched / sharded: Sigma rides the factor solve
+    return svd(op, k, plan=pl, seed=seed)[1]
+
+
+# ---------------------------------------------------------------------------
+# Matrix-free body: Algorithm 1 over the LinOp protocol (composed operators)
+# ---------------------------------------------------------------------------
+
+def _matfree_svd(op: LinOp, k: int, pl: ExecutionPlan, seed, want_uv: bool = True):
+    """Algorithm 1 phrased purely through matmat/rmatmat — serves any
+    composed operator (centered, scaled, deflated) without materializing it.
+    The range finder works on the taller orientation, like the dense path.
+    ``want_uv=False`` is the Sigma-only mode: steps 1-5, skipping the
+    step-6 U assembly (the m x s GEMM).
+
+    NOTE: the stabilized loop below deliberately mirrors the unfused body
+    in core/rsvd.py (`_stabilized_power` / `_rsvd_body`) with A@ / Aᵀ@
+    replaced by the operator products — numerics fixes there must land
+    here too (tests/test_planner.py pins the paths against each other
+    through the CenteredOp == pca_exact property)."""
+    m_raw, n_raw = op.shape
+    if m_raw < n_raw:
+        if not want_uv:
+            return _matfree_svd(op.T, k, pl, seed, want_uv=False)
+        V, S, Ut = _matfree_svd(op.T, k, pl, seed)
+        return Ut.T, S, V.T
+    with qr_mod.kernel_backend(pl.kernel_backend):
+        m, n = op.shape
+        s = min(k + pl.oversample, min(m, n))
+        fdtype = jnp.promote_types(op.dtype, jnp.float32)
+        omega = sketch_mod.sketch_matrix(
+            n, s, jnp.asarray(seed, jnp.uint32), pl.sketch_kind, dtype=fdtype
+        )
+        Y = op.matmat(omega)
+        for _ in range(pl.power_iters):
+            if pl.power_scheme == "plain":
+                Y = op.matmat(op.rmatmat(Y))
+            else:
+                Q = qr_mod.orthonormalize(Y, pl.qr_method)
+                Z = op.rmatmat(Q)
+                Qz = qr_mod.orthonormalize(Z, pl.qr_method)
+                Y = op.matmat(Qz)
+        Q = qr_mod.orthonormalize(Y, pl.qr_method)
+        B = op.rmatmat(Q).T                      # (s, n) without forming A
+        from repro.core.rsvd import _small_svd
+
+        U_b, S, Vt = _small_svd(B, pl.small_svd)
+        if not want_uv:
+            return S[:k]
+        U = Q @ U_b
+        return U[:, :k], S[:k], Vt[:k, :]
+
+
+# ---------------------------------------------------------------------------
+# PCA on the centered OPERATOR (the m x n centered temporary is gone)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k", "pl"))
+def _pca_centered_dense(X: jax.Array, seed: jax.Array, k: int, pl: ExecutionPlan):
+    """Jitted PCA over the centered OPERATOR of a device-resident X: the
+    whole pipeline (mean, sketch, power loop, small SVD) is one compiled
+    program per (shape, plan) — the repeated-PCA hot path — while X - mu
+    still never materializes (the CenteredOp matmat/rmatmat carry the
+    correction).  ExecutionPlan is frozen/hashable, so it keys the cache;
+    the seed is traced."""
+    from repro.linalg.operators import CenteredOp, DenseOp
+
+    mu = jnp.mean(X, axis=0)
+    _, S, Vt = _matfree_svd(CenteredOp(DenseOp(X), mu), k, pl, seed)
+    return mu, S, Vt
+
+
+def pca(x, k: int, *, overrides: Optional[RSVDConfig] = None,
+        budget: Optional[Budget] = None, seed: int = 0):
+    """Top-k principal components of X (N x d) via the CenteredOp source.
+
+    Returns a `repro.core.pca.PCAResult`.  Unlike the historical
+    `core.pca.pca`, the centered matrix X - mu is never materialized: the
+    range finder consumes `CenteredOp(X)` through matmat/rmatmat.  Device-
+    resident X runs as one jitted program (cached per shape/plan); host
+    numpy sources stream row panels eagerly."""
+    from repro.core.pca import PCAResult
+    from repro.linalg.operators import CenteredOp, DenseOp
+
+    op = as_linop(x)
+    n = op.shape[0]
+    if type(op) is DenseOp:  # HostOp subclasses DenseOp — excluded by type()
+        # Plan on shapes only (a dummy mu skips the eager column_means),
+        # then run the compiled pipeline.
+        shape_op = CenteredOp(op, mu=jnp.zeros((op.shape[1],), op.dtype))
+        pl = planner_mod.plan(shape_op, k, budget=budget, overrides=overrides)
+        mu, S, Vt = _pca_centered_dense(
+            op.array, jnp.asarray(seed, jnp.uint32), k, pl
+        )
+    else:
+        cop = CenteredOp(op)
+        mu = cop.mu
+        _, S, Vt = svd(cop, k, overrides=overrides, budget=budget, seed=seed)
+    return PCAResult(
+        components=Vt,
+        explained_variance=S**2 / (n - 1),
+        singular_values=S,
+        mean=mu,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Panel-wise residual: relative Frobenius error without an m x n temporary
+# ---------------------------------------------------------------------------
+
+def residual(a, result: SVDResult, block_rows: Optional[int] = None) -> jax.Array:
+    """||A - U S Vt||_F / ||A||_F accumulated one row panel at a time.
+
+    The historical `core.rsvd.low_rank_error` materializes the full m x n
+    reconstruction — fine in-core, impossible for a streamed/host source.
+    This walks `op.row_panels()`: per panel only a (block_rows x n) residual
+    exists, so HostOp sources report error at streaming residency.  3-D
+    stacked sources reduce over every slice (flat Frobenius norm)."""
+    U, S, Vt = result
+    op = as_linop(a)
+    if len(op.shape) == 3:
+        # One vmapped pass collecting (||R_i||^2, ||A_i||^2) per slice —
+        # summed before the divide, so an all-zero slice contributes 0/0-free
+        # and the stack is read exactly once.
+        A3 = jnp.asarray(op.array).astype(jnp.float32)
+
+        def _slice_sq(Ai, Ui, Si, Vti):
+            R = Ai - (Ui.astype(jnp.float32) * Si.astype(jnp.float32)[None, :]) \
+                @ Vti.astype(jnp.float32)
+            return jnp.sum(R * R), jnp.sum(Ai * Ai)
+
+        nums, dens = jax.vmap(_slice_sq)(A3, U, S, Vt)
+        return jnp.sqrt(jnp.sum(nums) / jnp.sum(dens))
+    num = jnp.zeros((), jnp.float32)
+    den = jnp.zeros((), jnp.float32)
+    lo = 0
+    scaled_vt = (S[:, None] * Vt).astype(jnp.float32)          # (k, n), skinny
+    for panel in op.row_panels(block_rows):
+        hi = lo + panel.shape[0]
+        P = panel.astype(jnp.float32)
+        R = P - U[lo:hi].astype(jnp.float32) @ scaled_vt
+        num = num + jnp.sum(R * R)
+        den = den + jnp.sum(P * P)
+        lo = hi
+    if lo != op.shape[0]:
+        raise ValueError(f"row_panels covered {lo} of {op.shape[0]} rows")
+    return jnp.sqrt(num / den)

@@ -1,0 +1,349 @@
+"""Operator sources for the randomized-SVD facade (`repro.linalg`).
+
+The paper's core claim is that randomized SVD becomes hardware-fast when
+every step is phrased as BLAS-3 over *whatever form the data arrives in*.
+`LinOp` is that form-contract: an operator exposes its shape/dtype, the two
+products the range finder needs (``matmat`` = A @ X, ``rmatmat`` = Aᵀ @ Y),
+and optionally a ``row_panels()`` iterator (out-of-core streaming, panel-wise
+residuals) and a ``sharding`` spec (mesh execution).  The execution planner
+(planner.py) dispatches on the source; the algorithm never sees anything but
+this protocol.
+
+Concrete sources:
+  DenseOp    device-resident 2-D array             -> dense in-memory path
+  HostOp     host (numpy) 2-D array, panel-streamed -> blocked/streaming path
+  StackedOp  3-D batch [B, m, n]                   -> batched vmap path
+  ShardedOp  row-sharded array on a device mesh    -> shard_map path
+
+Composed operators (the new workload class — nothing is materialized):
+  ScaledOp          alpha * A
+  CenteredOp        A - 1 muᵀ    (PCA without forming the centered matrix)
+  LowRankUpdateOp   A + U Vᵀ     (deflation: A - U_k S_k V_kᵀ as an operator)
+"""
+from __future__ import annotations
+
+from typing import Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class LinOp:
+    """Operator-source protocol.  Subclasses must provide `shape`, `dtype`,
+    `matmat`, and `rmatmat`; `row_panels` / `sharding` are optional extras
+    the planner and panel-wise consumers (linalg.residual) exploit."""
+
+    #: (mesh, axis) for mesh-resident operators, else None.
+    sharding: Optional[Tuple[jax.sharding.Mesh, str]] = None
+    #: preferred row-panel height for streamed execution, else None.
+    block_rows: Optional[int] = None
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        raise NotImplementedError
+
+    @property
+    def dtype(self):
+        raise NotImplementedError
+
+    def matmat(self, X: jax.Array) -> jax.Array:
+        """A @ X  (X is n x s, sketch-width)."""
+        raise NotImplementedError
+
+    def rmatmat(self, Y: jax.Array) -> jax.Array:
+        """Aᵀ @ Y  (Y is m x s, sketch-width)."""
+        raise NotImplementedError
+
+    def row_panels(self, block_rows: Optional[int] = None) -> Iterator[jax.Array]:
+        """Device-resident row panels covering A top-to-bottom.
+
+        The default materializes panel slices of the dense form; sources
+        with a cheaper panel story (HostOp: host slices moved one at a
+        time) override it.  Composed operators compose panel-wise, so a
+        CenteredOp over a HostOp still never forms the full matrix."""
+        m = self.shape[0]
+        b = block_rows or self.block_rows or m
+        eye_dtype = jnp.promote_types(self.dtype, jnp.float32)
+        for lo in range(0, m, b):
+            hi = min(lo + b, m)
+            # A[lo:hi] = (E_panelᵀ A)ᵀ through rmatmat — panel-local only.
+            e = jnp.zeros((m, hi - lo), eye_dtype).at[jnp.arange(lo, hi), jnp.arange(hi - lo)].set(1.0)
+            yield self.rmatmat(e).T.astype(self.dtype)
+
+    @property
+    def T(self) -> "LinOp":
+        """The transposed operator (matmat/rmatmat swapped)."""
+        return _TransposedOp(self)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"{type(self).__name__}(shape={self.shape}, dtype={jnp.dtype(self.dtype).name})"
+
+
+class _TransposedOp(LinOp):
+    def __init__(self, op: LinOp):
+        self._op = op
+
+    @property
+    def shape(self):
+        s = self._op.shape
+        return s[:-2] + (s[-1], s[-2])
+
+    @property
+    def dtype(self):
+        return self._op.dtype
+
+    def matmat(self, X):
+        return self._op.rmatmat(X)
+
+    def rmatmat(self, Y):
+        return self._op.matmat(Y)
+
+    @property
+    def T(self) -> LinOp:
+        return self._op
+
+
+class DenseOp(LinOp):
+    """Device-resident 2-D array (the paper's in-core case)."""
+
+    def __init__(self, array, block_rows: Optional[int] = None):
+        if getattr(array, "ndim", None) != 2:
+            raise ValueError(f"DenseOp expects a 2-D array, got shape {getattr(array, 'shape', None)}")
+        self.array = array
+        self.block_rows = block_rows
+
+    @property
+    def shape(self):
+        return tuple(self.array.shape)
+
+    @property
+    def dtype(self):
+        return self.array.dtype
+
+    def matmat(self, X):
+        return self.array @ X
+
+    def rmatmat(self, Y):
+        return self.array.T @ Y
+
+    def row_panels(self, block_rows: Optional[int] = None):
+        m = self.shape[0]
+        b = block_rows or self.block_rows or m
+        for lo in range(0, m, b):
+            yield jnp.asarray(self.array[lo : min(lo + b, m)])
+
+
+class HostOp(DenseOp):
+    """Host (numpy) 2-D array, possibly larger than device memory.
+
+    Only one `block_rows x n` panel is device-resident at a time (the
+    out-of-core contract of core/blocked.py); `matmat`/`rmatmat` stream the
+    panels so even composed operators over a HostOp never move A wholesale.
+    """
+
+    DEFAULT_BLOCK_ROWS = 4096
+
+    def __init__(self, array, block_rows: Optional[int] = None):
+        array = np.asarray(array)
+        super().__init__(array, block_rows or self.DEFAULT_BLOCK_ROWS)
+
+    def matmat(self, X):
+        parts = [panel @ X for panel in self.row_panels()]
+        return jnp.concatenate(parts, axis=0)
+
+    def rmatmat(self, Y):
+        m, _ = self.shape
+        out = None
+        lo = 0
+        for panel in self.row_panels():
+            hi = lo + panel.shape[0]
+            contrib = panel.T @ Y[lo:hi]
+            out = contrib if out is None else out + contrib
+            lo = hi
+        return out
+
+
+class StackedOp(LinOp):
+    """3-D batch [B, m, n]: a fleet of small SVDs under one vmap."""
+
+    def __init__(self, array):
+        if getattr(array, "ndim", None) != 3:
+            raise ValueError(f"StackedOp expects [B, m, n], got shape {getattr(array, 'shape', None)}")
+        self.array = jnp.asarray(array) if isinstance(array, np.ndarray) else array
+
+    @property
+    def shape(self):
+        return tuple(self.array.shape)
+
+    @property
+    def dtype(self):
+        return self.array.dtype
+
+    def matmat(self, X):
+        return self.array @ X      # batched matmul, X: [B, n, s] or [n, s]
+
+    def rmatmat(self, Y):
+        return jnp.swapaxes(self.array, -1, -2) @ Y
+
+
+class ShardedOp(LinOp):
+    """Row-sharded 2-D array on a device mesh (core/distributed.py path)."""
+
+    def __init__(self, array, mesh: jax.sharding.Mesh, axis: str = "data"):
+        if getattr(array, "ndim", None) != 2:
+            raise ValueError(f"ShardedOp expects a 2-D array, got shape {getattr(array, 'shape', None)}")
+        self.array = array
+        self.mesh = mesh
+        self.axis = axis
+        self.sharding = (mesh, axis)
+
+    @property
+    def shape(self):
+        return tuple(self.array.shape)
+
+    @property
+    def dtype(self):
+        return self.array.dtype
+
+    def matmat(self, X):
+        return self.array @ X
+
+    def rmatmat(self, Y):
+        return self.array.T @ Y
+
+    def row_panels(self, block_rows: Optional[int] = None):
+        yield jnp.asarray(self.array)
+
+
+# ---------------------------------------------------------------------------
+# Composed operators — the matrix is never materialized
+# ---------------------------------------------------------------------------
+
+class ComposedOp(LinOp):
+    """Base for operators derived from another operator."""
+
+    def __init__(self, base: LinOp):
+        self.base = as_linop(base)
+        if len(self.base.shape) != 2:
+            raise ValueError(
+                f"composed operators require a 2-D base, got shape {self.base.shape}"
+                " (stacked sources: compose per slice, or use core.pca.batched_pca"
+                " for per-channel PCA)"
+            )
+        self.block_rows = self.base.block_rows
+
+    @property
+    def shape(self):
+        return self.base.shape
+
+    @property
+    def dtype(self):
+        return self.base.dtype
+
+
+class ScaledOp(ComposedOp):
+    """alpha * A."""
+
+    def __init__(self, base: LinOp, alpha: float):
+        super().__init__(base)
+        self.alpha = alpha
+
+    def matmat(self, X):
+        return self.alpha * self.base.matmat(X)
+
+    def rmatmat(self, Y):
+        return self.alpha * self.base.rmatmat(Y)
+
+    def row_panels(self, block_rows: Optional[int] = None):
+        for panel in self.base.row_panels(block_rows):
+            yield (self.alpha * panel).astype(panel.dtype)
+
+
+class CenteredOp(ComposedOp):
+    """A - 1 muᵀ: the PCA operator.  mu defaults to A's column means,
+    computed with one panel-streamed pass — the centered matrix itself is
+    never formed (the m x n temporary the old `pca` materialized)."""
+
+    def __init__(self, base: LinOp, mu: Optional[jax.Array] = None):
+        super().__init__(base)
+        self.mu = column_means(self.base) if mu is None else jnp.asarray(mu)
+
+    def matmat(self, X):
+        correction = self.mu @ X                       # (s,)
+        return self.base.matmat(X) - correction[None, :]
+
+    def rmatmat(self, Y):
+        colsum = jnp.sum(Y, axis=0)                    # (s,)
+        return self.base.rmatmat(Y) - jnp.outer(self.mu, colsum)
+
+    def row_panels(self, block_rows: Optional[int] = None):
+        for panel in self.base.row_panels(block_rows):
+            yield (panel - self.mu[None, :]).astype(panel.dtype)
+
+
+class LowRankUpdateOp(ComposedOp):
+    """A + U Vᵀ with skinny U (m x r), V (n x r).
+
+    Deflation — peeling off an already-computed leading subspace so the
+    next solve targets the residual spectrum — is
+    ``LowRankUpdateOp(op, -(U * S), Vt.T)``, i.e. A - U S Vᵀ as an operator.
+    """
+
+    def __init__(self, base: LinOp, U: jax.Array, V: jax.Array):
+        super().__init__(base)
+        m, n = self.base.shape
+        if U.shape[0] != m or V.shape[0] != n or U.shape[1] != V.shape[1]:
+            raise ValueError(
+                f"update factors U {U.shape} / V {V.shape} do not match operator {self.base.shape}"
+            )
+        self.U = U
+        self.V = V
+
+    def matmat(self, X):
+        return self.base.matmat(X) + self.U @ (self.V.T @ X)
+
+    def rmatmat(self, Y):
+        return self.base.rmatmat(Y) + self.V @ (self.U.T @ Y)
+
+    def row_panels(self, block_rows: Optional[int] = None):
+        lo = 0
+        for panel in self.base.row_panels(block_rows):
+            hi = lo + panel.shape[0]
+            yield (panel + self.U[lo:hi] @ self.V.T).astype(panel.dtype)
+            lo = hi
+
+
+def deflated(base: LinOp, U: jax.Array, S: jax.Array, Vt: jax.Array) -> LowRankUpdateOp:
+    """A - U S Vᵀ as an operator (the deflation workload)."""
+    return LowRankUpdateOp(base, -(U * S[None, :]), Vt.T)
+
+
+def column_means(op: LinOp) -> jax.Array:
+    """muᵀ = 1ᵀA / m, accumulated one row panel at a time."""
+    op = as_linop(op)
+    m = op.shape[0]
+    total = None
+    for panel in op.row_panels():
+        contrib = jnp.sum(panel.astype(jnp.promote_types(panel.dtype, jnp.float32)), axis=0)
+        total = contrib if total is None else total + contrib
+    return (total / m).astype(op.dtype)
+
+
+def as_linop(a) -> LinOp:
+    """Coerce an array (or LinOp) to an operator source.
+
+    2-D device arrays -> DenseOp, 2-D host numpy -> HostOp (streamed),
+    3-D -> StackedOp.  Already-sharded arrays are NOT auto-detected — wrap
+    them in ShardedOp(mesh, axis) explicitly (the mesh axis is a caller
+    decision, not an array property the tracer can see)."""
+    if isinstance(a, LinOp):
+        return a
+    ndim = getattr(a, "ndim", None)
+    if ndim == 3:
+        return StackedOp(a)
+    if ndim == 2:
+        if isinstance(a, np.ndarray):
+            return HostOp(a)
+        return DenseOp(a)
+    raise TypeError(f"cannot interpret {type(a).__name__} with ndim={ndim} as a LinOp")

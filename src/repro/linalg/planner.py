@@ -1,0 +1,304 @@
+"""Execution planner: `plan(op, k, budget) -> ExecutionPlan`.
+
+Replaces the ad-hoc `if` ladder that used to live in `core.rsvd.randomized_svd`
+plus the hand-tuned `RSVDConfig` execution switches (`fused_power`,
+`kernel_backend`, `block_rows`, `batched`).  The planner inspects the
+operator source (shape, dtype, residency, sharding), the device, the VMEM /
+HBM budget, and the `kernels/autotune.py` block-size cache, and emits an
+inspectable `ExecutionPlan` that `linalg.svd / eigvals / pca` execute.
+
+`RSVDConfig` survives as a thin frozen view for explicit overrides: passing
+`overrides=RSVDConfig...` reproduces the pre-planner dispatch decisions
+bit-for-bit (the presets `faithful()` / `fast()` / `streaming()` map onto
+plans 1:1), with the same VMEM gate the dense body applies — so a plan's
+`fused_power` field is the EFFECTIVE decision, never an unhonored request.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rsvd import RSVDConfig
+from repro.linalg import operators as ops_mod
+from repro.linalg.operators import LinOp, as_linop
+from repro.roofline import rsvd_model
+
+#: execution paths the planner can choose
+PATHS = ("dense", "streamed", "batched", "sharded", "matfree")
+
+
+@dataclass(frozen=True)
+class Budget:
+    """Hardware envelope the planner fits a solve into.
+
+    Unset fields resolve to the single source of truth — the per-kernel
+    VMEM working-set budget (kernels/power_step.py) and the TPU-v5e HBM
+    size (roofline/hw.py) — so a partially-specified Budget can never
+    freeze a stale copy of either constant.  `vmem_bytes` can only
+    TIGHTEN the fusion gate: the fused body re-checks the compiled-in
+    budget at trace time, so a plan claiming fusion past it would lie
+    about what executes (see `_effective_fused_power`)."""
+
+    vmem_bytes: Optional[int] = None
+    hbm_bytes: Optional[int] = None
+
+    def __post_init__(self):
+        from repro.kernels.power_step import VMEM_BUDGET_BYTES
+        from repro.roofline import hw
+
+        if self.vmem_bytes is None:
+            object.__setattr__(self, "vmem_bytes", VMEM_BUDGET_BYTES)
+        if self.hbm_bytes is None:
+            object.__setattr__(self, "hbm_bytes", hw.HBM_BYTES)
+
+    @staticmethod
+    def default() -> "Budget":
+        return Budget()
+
+
+@dataclass(frozen=True)
+class ExecutionPlan:
+    """The planner's full decision record — every field the executor reads,
+    plus the roofline prediction, so a plan is inspectable and loggable
+    (benchmarks/bench_rsvd.py persists executed plans to BENCH_rsvd.json)."""
+
+    path: str                      # dense | streamed | batched | sharded | matfree
+    m: int                         # post-orientation tall dim (m >= n)
+    n: int
+    k: int
+    s: int                         # sketch width = min(k + oversample, n)
+    batch: int                     # leading batch dim (1 unless path=batched)
+    dtype: str
+    # numerical variant (Algorithm 1 switches)
+    oversample: int
+    power_iters: int
+    power_scheme: str
+    qr_method: str
+    small_svd: str
+    sketch_kind: str
+    # execution switches (all EFFECTIVE — gates already applied)
+    fused_sketch: bool
+    fused_power: bool
+    kernel_backend: str
+    block_rows: Optional[int]
+    block_cols: Optional[int]
+    blocks: Tuple[int, int, int]   # (bm, bn, bk) the kernels will tile with
+    predicted_hbm_bytes: int       # roofline/rsvd_model.py whole-solve bytes
+
+    def to_config(self) -> RSVDConfig:
+        """The thin frozen RSVDConfig view the core numerics execute."""
+        return RSVDConfig(
+            oversample=self.oversample,
+            power_iters=self.power_iters,
+            power_scheme=self.power_scheme,
+            qr_method=self.qr_method,
+            small_svd=self.small_svd,
+            sketch_kind=self.sketch_kind,
+            fused_sketch=self.fused_sketch,
+            fused_power=self.fused_power,
+            kernel_backend=self.kernel_backend,
+            block_rows=self.block_rows if self.path == "streamed" else None,
+            block_cols=self.block_cols,
+            batched=self.path == "batched",
+        )
+
+    def describe(self) -> str:
+        """One-line human summary (examples/quickstart.py prints this)."""
+        shape = f"{self.batch}x{self.m}x{self.n}" if self.batch > 1 else f"{self.m}x{self.n}"
+        bits = [
+            f"path={self.path}", f"shape={shape}", f"k={self.k}", f"s={self.s}",
+            f"qr={self.qr_method}", f"backend={self.kernel_backend}",
+            f"fused_sketch={self.fused_sketch}", f"fused_power={self.fused_power}",
+        ]
+        if self.block_rows:
+            bits.append(f"block_rows={self.block_rows}")
+        bits.append(f"pred_hbm={self.predicted_hbm_bytes / 1e6:.1f}MB")
+        return " ".join(bits)
+
+
+def _is_f64(dtype) -> bool:
+    return jnp.dtype(dtype) == jnp.float64
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pick_path(op: LinOp, cfg: Optional[RSVDConfig]) -> str:
+    """The dispatch ladder, now in one inspectable place.
+
+    With explicit overrides this reproduces the historical
+    `core.rsvd.randomized_svd` dispatch exactly: 3-D / `batched` -> batched,
+    `block_rows` -> streamed, everything else dense (host numpy included —
+    the old entry point moved it to device wholesale).  Without overrides
+    the operator's residency decides: host-resident sources stream."""
+    if isinstance(op, (ops_mod.ComposedOp, ops_mod._TransposedOp)):
+        return "matfree"
+    if op.sharding is not None:
+        return "sharded"
+    if len(op.shape) == 3:
+        return "batched"
+    if not isinstance(op, ops_mod.DenseOp):
+        # protocol-only sources have no .array to hand the dense/streamed
+        # executors — they run the generic operator body, overrides or not
+        return "matfree"
+    if cfg is not None:
+        if cfg.batched:
+            return "batched"
+        if cfg.block_rows:
+            return "streamed"
+        # An explicitly constructed HostOp (or a block_rows-carrying source)
+        # expresses out-of-core intent that numerical overrides must not
+        # discard — moving the whole host array to device would defeat the
+        # residency contract.  The deprecation shim wraps raw arrays in
+        # DenseOp, so the historical wholesale-dense dispatch is unaffected.
+        if isinstance(op, ops_mod.HostOp) or op.block_rows:
+            return "streamed"
+        return "dense"
+    if isinstance(op, ops_mod.HostOp) or op.block_rows:
+        return "streamed"
+    return "dense"
+
+
+def _default_config(op: LinOp, path: str, budget: Budget) -> RSVDConfig:
+    """Planner defaults when the caller gives no overrides: device- and
+    dtype-aware versions of the faithful/fast/streaming presets."""
+    f64 = _is_f64(op.dtype)
+    if path == "streamed":
+        block = op.block_rows or ops_mod.HostOp.DEFAULT_BLOCK_ROWS
+        # Shrink the panel until one panel + sketch-width state fits a
+        # quarter of the HBM budget (leave room for Y/Q/U and the caller).
+        # Panels are block_rows x n AFTER orientation (the streamed body
+        # factors the taller side), so the row length is the SHORT dim.
+        n = min(op.shape[-2], op.shape[-1])
+        itemsize = jnp.dtype(op.dtype).itemsize
+        while block > 256 and block * n * itemsize > budget.hbm_bytes // 4:
+            block //= 2
+        return dataclasses.replace(RSVDConfig.streaming(block_rows=block),
+                                   fused_sketch=_on_tpu() and not f64,
+                                   kernel_backend="pallas" if _on_tpu() and not f64 else "jnp")
+    if f64:
+        return RSVDConfig.faithful()  # the paper's dgesvd setting: jnp, no fusion
+    if _on_tpu():
+        if path == "dense":
+            return RSVDConfig.fast()
+        # batched / sharded / matfree: the CQR Gram+TRSM primitives route
+        # through the Pallas kernels on every path that honors the backend
+        return RSVDConfig(power_scheme="stabilized", qr_method="cqr2",
+                          small_svd="lapack", fused_sketch=True,
+                          kernel_backend="pallas")
+    # CPU / interpret-mode hosts: the Pallas kernels are a correctness
+    # harness there, not a perf mode — stay on the XLA GEMMs.
+    return RSVDConfig(power_scheme="stabilized", qr_method="cqr2")
+
+
+def _effective_fused_power(m: int, n: int, s: int, dtype, cfg: RSVDConfig,
+                           path: str, budget: Budget) -> bool:
+    """The dense body's fusion gate, evaluated at plan time.  Delegates to
+    the SAME predicate the dense body uses (core.rsvd._use_fused_power,
+    parameterized by the plan's VMEM budget) so plan and execution can
+    never drift apart.  The budget is clamped to the kernel's compiled-in
+    VMEM_BUDGET_BYTES: the body re-checks that constant at trace time, so
+    a looser Budget must not make the plan claim a fusion that would not
+    actually execute."""
+    if path != "dense":
+        return False  # vmap (batched) and panel/shard bodies never fuse power
+    from repro.core.rsvd import _use_fused_power
+    from repro.kernels.power_step import VMEM_BUDGET_BYTES
+
+    shape = jax.ShapeDtypeStruct((m, n), dtype)
+    vmem = min(budget.vmem_bytes, VMEM_BUDGET_BYTES)
+    return _use_fused_power(shape, cfg, s, vmem_budget=vmem)
+
+
+def plan(
+    op,
+    k: int,
+    budget: Optional[Budget] = None,
+    overrides: Optional[RSVDConfig] = None,
+) -> ExecutionPlan:
+    """Build the execution plan for a rank-k solve over `op`.
+
+    Shape-only: `op` may wrap a `jax.ShapeDtypeStruct` — nothing is
+    computed or moved here.  `overrides` pins the numerical variant and the
+    historical dispatch; otherwise the planner picks device-appropriate
+    defaults per source kind."""
+    op = as_linop(op)
+    budget = budget or Budget.default()
+    path = _pick_path(op, overrides)
+    cfg = overrides if overrides is not None else _default_config(op, path, budget)
+
+    shape = op.shape
+    batch = shape[0] if len(shape) == 3 else 1
+    m_raw, n_raw = shape[-2], shape[-1]
+    m, n = (m_raw, n_raw) if m_raw >= n_raw else (n_raw, m_raw)  # tall orientation
+    s = min(k + cfg.oversample, n)
+
+    fused_power = _effective_fused_power(m, n, s, op.dtype, cfg, path, budget)
+    fused_sketch = (
+        bool(cfg.fused_sketch)
+        and not _is_f64(op.dtype)
+        and path not in ("matfree", "sharded")  # shard body materializes Omega
+    )
+    # float64 always takes the jnp primitives (qr._use_pallas vetoes the
+    # fp32-accumulating kernels) — record the backend that actually runs.
+    backend = "jnp" if _is_f64(op.dtype) else cfg.kernel_backend
+    power_scheme, qr_method, small_svd = cfg.power_scheme, cfg.qr_method, cfg.small_svd
+    if path == "sharded":
+        # The shard_map body hardcodes its variant — a CQR2 stabilized loop,
+        # replicated LAPACK small SVD, per-shard regenerated Omega
+        # (core/distributed.py); the plan records THAT, not the overrides'
+        # wishes, so BENCH rows and describe() never misreport execution.
+        power_scheme, qr_method, small_svd = "stabilized", "cqr2", "lapack"
+
+    from repro.kernels.ops import _block, _select_blocks
+
+    # Mirror the EXACT (kernel, shape-order, clamp) lookups the wrappers
+    # perform (ops.power_step uses (m, n, s); ops.sketch_matmul uses
+    # (m, s, n) and clamps bn to the sketch width) so the recorded tiles
+    # are the ones that will actually run.
+    if fused_power:
+        blocks = _select_blocks("power_step", (m, n, s), op.dtype)
+    elif fused_sketch:
+        bm_, bn_, bk_ = _select_blocks("sketch_matmul", (m, s, n), op.dtype)
+        blocks = (bm_, min(bn_, _block(s)), bk_)
+    else:
+        blocks = _select_blocks("matmul", (m, n, s), op.dtype)
+
+    predicted = rsvd_model.predicted_hbm_bytes(
+        m, n, s,
+        power_iters=cfg.power_iters,
+        fused_power=fused_power,
+        fused_sketch=fused_sketch,
+        dtype_bytes=jnp.dtype(op.dtype).itemsize,
+        batch=batch,
+    )
+
+    block_rows = None
+    if path == "streamed":
+        # cfg's explicit panel height wins; else the source's; else the
+        # streaming default (so a streamed plan is always executable).
+        block_rows = cfg.block_rows or op.block_rows or ops_mod.HostOp.DEFAULT_BLOCK_ROWS
+
+    return ExecutionPlan(
+        path=path,
+        m=m, n=n, k=k, s=s, batch=batch,
+        dtype=jnp.dtype(op.dtype).name,
+        oversample=cfg.oversample,
+        power_iters=cfg.power_iters,
+        power_scheme=power_scheme,
+        qr_method=qr_method,
+        small_svd=small_svd,
+        sketch_kind=cfg.sketch_kind,
+        fused_sketch=fused_sketch,
+        fused_power=fused_power,
+        kernel_backend=backend,
+        block_rows=block_rows,
+        block_cols=cfg.block_cols,
+        blocks=tuple(blocks),
+        predicted_hbm_bytes=predicted,
+    )

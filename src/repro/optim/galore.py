@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.rsvd import RSVDConfig, randomized_svd
+from repro.core.rsvd import RSVDConfig
 from repro.optim import adamw
 
 Params = Any
@@ -87,24 +87,26 @@ def init_state(params: Params, rank: int, seed: int = 23) -> GaLoreState:
 
 
 def _refresh_projection(g: jax.Array, rank: int) -> jax.Array:
-    """Top-r singular subspace of the gradient via the paper's RSVD.
+    """Top-r singular subspace of the gradient via the paper's RSVD
+    (the `repro.linalg` facade; `_RSVD_CFG` pins the numerical variant).
 
     Scan-stacked [units, m, n] gradients refresh every unit's projection in
-    ONE vmapped solve (core/blocked.py batched path) — the projection-refresh
-    overhead is a single kernel launch regardless of layer count."""
+    ONE vmapped solve (the StackedOp execution path) — the projection-
+    refresh overhead is a single kernel launch regardless of layer count."""
+    from repro import linalg
+
     m, n = g.shape[-2:]
     if g.ndim == 3:
-        from repro.core.blocked import batched_randomized_svd
-
         if m <= n:
-            u, _, _ = batched_randomized_svd(g, rank, _RSVD_CFG)
+            u, _, _ = linalg.svd(linalg.StackedOp(g), rank, overrides=_RSVD_CFG)
             return u                  # (units, m, r)
-        _, _, vt = batched_randomized_svd(g, rank, _RSVD_CFG)
+        _, _, vt = linalg.svd(linalg.StackedOp(g), rank, overrides=_RSVD_CFG)
         return _mT(vt)                # (units, n, r)
+    gf = g.astype(jnp.float32)
     if m <= n:
-        u, _, _ = randomized_svd(g.astype(jnp.float32), rank, _RSVD_CFG)
+        u, _, _ = linalg.svd(gf, rank, overrides=_RSVD_CFG)
         return u                      # (m, r)
-    _, _, vt = randomized_svd(g.astype(jnp.float32), rank, _RSVD_CFG)
+    _, _, vt = linalg.svd(gf, rank, overrides=_RSVD_CFG)
     return vt.T                       # (n, r)
 
 

@@ -1,0 +1,89 @@
+"""Analytic HBM-traffic model for randomized SVD execution plans.
+
+This is the structural model the fused one-pass range finder is built on
+(DESIGN.md §2, EXPERIMENTS.md §Perf).  It lives in the roofline layer so the
+execution planner (repro/linalg/planner.py) can stamp every `ExecutionPlan`
+with its predicted HBM bytes, and so benchmarks/bench_rsvd.py asserts the
+fused-vs-unfused saving against the SAME numbers the planner reports.
+
+Counting convention: fp32 words x `dtype_bytes`, reads AND writes of every
+large operand; s x s Grams are dropped (O(s^2) << m*s).  A is m x n (tall
+orientation — callers pass the post-orientation dims), sketch width s.
+"""
+from __future__ import annotations
+
+
+def hbm_bytes_per_power_iter(
+    m: int, n: int, s: int, fused: bool, dtype_bytes: int = 4
+) -> int:
+    """HBM traffic of ONE stabilized power iteration.
+
+      unfused:  Z = AᵀQ and Y' = A·Qz are separate GEMMs  -> A read TWICE
+                + CQR2 of Y reads Y twice and round-trips Q1/Q
+      fused:    kernels/power_step.py reads A ONCE, returns (Y, W=AᵀY, G=YᵀY);
+                Z = W R⁻¹ is a sketch-width TRSM, G kills CQR's first pass
+    """
+    if fused:
+        # power_step: read A + read Qz + write Y + write W (G is s x s, ~0)
+        kernel = m * n + n * s + m * s + n * s
+        # CQR2 with free first Gram: TRSM(Y)->Q1 (read Y, write Q1), gram(Q1)
+        cqr = 3 * m * s
+        # Z = W R^-1 (read W, write Z) + orthonormalize(Z) ~ CQR2 on n x s
+        small = 2 * n * s + 6 * n * s
+        return (kernel + cqr + small) * dtype_bytes
+    # Z = A^T Q (read A, read Q, write Z) + Y' = A Qz (read A, read Qz, write Y)
+    gemms = (m * n + m * s + n * s) + (m * n + n * s + m * s)
+    # CQR2 of Y: gram(Y) + TRSM(Y)->Q1 + gram(Q1) + TRSM(Q1)->Q
+    cqr = 6 * m * s
+    small = 6 * n * s  # orthonormalize(Z)
+    return (gemms + cqr + small) * dtype_bytes
+
+
+def sketch_bytes(
+    m: int, n: int, s: int, fused_sketch: bool, dtype_bytes: int = 4
+) -> int:
+    """HBM traffic of the sketch pass Y = A @ Omega.
+
+    Materialized Omega costs an extra write+read of the n x s factor; the
+    fused kernel generates Omega tiles in VMEM for free (the paper's RNG
+    pillar, TPU edition — DESIGN.md §2)."""
+    base = m * n + m * s  # read A, write Y
+    omega = 0 if fused_sketch else 2 * n * s
+    return (base + omega) * dtype_bytes
+
+
+def projection_bytes(m: int, n: int, s: int, fused_power: bool, dtype_bytes: int = 4) -> int:
+    """Step-3/4 traffic after the power loop: the final CQR2 + B = QᵀA.
+
+    The fused path's last W already holds AᵀY, so B = (W R⁻¹)ᵀ is a
+    sketch-width TRSM instead of a full read of A."""
+    cqr = (3 if fused_power else 6) * m * s  # final orthonormalization of Y
+    if fused_power:
+        b = 2 * n * s                         # TRSM on W
+    else:
+        b = m * n + m * s + n * s             # B = QᵀA reads A once more
+    return (cqr + b) * dtype_bytes
+
+
+def predicted_hbm_bytes(
+    m: int,
+    n: int,
+    s: int,
+    power_iters: int,
+    fused_power: bool,
+    fused_sketch: bool,
+    dtype_bytes: int = 4,
+    batch: int = 1,
+) -> int:
+    """Whole-algorithm HBM bytes for one rank-s range-finder solve.
+
+    sketch + q power iterations + final projection + step-6 assembly
+    (U = Q @ U_b: read Q, write U).  `batch` scales the total for the
+    stacked (vmapped) execution path — per-slice traffic is independent.
+    Callers pass post-orientation dims (m >= n).
+    """
+    total = sketch_bytes(m, n, s, fused_sketch, dtype_bytes)
+    total += power_iters * hbm_bytes_per_power_iter(m, n, s, fused_power, dtype_bytes)
+    total += projection_bytes(m, n, s, fused_power, dtype_bytes)
+    total += 2 * m * s * dtype_bytes  # U = Q @ U_b
+    return batch * total

@@ -17,8 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.blocked import batched_randomized_svd
-from repro.core.rsvd import RSVDConfig, low_rank_error, randomized_svd
+from repro import linalg
+from repro.core.rsvd import RSVDConfig, low_rank_error
 
 _RSVD = RSVDConfig(oversample=16, power_iters=2, qr_method="cqr2", small_svd="gram")
 
@@ -34,15 +34,19 @@ def _is_target(path: Tuple, leaf) -> bool:
 
 
 def _factorize_2d(W: jax.Array, rank: int):
-    U, S, Vt = randomized_svd(W, rank, _RSVD)
+    U, S, Vt = linalg.svd(W, rank, overrides=_RSVD)
     root = jnp.sqrt(S)
-    return U * root[None, :], root[:, None] * Vt, low_rank_error(W, U, S, Vt)
+    # panel-wise residual: the error report never forms the m x n
+    # reconstruction (linalg.residual), so factorizing huge projections
+    # doesn't momentarily double their memory.
+    err = linalg.residual(W, (U, S, Vt), block_rows=2048)
+    return U * root[None, :], root[:, None] * Vt, err
 
 
 def _factorize_stacked(W: jax.Array, rank: int):
-    """[units, m, n] leaf: one batched RSVD (core/blocked.py) for all units,
-    with per-unit decorrelated sketch seeds."""
-    U, S, Vt = batched_randomized_svd(W, rank, _RSVD)
+    """[units, m, n] leaf: one batched RSVD (the StackedOp execution path)
+    for all units, with per-unit decorrelated sketch seeds."""
+    U, S, Vt = linalg.svd(linalg.StackedOp(W), rank, overrides=_RSVD)
     root = jnp.sqrt(S)
     A = U * root[:, None, :]
     B = root[:, :, None] * Vt

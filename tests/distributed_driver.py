@@ -12,9 +12,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import linalg
 from repro.compat import shard_map
 from repro.core import RSVDConfig, low_rank_error, truncation_error
-from repro.core.distributed import distributed_randomized_svd
 from repro.core.spectra import make_test_matrix
 
 
@@ -26,7 +26,7 @@ def main():
 
     k = 16
     cfg = RSVDConfig(power_iters=2)
-    U, S, Vt = distributed_randomized_svd(A_sharded, k, mesh, "data", cfg)
+    U, S, Vt = linalg.svd(linalg.ShardedOp(A_sharded, mesh, "data"), k, overrides=cfg)
 
     # near-optimal error
     err = float(low_rank_error(A, jnp.asarray(U), jnp.asarray(S), jnp.asarray(Vt)))

@@ -118,7 +118,8 @@ def test_ops_consults_tuned_blocks_and_stays_correct():
     m, k, n = 200, 150, 70
     sel0 = ops._select_blocks("matmul", (m, n, k), jnp.float32)
     assert sel0 == (128, 128, 128)  # heuristic default
-    at.record("matmul", (m, n, k), "float32", at.BlockSizes(256, 64, 32), "interpret")
+    at.record("matmul", (m, n, k), "float32", at.BlockSizes(256, 64, 32),
+              ops._backend_name())
     sel1 = ops._select_blocks("matmul", (m, n, k), jnp.float32)
     assert sel1 == (256, 64, 32)
     x = sketch_matrix(m, k, 2)
@@ -132,6 +133,18 @@ def test_ops_consults_tuned_blocks_and_stays_correct():
 def test_ops_clamps_tuned_blocks_to_small_dims():
     """A cache entry recorded at a big bucket must not produce an oversized
     block for a tiny dim (the _block clamp)."""
-    at.record("matmul", (16, 16, 16), "float32", at.BlockSizes(256, 256, 256), "interpret")
+    at.record("matmul", (16, 16, 16), "float32", at.BlockSizes(256, 256, 256),
+              ops._backend_name())
     bm, bn, bk = ops._select_blocks("matmul", (16, 16, 16), jnp.float32)
     assert (bm, bn, bk) == (16, 16, 16)
+
+
+def test_backend_namespace_includes_device_kind():
+    """The autotune bucket is keyed by execution mode AND device kind, so
+    interpret-mode (CPU) sweeps can never shadow TPU winners."""
+    name = ops._backend_name()
+    mode, _, kind = name.partition(":")
+    assert mode in ("tpu", "interpret") and kind, name
+    # an entry recorded under a bare legacy namespace is invisible to ops
+    at.record("matmul", (32, 32, 32), "float32", at.BlockSizes(8, 8, 8), mode)
+    assert ops._select_blocks("matmul", (32, 32, 32), jnp.float32) == (32, 32, 32)

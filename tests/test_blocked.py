@@ -1,4 +1,5 @@
-"""Blocked/streaming + batched randomized SVD vs. the dense in-memory path.
+"""Blocked/streaming + batched randomized SVD vs. the dense in-memory path,
+all through the `repro.linalg` facade (HostOp / StackedOp / overrides).
 
 Covers the DESIGN.md §"Blocked & batched execution" contracts:
   * panel streaming reproduces the dense result for dividing AND non-dividing
@@ -13,17 +14,12 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core import (
-    RSVDConfig,
-    batched_randomized_svd,
-    blocked_randomized_svd,
-    low_rank_error,
-    randomized_svd,
-    streamed_sketch,
-    truncation_error,
-)
+from repro import linalg
+from repro.core import RSVDConfig, low_rank_error, streamed_sketch, truncation_error
 from repro.core.spectra import make_test_matrix
 from repro.kernels import ref
+
+BASE = RSVDConfig()  # the historical default variant, pinned on both paths
 
 
 def _recon(U, S, Vt):
@@ -42,8 +38,8 @@ def _rel_fro(X, Y, A):
 def test_blocked_matches_dense(block_rows):
     A, _ = make_test_matrix(512, 96, "fast", seed=1)
     k = 12
-    U0, S0, Vt0 = randomized_svd(A, k)
-    U1, S1, Vt1 = blocked_randomized_svd(A, k, seed=0, block_rows=block_rows)
+    U0, S0, Vt0 = linalg.svd(A, k, overrides=BASE)
+    U1, S1, Vt1 = linalg.svd(A, k, overrides=RSVDConfig(block_rows=block_rows))
     assert U1.shape == (512, k) and S1.shape == (k,) and Vt1.shape == (k, 96)
     assert _rel_fro(_recon(U0, S0, Vt0), _recon(U1, S1, Vt1), A) <= 1e-4
     np.testing.assert_allclose(np.asarray(S1), np.asarray(S0), rtol=1e-4)
@@ -54,19 +50,23 @@ def test_blocked_acceptance_4096x512():
     A, _ = make_test_matrix(4096, 512, "fast", seed=2)
     k = 16
     cfg = RSVDConfig(power_iters=1, qr_method="cqr2")  # same cfg on both paths
-    U0, S0, Vt0 = randomized_svd(A, k, cfg)
-    U1, S1, Vt1 = blocked_randomized_svd(A, k, cfg, seed=0, block_rows=256)
+    U0, S0, Vt0 = linalg.svd(A, k, overrides=cfg)
+    U1, S1, Vt1 = linalg.svd(
+        A, k, overrides=RSVDConfig(power_iters=1, qr_method="cqr2", block_rows=256)
+    )
     assert _rel_fro(_recon(U0, S0, Vt0), _recon(U1, S1, Vt1), A) <= 1e-4
 
 
-def test_blocked_accepts_host_numpy_and_cfg_dispatch():
-    """Out-of-core shape: a host numpy array through the RSVDConfig dispatch."""
+def test_host_numpy_plans_streamed_execution():
+    """Out-of-core shape: a host numpy array wrapped in HostOp plans the
+    streamed path by default, and matches the pinned streaming preset."""
     A_host = np.asarray(make_test_matrix(256, 64, "fast", seed=3)[0])
-    cfg = RSVDConfig.streaming(block_rows=128)
-    U, S, Vt = randomized_svd(A_host, 8, cfg)
-    U2, S2, Vt2 = blocked_randomized_svd(A_host, 8, cfg, seed=0)
+    op = linalg.HostOp(A_host, block_rows=128)
+    assert linalg.plan(op, 8).path == "streamed"
+    U, S, Vt = linalg.svd(op, 8)
+    U2, S2, Vt2 = linalg.svd(A_host, 8, overrides=RSVDConfig.streaming(block_rows=128))
     np.testing.assert_array_equal(np.asarray(S), np.asarray(S2))
-    err = float(low_rank_error(jnp.asarray(A_host), U, S, Vt))
+    err = float(linalg.residual(op, (U, S, Vt)))
     assert err < 0.2
 
 
@@ -79,7 +79,7 @@ def test_blocked_near_optimal_error(kind):
     A, sig = make_test_matrix(384, 96, kind, seed=4)
     k = 16
     cfg = RSVDConfig.streaming(block_rows=100)  # non-dividing on purpose
-    U, S, Vt = blocked_randomized_svd(A, k, cfg, seed=0)
+    U, S, Vt = linalg.svd(A, k, overrides=cfg)
     err = float(low_rank_error(A, U, S, Vt))
     opt = float(truncation_error(sig, k))
     assert err <= 1.10 * opt + 1e-6, (err, opt)
@@ -89,7 +89,7 @@ def test_blocked_wide_matrix_orientation_swap():
     """m < n streams the taller side of A^T; factors keep the A orientation."""
     A, _ = make_test_matrix(256, 64, "fast", seed=5)
     At = A.T  # 64 x 256 wide
-    U, S, Vt = blocked_randomized_svd(At, 10, seed=0, block_rows=96)
+    U, S, Vt = linalg.svd(At, 10, overrides=RSVDConfig(block_rows=96))
     assert U.shape == (64, 10) and Vt.shape == (10, 256)
     err = float(low_rank_error(At, U, S, Vt))
     S_dense = jnp.linalg.svd(At, compute_uv=False)
@@ -107,10 +107,10 @@ def _stack(B, m, n, kind="fast"):
 def test_batched_matches_python_loop():
     A = _stack(4, 96, 48)
     k, seed = 8, 5
-    Ub, Sb, Vtb = batched_randomized_svd(A, k, seed=seed)
+    Ub, Sb, Vtb = linalg.svd(A, k, overrides=BASE, seed=seed)
     for i in range(A.shape[0]):
         # slice i sketches with seed + i — the loop equivalent
-        Ui, Si, Vti = randomized_svd(A[i], k, seed=seed + i)
+        Ui, Si, Vti = linalg.svd(A[i], k, overrides=BASE, seed=seed + i)
         np.testing.assert_allclose(np.asarray(Sb[i]), np.asarray(Si), rtol=2e-5)
         np.testing.assert_allclose(
             _recon(Ub[i], Sb[i], Vtb[i]), _recon(Ui, Si, Vti), atol=2e-4
@@ -120,27 +120,30 @@ def test_batched_matches_python_loop():
 def test_batched_wide_matches_loop():
     A = _stack(3, 40, 120)  # m < n: orientation swap inside the batch
     k = 6
-    Ub, Sb, Vtb = batched_randomized_svd(A, k, seed=2)
+    Ub, Sb, Vtb = linalg.svd(A, k, overrides=BASE, seed=2)
     assert Ub.shape == (3, 40, k) and Vtb.shape == (3, k, 120)
     for i in range(3):
-        Ui, Si, Vti = randomized_svd(A[i], k, seed=2 + i)
+        Ui, Si, Vti = linalg.svd(A[i], k, overrides=BASE, seed=2 + i)
         np.testing.assert_allclose(np.asarray(Sb[i]), np.asarray(Si), rtol=2e-5)
         np.testing.assert_allclose(
             _recon(Ub[i], Sb[i], Vtb[i]), _recon(Ui, Si, Vti), atol=2e-4
         )
 
 
-def test_three_d_input_dispatches_to_batched():
+def test_three_d_input_plans_batched_path():
     A = _stack(2, 64, 32)
-    U3, S3, Vt3 = randomized_svd(A, 4, seed=9)     # dispatcher
-    Ub, Sb, Vtb = batched_randomized_svd(A, 4, seed=9)
+    assert linalg.plan(A, 4, overrides=BASE).path == "batched"
+    U3, S3, Vt3 = linalg.svd(A, 4, overrides=BASE, seed=9)       # facade
+    from repro.core.blocked import svd_batched
+
+    Ub, Sb, Vtb = svd_batched(A, 4, BASE, seed=9)                # direct
     np.testing.assert_array_equal(np.asarray(S3), np.asarray(Sb))
     np.testing.assert_array_equal(np.asarray(U3), np.asarray(Ub))
 
 
-def test_batched_rejects_2d():
+def test_batched_override_rejects_2d():
     with pytest.raises(ValueError):
-        batched_randomized_svd(jnp.zeros((8, 4)), 2)
+        linalg.svd(jnp.zeros((8, 4)), 2, overrides=RSVDConfig(batched=True))
 
 
 # ---------------------------------------------------------------------------

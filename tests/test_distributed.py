@@ -52,8 +52,8 @@ def test_distributed_rsvd_inprocess_multidevice():
         pytest.skip("needs >1 device (CI sets xla_force_host_platform_device_count)")
 
     from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro import linalg
     from repro.core import RSVDConfig, low_rank_error, truncation_error
-    from repro.core.distributed import distributed_randomized_svd
     from repro.core.spectra import make_test_matrix
 
     n_dev = len(jax.devices())
@@ -64,7 +64,9 @@ def test_distributed_rsvd_inprocess_multidevice():
     A_sharded = jax.device_put(A, NamedSharding(mesh, P("data", None)))
 
     k = 8
-    U, S, Vt = distributed_randomized_svd(A_sharded, k, mesh, "data", RSVDConfig(power_iters=1))
+    op = linalg.ShardedOp(A_sharded, mesh, "data")
+    assert linalg.plan(op, k).path == "sharded"
+    U, S, Vt = linalg.svd(op, k, overrides=RSVDConfig(power_iters=1))
     err = float(low_rank_error(A, jnp.asarray(U), jnp.asarray(S), jnp.asarray(Vt)))
     opt = float(truncation_error(sig, k))
     assert err <= 1.10 * opt + 1e-6, (err, opt)

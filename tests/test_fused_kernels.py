@@ -223,14 +223,15 @@ def test_fused_power_matches_unfused_dense():
     # "fast" has distinct singular values, so A_k (hence the reconstruction)
     # is unique and comparable; "sharp" cuts inside a degenerate cluster
     # where any rotated basis is an equally valid answer.
-    from repro.core import randomized_svd
+    from repro import linalg
     from repro.core.spectra import make_test_matrix
 
     A, _ = make_test_matrix(300, 200, "fast", seed=10)
     k = 16
-    U0, S0, Vt0 = randomized_svd(A, k, _cfgs())
-    U1, S1, Vt1 = randomized_svd(
-        A, k, _cfgs(fused_sketch=True, fused_power=True, kernel_backend="pallas")
+    U0, S0, Vt0 = linalg.svd(A, k, overrides=_cfgs())
+    U1, S1, Vt1 = linalg.svd(
+        A, k,
+        overrides=_cfgs(fused_sketch=True, fused_power=True, kernel_backend="pallas"),
     )
     np.testing.assert_allclose(np.asarray(S1), np.asarray(S0), rtol=2e-4)
     r0 = np.asarray((U0 * S0[None, :]) @ Vt0)
@@ -241,46 +242,50 @@ def test_fused_power_matches_unfused_dense():
 
 def test_fused_power_plain_scheme_matches_unfused():
     """The ablation path: the plain GEMM chain through the fused kernel."""
-    from repro.core import RSVDConfig, randomized_svd
+    from repro import linalg
+    from repro.core import RSVDConfig
     from repro.core.spectra import make_test_matrix
 
     A, _ = make_test_matrix(200, 128, "sharp", seed=11)
     k = 10
     base = RSVDConfig(power_scheme="plain", power_iters=1, qr_method="cqr2",
                       small_svd="lapack")
-    U0, S0, Vt0 = randomized_svd(A, k, base)
-    U1, S1, Vt1 = randomized_svd(
-        A, k, RSVDConfig(power_scheme="plain", power_iters=1, qr_method="cqr2",
-                         small_svd="lapack", fused_power=True)
+    U0, S0, Vt0 = linalg.svd(A, k, overrides=base)
+    U1, S1, Vt1 = linalg.svd(
+        A, k,
+        overrides=RSVDConfig(power_scheme="plain", power_iters=1, qr_method="cqr2",
+                             small_svd="lapack", fused_power=True),
     )
     np.testing.assert_allclose(np.asarray(S1), np.asarray(S0), rtol=2e-4)
 
 
 def test_fused_power_zero_iters():
     """power_iters=0 must still work through the fused body (no W)."""
-    from repro.core import randomized_svd, low_rank_error
+    from repro import linalg
+    from repro.core import low_rank_error
     from repro.core.spectra import make_test_matrix
 
     A, _ = make_test_matrix(128, 96, "fast", seed=12)
     cfg = _cfgs(power_iters=0, fused_sketch=True, fused_power=True,
                 kernel_backend="pallas")
-    U, S, Vt = randomized_svd(A, 8, cfg)
+    U, S, Vt = linalg.svd(A, 8, overrides=cfg)
     assert float(low_rank_error(A, U, S, Vt)) < 0.5
     np.testing.assert_allclose(np.asarray(U.T @ U), np.eye(8), atol=5e-5)
 
 
 def test_fused_f64_falls_back_to_unfused():
     """float64 (the faithful setting) must silently bypass the fp32 kernels."""
+    from repro import linalg
     from repro.compat import enable_x64
-    from repro.core import randomized_svd
     from repro.core.spectra import make_test_matrix
 
     with enable_x64():
         A, _ = make_test_matrix(128, 96, "sharp", seed=13, dtype=jnp.float64)
         k = 8
-        U0, S0, _ = randomized_svd(A, k, _cfgs())
-        U1, S1, _ = randomized_svd(
-            A, k, _cfgs(fused_sketch=True, fused_power=True, kernel_backend="pallas")
+        U0, S0, _ = linalg.svd(A, k, overrides=_cfgs())
+        U1, S1, _ = linalg.svd(
+            A, k,
+            overrides=_cfgs(fused_sketch=True, fused_power=True, kernel_backend="pallas"),
         )
         assert S1.dtype == jnp.float64
         np.testing.assert_allclose(np.asarray(S1), np.asarray(S0), rtol=1e-12)
@@ -291,13 +296,13 @@ def test_fused_f64_falls_back_to_unfused():
 # ---------------------------------------------------------------------------
 
 def test_backend_pallas_dense_matches_jnp():
-    from repro.core import randomized_svd
+    from repro import linalg
     from repro.core.spectra import make_test_matrix
 
     A, _ = make_test_matrix(256, 96, "fast", seed=14)
     k = 10
-    U0, S0, Vt0 = randomized_svd(A, k, _cfgs(kernel_backend="jnp"))
-    U1, S1, Vt1 = randomized_svd(A, k, _cfgs(kernel_backend="pallas"))
+    U0, S0, Vt0 = linalg.svd(A, k, overrides=_cfgs(kernel_backend="jnp"))
+    U1, S1, Vt1 = linalg.svd(A, k, overrides=_cfgs(kernel_backend="pallas"))
     np.testing.assert_allclose(np.asarray(S1), np.asarray(S0), rtol=2e-5)
     r0 = np.asarray((U0 * S0[None, :]) @ Vt0)
     r1 = np.asarray((U1 * S1[None, :]) @ Vt1)
@@ -305,8 +310,8 @@ def test_backend_pallas_dense_matches_jnp():
 
 
 def test_backend_pallas_blocked_matches_jnp():
+    from repro import linalg
     from repro.core import RSVDConfig
-    from repro.core.blocked import blocked_randomized_svd
     from repro.core.spectra import make_test_matrix
 
     A, _ = make_test_matrix(384, 96, "sharp", seed=15)
@@ -317,8 +322,8 @@ def test_backend_pallas_blocked_matches_jnp():
     cfg1 = RSVDConfig(power_scheme="stabilized", qr_method="cqr2",
                       small_svd="lapack", block_rows=100,
                       kernel_backend="pallas", fused_sketch=True)
-    U0, S0, Vt0 = blocked_randomized_svd(A, k, cfg0, seed=0)
-    U1, S1, Vt1 = blocked_randomized_svd(A, k, cfg1, seed=0)
+    U0, S0, Vt0 = linalg.svd(A, k, overrides=cfg0, seed=0)
+    U1, S1, Vt1 = linalg.svd(A, k, overrides=cfg1, seed=0)
     np.testing.assert_allclose(np.asarray(S1), np.asarray(S0), rtol=1e-4)
     np.testing.assert_allclose(np.asarray(U1.T @ U1), np.eye(k), atol=5e-5)
 
@@ -328,8 +333,8 @@ def test_backend_pallas_distributed_matches_jnp():
     if len(jax.devices()) < 2:
         pytest.skip("needs >1 device (CI sets xla_force_host_platform_device_count)")
     from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro import linalg
     from repro.core import RSVDConfig
-    from repro.core.distributed import distributed_randomized_svd
     from repro.core.spectra import make_test_matrix
 
     n_dev = len(jax.devices())
@@ -337,10 +342,11 @@ def test_backend_pallas_distributed_matches_jnp():
     A, _ = make_test_matrix(32 * n_dev, 64, "sharp", seed=16)
     A_sharded = jax.device_put(A, NamedSharding(mesh, P("data", None)))
     k = 8
+    op = linalg.ShardedOp(A_sharded, mesh, "data")
     cfg0 = RSVDConfig(power_iters=1, kernel_backend="jnp")
     cfg1 = RSVDConfig(power_iters=1, kernel_backend="pallas")
-    _, S0, _ = distributed_randomized_svd(A_sharded, k, mesh, "data", cfg0)
-    U1, S1, Vt1 = distributed_randomized_svd(A_sharded, k, mesh, "data", cfg1)
+    _, S0, _ = linalg.svd(op, k, overrides=cfg0)
+    U1, S1, Vt1 = linalg.svd(op, k, overrides=cfg1)
     np.testing.assert_allclose(np.asarray(S1), np.asarray(S0), rtol=2e-5)
     np.testing.assert_allclose(
         np.asarray(jnp.asarray(U1).T @ jnp.asarray(U1)), np.eye(k), atol=5e-5
@@ -366,9 +372,9 @@ def test_qr_gram_trsm_backend_parity():
 def test_blocked_fused_sketch_f64_falls_back():
     """Blocked streaming with fused_sketch on f64 input must stay on the jnp
     sketch (and in f64), like the dense path's guard."""
+    from repro import linalg
     from repro.compat import enable_x64
     from repro.core import RSVDConfig
-    from repro.core.blocked import blocked_randomized_svd
     from repro.core.spectra import make_test_matrix
 
     with enable_x64():
@@ -376,8 +382,8 @@ def test_blocked_fused_sketch_f64_falls_back():
         cfg0 = RSVDConfig.streaming(block_rows=100)
         cfg1 = RSVDConfig(power_scheme="stabilized", qr_method="cqr2",
                           small_svd="lapack", block_rows=100, fused_sketch=True)
-        U0, S0, _ = blocked_randomized_svd(A, 8, cfg0, seed=0)
-        U1, S1, _ = blocked_randomized_svd(A, 8, cfg1, seed=0)
+        U0, S0, _ = linalg.svd(A, 8, overrides=cfg0, seed=0)
+        U1, S1, _ = linalg.svd(A, 8, overrides=cfg1, seed=0)
         assert S1.dtype == jnp.float64 and U1.dtype == jnp.float64
         np.testing.assert_allclose(np.asarray(S1), np.asarray(S0), rtol=1e-12)
 
@@ -403,17 +409,17 @@ def test_blocked_cholesky_qr_bf16_panels_keep_dtype():
 # ---------------------------------------------------------------------------
 
 def test_batched_fused_sketch_matches_loop():
-    from repro.core import RSVDConfig, randomized_svd
-    from repro.core.blocked import batched_randomized_svd
+    from repro import linalg
+    from repro.core import RSVDConfig
     from repro.core.spectra import make_test_matrix
 
     A = jnp.stack([make_test_matrix(96, 48, "fast", seed=20 + i)[0] for i in range(3)])
     k, seed = 6, 11
     cfg = RSVDConfig(power_scheme="stabilized", qr_method="cqr2",
                      small_svd="lapack", fused_sketch=True)
-    Ub, Sb, Vtb = batched_randomized_svd(A, k, cfg, seed=seed)
+    Ub, Sb, Vtb = linalg.svd(linalg.StackedOp(A), k, overrides=cfg, seed=seed)
     for i in range(3):
-        Ui, Si, Vti = randomized_svd(A[i], k, cfg, seed=seed + i)
+        Ui, Si, Vti = linalg.svd(A[i], k, overrides=cfg, seed=seed + i)
         np.testing.assert_allclose(np.asarray(Sb[i]), np.asarray(Si), rtol=2e-5)
         ri = np.asarray((Ui * Si[None, :]) @ Vti)
         rb = np.asarray((Ub[i] * Sb[i][None, :]) @ Vtb[i])

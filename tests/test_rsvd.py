@@ -1,17 +1,13 @@
-"""Correctness of the randomized k-SVD against dense SVD and paper claims."""
+"""Correctness of the randomized k-SVD against dense SVD and paper claims,
+driven through the `repro.linalg` facade (the one public call-site pattern)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import linalg
 from repro.compat import enable_x64
-from repro.core import (
-    RSVDConfig,
-    low_rank_error,
-    randomized_eigvals,
-    randomized_svd,
-    truncation_error,
-)
+from repro.core import RSVDConfig, low_rank_error, truncation_error
 from repro.core.spectra import make_test_matrix
 from repro.core.lanczos import lanczos_svd
 
@@ -23,7 +19,7 @@ def test_near_optimal_error_fast_path(kind):
     """(1+eps) low-rank approximation property (paper's core guarantee)."""
     A, sig = make_test_matrix(300, 200, kind, seed=1)
     k = 20
-    U, S, Vt = randomized_svd(A, k, FAST)
+    U, S, Vt = linalg.svd(A, k, overrides=FAST)
     err = float(low_rank_error(A, U, S, Vt))
     opt = float(truncation_error(sig, k))
     # stabilized power iteration gets within a few percent of optimal
@@ -39,9 +35,9 @@ def test_faithful_path_f64(kind):
         k = 20
         # Paper §4: "we kept the relative error on the limit of at most 1e-8"
         # by choosing s = O(k/eps); the sketch-size/power-iteration pair below
-        # is that tuning for these spectra (error ~ (sig_{s+1}/sig_k)^{2(2q+1)}).
+        # is that tuning for these spectra (error ~ (sig_{s+1}/sig_k)^(2(2q+1))).
         cfg = RSVDConfig(oversample=2 * k, power_iters=3)
-        U, S, Vt = randomized_svd(A, k, cfg)
+        U, S, Vt = linalg.svd(A, k, overrides=cfg)
         S_exact = jnp.linalg.svd(A, compute_uv=False)[:k]
         rel = float(jnp.max(jnp.abs(S - S_exact) / S_exact))
         assert rel < 1e-8, rel
@@ -49,7 +45,7 @@ def test_faithful_path_f64(kind):
 
 def test_singular_values_match_dense():
     A, _ = make_test_matrix(256, 128, "fast", seed=3)
-    S_rand = randomized_eigvals(A, 10, FAST)
+    S_rand = linalg.eigvals(A, 10, overrides=FAST)
     S_dense = jnp.linalg.svd(A, compute_uv=False)[:10]
     # fp32 Gram-squaring floor: sigma_10/sigma_1 = 1e-2 -> lambda ratio 1e-4,
     # so relative error ~ eps_f32 / 1e-4 ~ 1e-3 is the expected accuracy here.
@@ -59,7 +55,7 @@ def test_singular_values_match_dense():
 def test_factors_reconstruct():
     A, _ = make_test_matrix(200, 150, "sharp", seed=4)
     k = 30
-    U, S, Vt = randomized_svd(A, k, FAST)
+    U, S, Vt = linalg.svd(A, k, overrides=FAST)
     assert U.shape == (200, k) and S.shape == (k,) and Vt.shape == (k, 150)
     # U, V orthonormal
     np.testing.assert_allclose(np.asarray(U.T @ U), np.eye(k), atol=2e-5)
@@ -73,7 +69,7 @@ def test_wide_matrix_transpose_path():
     """m < n takes the transposed route; factors must still be consistent."""
     A, _ = make_test_matrix(300, 80, "fast", seed=5)
     At = A.T  # 80 x 300 (wide)
-    U, S, Vt = randomized_svd(At, 10, FAST)
+    U, S, Vt = linalg.svd(At, 10, overrides=FAST)
     assert U.shape == (80, 10) and Vt.shape == (10, 300)
     err = float(low_rank_error(At, U, S, Vt))
     S_dense = jnp.linalg.svd(At, compute_uv=False)
@@ -83,8 +79,8 @@ def test_wide_matrix_transpose_path():
 
 def test_deterministic_given_seed():
     A, _ = make_test_matrix(128, 96, "fast", seed=6)
-    U1, S1, _ = randomized_svd(A, 8, FAST, seed=7)
-    U2, S2, _ = randomized_svd(A, 8, FAST, seed=7)
+    U1, S1, _ = linalg.svd(A, 8, overrides=FAST, seed=7)
+    U2, S2, _ = linalg.svd(A, 8, overrides=FAST, seed=7)
     np.testing.assert_array_equal(np.asarray(S1), np.asarray(S2))
     np.testing.assert_array_equal(np.asarray(U1), np.asarray(U2))
 

@@ -1,0 +1,75 @@
+"""The deprecated pre-facade entry points (`core.rsvd.randomized_svd` /
+`randomized_eigvals`).
+
+These are the ONLY tests allowed to call them: pytest.ini turns their
+DeprecationWarning into an error suite-wide, and this module opts back out
+per-test.  The contract: the shims warn, and they return BIT-identical
+results to the facade across every historical dispatch shape.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import linalg
+from repro.core import RSVDConfig, randomized_eigvals, randomized_svd
+from repro.core.spectra import make_test_matrix
+
+shimtest = pytest.mark.filterwarnings("default::DeprecationWarning")
+
+
+@shimtest
+def test_shim_warns_and_matches_facade_dense():
+    A, _ = make_test_matrix(128, 64, "fast", seed=0)
+    cfg = RSVDConfig(power_scheme="stabilized", qr_method="cqr2")
+    with pytest.warns(DeprecationWarning, match="use repro.linalg.svd"):
+        U0, S0, Vt0 = randomized_svd(A, 8, cfg, seed=5)
+    U1, S1, Vt1 = linalg.svd(A, 8, overrides=cfg, seed=5)
+    np.testing.assert_array_equal(np.asarray(U0), np.asarray(U1))
+    np.testing.assert_array_equal(np.asarray(S0), np.asarray(S1))
+    np.testing.assert_array_equal(np.asarray(Vt0), np.asarray(Vt1))
+
+
+@shimtest
+def test_shim_streamed_dispatch():
+    A_host = np.asarray(make_test_matrix(200, 48, "fast", seed=1)[0])
+    cfg = RSVDConfig.streaming(block_rows=64)
+    with pytest.warns(DeprecationWarning):
+        U0, S0, Vt0 = randomized_svd(A_host, 6, cfg, seed=2)
+    U1, S1, Vt1 = linalg.svd(A_host, 6, overrides=cfg, seed=2)
+    np.testing.assert_array_equal(np.asarray(S0), np.asarray(S1))
+    np.testing.assert_array_equal(np.asarray(U0), np.asarray(U1))
+
+
+@shimtest
+def test_shim_batched_dispatch():
+    A = jnp.stack([make_test_matrix(64, 32, "fast", seed=2 + i)[0] for i in range(2)])
+    with pytest.warns(DeprecationWarning):
+        U0, S0, Vt0 = randomized_svd(A, 4, seed=9)
+    U1, S1, Vt1 = linalg.svd(linalg.StackedOp(A), 4, overrides=RSVDConfig(), seed=9)
+    np.testing.assert_array_equal(np.asarray(U0), np.asarray(U1))
+    np.testing.assert_array_equal(np.asarray(S0), np.asarray(S1))
+
+
+@shimtest
+def test_shim_batched_flag_still_rejects_2d():
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError):
+            randomized_svd(jnp.zeros((8, 4)), 2, RSVDConfig(batched=True))
+
+
+@shimtest
+def test_shim_eigvals_warns_and_matches():
+    A, _ = make_test_matrix(96, 48, "fast", seed=3)
+    cfg = RSVDConfig()
+    with pytest.warns(DeprecationWarning, match="use repro.linalg.eigvals"):
+        S0 = randomized_eigvals(A, 6, cfg, seed=1)
+    S1 = linalg.eigvals(A, 6, overrides=cfg, seed=1)
+    np.testing.assert_array_equal(np.asarray(S0), np.asarray(S1))
+
+
+def test_shim_deprecation_is_an_error_outside_this_marker():
+    """Everywhere else in the suite the shims must FAIL loudly (pytest.ini
+    filterwarnings) — this is the regression guard for that wiring."""
+    A, _ = make_test_matrix(32, 16, "fast", seed=4)
+    with pytest.raises(DeprecationWarning):
+        randomized_svd(A, 4)
