@@ -1,13 +1,15 @@
 """rSVD variant benchmark + the analytic HBM-traffic model, persisted.
 
-Emits ``BENCH_rsvd.json`` (cwd, or --out PATH): per-variant wall time on the
-current backend (CPU-container numbers are interpret-mode correctness
-proxies, NOT TPU performance), the structural HBM-traffic model that the
-fused one-pass range finder is built on (now shared with the execution
-planner — repro/roofline/rsvd_model.py), and the EXECUTED `ExecutionPlan`
-for every variant, so a BENCH_rsvd.json row says exactly which path / fused
-flags / block sizes produced its number.  EXPERIMENTS.md records the
-history; the traffic-model derivation lives in rsvd_model.py.
+Emits ``BENCH_rsvd.json`` (cwd, or --out PATH; CI uploads it as a workflow
+artifact): per-variant wall time on the current backend (CPU-container
+numbers are interpret-mode correctness proxies, NOT TPU performance), the
+structural HBM-traffic model that the fused one-pass range finder is built
+on (now shared with the execution planner — repro/roofline/rsvd_model.py),
+the EXECUTED `ExecutionPlan` for every variant, and — schema v3 — the
+ADAPTIVE (fixed-precision) mode: the rank-growth trajectory, the per-step
+roofline bytes from the plan's schedule, and adaptive-vs-oracle-rank wall
+time.  EXPERIMENTS.md records the history; the traffic-model derivation
+lives in rsvd_model.py.
 """
 from __future__ import annotations
 
@@ -72,13 +74,57 @@ def variant_rows(m=512, n=256, k=16):
     return rows
 
 
+def adaptive_rows(m=512, n=256, eps=1e-2, panel=16):
+    """Fixed-precision mode: `decompose(A, Tolerance(eps))` on the paper's
+    sharp-decay (exponential drop) spectrum.  Records the executed rank
+    trajectory and the plan's per-step roofline bytes, and times the
+    adaptive solve against the oracle fixed-rank solve (the rank the
+    adaptive run discovered — the walltime a clairvoyant caller would pay).
+    """
+    from repro import linalg
+    from repro.core.spectra import make_test_matrix
+
+    A, _ = make_test_matrix(m, n, "sharp", seed=0)
+    spec = linalg.Tolerance(eps, panel=panel)
+    dec = linalg.decompose(A, spec, seed=0)  # warm the per-panel programs
+    t_adaptive = _time(lambda a: linalg.decompose(a, spec, seed=0).factors, A)
+    t_oracle = _time(lambda a: linalg.svd(a, dec.rank), A)
+    achieved = float(linalg.residual(A, dec.factors))
+    pl = dec.plan
+    row = dict(
+        m=m, n=n, eps=eps, panel=panel,
+        rank=dec.rank,
+        achieved_rel_error=round(achieved, 6),
+        rank_trajectory=list(dec.rank_history),
+        err_trajectory=[round(e, 6) for e in dec.err_history],
+        plan_rank_schedule=list(pl.rank_schedule),
+        plan_step_bytes=list(pl.schedule_hbm_bytes),
+        panels_run=len(dec.rank_history),
+        panels_full=len(pl.rank_schedule),
+        wall_s_adaptive=round(t_adaptive, 4),
+        wall_s_oracle_rank=round(t_oracle, 4),
+        backend=jax.default_backend(),
+    )
+    # acceptance invariants, checked before the JSON is written
+    assert achieved <= eps, row
+    assert row["panels_run"] < row["panels_full"], row
+    from repro.roofline import rsvd_model
+
+    assert tuple(row["plan_step_bytes"]) == rsvd_model.adaptive_schedule_bytes(
+        pl.m, pl.n, pl.rank_schedule, pl.power_iters,
+        dtype_bytes=4, fused_sketch=pl.fused_sketch), row
+    return [row]
+
+
 def build_report(smoke: bool = False) -> dict:
     report = {
-        "schema": "bench_rsvd/v2",
+        "schema": "bench_rsvd/v3",
         "backend": jax.default_backend(),
         "interpret_mode": jax.default_backend() != "tpu",
         "traffic_model_per_power_iter": traffic_rows(),
         "variants": variant_rows(*((128, 64, 8) if smoke else (512, 256, 16))),
+        "adaptive": adaptive_rows(*((192, 96, 1e-2, 16) if smoke
+                                    else (512, 256, 1e-2, 16))),
     }
     for row in report["traffic_model_per_power_iter"]:
         assert row["saving"] >= 1.5, (
@@ -107,6 +153,10 @@ def main(out_path: str = "BENCH_rsvd.json", smoke: bool = False) -> None:
     for row in report["variants"]:
         print(f"rsvd_variant_{row['name']},{row['wall_s'] * 1e6:.0f},"
               f"readsA{row['reads_of_A']};path={row['plan']['path']}")
+    for row in report["adaptive"]:
+        print(f"rsvd_adaptive_eps{row['eps']},{row['wall_s_adaptive'] * 1e6:.0f},"
+              f"rank{row['rank']};panels{row['panels_run']}/{row['panels_full']};"
+              f"oracle{row['wall_s_oracle_rank'] * 1e6:.0f}us")
     print(f"# wrote {out_path}")
 
 

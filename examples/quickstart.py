@@ -54,11 +54,30 @@ stack = jnp.stack([make_test_matrix(256, 96, "fast", seed=i)[0] for i in range(8
 Ub, Sb, Vtb = linalg.svd(stack, 10)  # [8, 256, 96] -> per-slice factors
 print(f"batched  : stack rel-error {linalg.residual(stack, (Ub, Sb, Vtb)):.3e}")
 
+# --- spec-driven: state the ACCURACY, let the engine find the rank ---------
+# Tolerance(eps) grows the basis panel by panel (posterior error estimator,
+# DESIGN.md §Specs) and stops as soon as the requested Frobenius error is
+# certified — the plan records the full-rank fallback schedule, the result
+# records the prefix that actually ran.
+dec = linalg.decompose(A, linalg.Tolerance(1e-2))
+print(f"tol 1e-2 : found rank {dec.rank} in {len(dec.rank_history)}/"
+      f"{len(dec.plan.rank_schedule)} panels, rel-error "
+      f"{linalg.residual(A, dec.factors):.3e}  ({dec.plan.describe()})")
+
+# Other registry kinds ride the same spec machinery:
+Q, B = linalg.decompose(A, linalg.Rank(k), kind="qb")        # basis only
+print(f"qb       : Q {Q.shape} B {B.shape}  (A ~= Q @ B)")
+pr, L, Umat, pc = linalg.decompose(A, linalg.Tolerance(2e-2), kind="lu")
+print(f"lu       : L {L.shape} U {Umat.shape}  (A[pr][:, pc] ~= L @ U)")
+
 # --- composed operators: the new workload class ----------------------------
 # PCA without materializing the centered matrix ...
 pca_res = linalg.pca(A, 8)
 print("pca      : top-8 explained variance",
       [f"{float(v):.4f}" for v in pca_res.explained_variance[:3]], "...")
+# ... or with the variance stated instead of the count:
+pca_e = linalg.pca(A, linalg.Energy(0.99))
+print(f"pca      : Energy(0.99) kept {pca_e.components.shape[0]} components")
 # ... and deflation A - U_k S_k V_k^T as an operator: the next solve sees
 # the residual spectrum (sigma_{k+1} and below) without forming it.
 defl = linalg.deflated(linalg.DenseOp(A), U, S, Vt)

@@ -1,0 +1,228 @@
+"""Fixed-precision randomized QB: incremental blocked range growth.
+
+The paper's Algorithm 1 assumes the caller knows the rank `k`.  This module
+implements the *fixed-precision* counterpart (Heavner et al. 2021 blocked
+rank-revealing style): grow an orthonormal basis Q panel by panel until the
+estimated residual meets the requested accuracy, never materializing any
+m x n temporary.  Per panel of width b:
+
+  sketch     Y = A @ Omega_p        Omega_p is n x b from the SAME counter
+                                    RNG as every other path, at a per-panel
+                                    seed offset (seed + panel index); on a
+                                    device-resident dense source the fused
+                                    sketch kernel generates Omega in VMEM
+  deflate    Y -= Q (Q^T Y)         project out the accumulated basis
+  power      q stabilized iterations (orthonormalize / rmatmat / matmat),
+                                    re-deflating after each touch of A
+  reorth     Q_p = orth(Y); CGS2 second pass against Q, CholeskyQR-family
+                                    orthonormalization throughout
+  project    B_p = (A^T Q_p)^T      the b x n panel of B = Q^T A
+  estimate   remaining -= ||B_p||_F^2
+
+The stopping rule is the posterior identity the panel-wise residual
+(`repro.linalg.residual`) is built on: for orthonormal Q,
+
+  ||A - Q Q^T A||_F^2 = ||A||_F^2 - ||Q^T A||_F^2 = ||A||_F^2 - ||B||_F^2,
+
+so tracking the Frobenius mass of the B panels gives the exact residual
+(up to roundoff) with zero extra passes over A.  ||A||_F^2 itself is
+accumulated one row panel at a time (`fro_norm_sq`), so host-resident and
+composed sources (Centered / LowRankUpdate / Scaled over a HostOp) keep
+their streaming residency.
+
+Everything is phrased through the LinOp protocol (matmat / rmatmat /
+row_panels) — this module deliberately imports nothing from repro.linalg,
+the operators arrive duck-typed.
+
+Precision floor: the estimator subtracts O(norm)-sized fp32 sums, so it
+cannot resolve relative residuals much below ~sqrt(eps_f32) ≈ 3e-4 (f64
+sources go correspondingly lower).  Near that floor a deflated sketch panel
+is pure cancellation noise; appending it would corrupt the basis and make
+the estimator double-count energy, so growth stops as soon as a
+re-orthogonalized panel still overlaps the accumulated basis above
+O(sqrt(eps)) (`_overlap_tol`) — the rank-trim then keeps everything the
+estimator cannot certify, which in practice lands the TRUE residual well
+under a floor-adjacent tolerance.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qr as qr_mod
+from repro.core import sketch as sketch_mod
+
+
+@dataclass(frozen=True)
+class QBResult:
+    """A ~= Q @ B with Q (m x r) orthonormal, plus the growth record.
+
+    `norm_sq` / `remaining_sq` / `err_history` carry the posterior estimator
+    and are None/empty for untracked (fixed-rank, threshold-free) runs —
+    those skip the ||A||_F^2 pass entirely."""
+
+    Q: jax.Array
+    B: jax.Array
+    norm_sq: Optional[float]        # ||A||_F^2 (panel-accumulated)
+    remaining_sq: Optional[float]   # estimated ||A - Q B||_F^2
+    rank_history: Tuple[int, ...]   # basis size after each panel
+    err_history: Tuple[float, ...]  # relative fro residual estimate per panel
+
+    @property
+    def rank(self) -> int:
+        return int(self.Q.shape[1])
+
+
+#: default row-panel height for the ||A||_F^2 walk: composed sources
+#: (CenteredOp etc.) build a per-panel temporary, so an unbounded default
+#: would materialize the full centered matrix — exactly what this layer
+#: promises never to form
+DEFAULT_NORM_PANEL_ROWS = 4096
+
+
+def fro_norm_sq(op, block_rows: Optional[int] = None) -> float:
+    """||A||_F^2 accumulated one row panel at a time (the `linalg.residual`
+    walk, numerator-free) — no m x n temporary for any panel-capable source
+    (the default panel height is bounded, so composed operators' per-panel
+    temporaries stay panel-sized).  Panels are summed in their own (>= fp32)
+    precision — an f64 source keeps the f64 estimator floor — and ACROSS
+    panels the accumulation is host f64, keeping the floor at the per-panel
+    roundoff rather than growing with the panel count."""
+    b = block_rows or getattr(op, "block_rows", None) or DEFAULT_NORM_PANEL_ROWS
+    total = 0.0
+    for panel in op.row_panels(b):
+        P = panel.astype(jnp.promote_types(panel.dtype, jnp.float32))
+        total += float(jnp.sum(P * P))
+    return total
+
+
+def _panel_sketch(op, b: int, seed_p, kind: str, fused: bool, fdtype) -> jax.Array:
+    """Y = A @ Omega_p for one growth panel.
+
+    Device-resident dense sources take the fused Pallas kernel (Omega tiles
+    generated in VMEM, same counter-RNG layout as `sketch_matrix(n, b)` —
+    bit-identical, kernels/sketch_matmul.py); everything else materializes
+    only the n x b panel and goes through the operator product."""
+    arr = getattr(op, "array", None)
+    if (
+        fused
+        and isinstance(arr, jax.Array)
+        and arr.ndim == 2
+        and arr.dtype != jnp.float64
+    ):
+        from repro.kernels.ops import sketch_matmul
+
+        return sketch_matmul(arr, b, seed_p, kind=kind).astype(fdtype)
+    omega = sketch_mod.sketch_matrix(op.shape[1], b, seed_p, kind, dtype=fdtype)
+    return op.matmat(omega)
+
+
+def _deflate(Y: jax.Array, Q: Optional[jax.Array]) -> jax.Array:
+    """Project the accumulated basis out of Y (no-op before the first panel)."""
+    if Q is None:
+        return Y
+    return Y - Q @ (Q.T @ Y)
+
+
+def _overlap_tol(fdtype) -> float:
+    """Max tolerable |Q^T Q_p| entry after re-orthogonalization.  A healthy
+    CGS2 pass lands at O(eps); an entry near sqrt(eps) means the deflated
+    panel was pure cancellation noise — the spectrum is exhausted at this
+    precision and appending the panel would corrupt the basis AND the
+    posterior estimator (its energy double-counts directions already
+    captured)."""
+    return 10.0 * float(jnp.sqrt(jnp.finfo(fdtype).eps))
+
+
+def adaptive_qb(
+    op,
+    *,
+    panel: int,
+    max_rank: int,
+    threshold_sq: Optional[float] = None,
+    seed: int = 0,
+    power_iters: int = 2,
+    qr_method: str = "cqr2",
+    sketch_kind: str = "gaussian",
+    fused_sketch: bool = False,
+    kernel_backend: str = "jnp",
+    norm_sq: Optional[float] = None,
+) -> QBResult:
+    """Grow Q in `panel`-wide blocks until the estimated residual energy
+    drops to `threshold_sq` (absolute, Frobenius-squared) or the basis
+    reaches `max_rank` (the full-rank fallback; `threshold_sq=None` runs
+    straight to `max_rank` — the fixed-rank QB used by the non-SVD
+    registry kinds, which skips the ||A||_F^2 pass and the estimator
+    entirely unless the caller supplies `norm_sq`).
+
+    The loop is eager Python — panel shapes grow, and host/streamed sources
+    must move data per panel — but every per-panel op (sketch, CholeskyQR,
+    operator products) traces through the active kernel backend exactly as
+    the fixed-rank paths do.
+    """
+    if panel <= 0:
+        raise ValueError(f"growth panel must be positive, got {panel}")
+    m, n = op.shape
+    max_rank = min(max_rank, m, n)
+    fdtype = jnp.promote_types(op.dtype, jnp.float32)
+
+    with qr_mod.kernel_backend(kernel_backend):
+        if norm_sq is None and threshold_sq is not None:
+            norm_sq = fro_norm_sq(op)
+        track = norm_sq is not None
+        remaining = float(norm_sq) if track else 0.0
+        Q: Optional[jax.Array] = None
+        B_panels = []
+        rank_hist: list[int] = []
+        err_hist: list[float] = []
+        r, step = 0, 0
+        while r < max_rank:
+            b = min(panel, max_rank - r)
+            seed_p = jnp.asarray(seed, jnp.uint32) + jnp.uint32(step)
+            Y = _panel_sketch(op, b, seed_p, sketch_kind, fused_sketch, fdtype)
+            Y = _deflate(_deflate(Y, Q), Q)             # CGS2 projection
+            for _ in range(power_iters):
+                Qy = qr_mod.orthonormalize(Y, qr_method)
+                Z = op.rmatmat(Qy)
+                Qz = qr_mod.orthonormalize(Z, qr_method)
+                Y = _deflate(op.matmat(Qz), Q)
+            Qp = qr_mod.orthonormalize(Y, qr_method)
+            if Q is not None:
+                # CGS2: one more pass against the accumulated basis keeps
+                # ||Q^T Q - I|| at O(eps), which the posterior estimator
+                # (exact only for orthonormal Q) depends on.
+                Qp = qr_mod.orthonormalize(_deflate(Qp, Q), qr_method)
+                if float(jnp.max(jnp.abs(Q.T @ Qp))) > _overlap_tol(fdtype):
+                    # precision floor: the panel is cancellation noise, no
+                    # independent directions remain — stop growing (the
+                    # estimator already sits at the smallest resolvable
+                    # residual for this dtype)
+                    break
+            Bp = op.rmatmat(Qp).T                       # b x n, no read of Q
+            if track:
+                Bpf = Bp.astype(fdtype)
+                remaining = max(0.0, remaining - float(jnp.sum(Bpf * Bpf)))
+            Q = Qp if Q is None else jnp.concatenate([Q, Qp], axis=1)
+            B_panels.append(Bp)
+            r += b
+            step += 1
+            rank_hist.append(r)
+            if track:
+                err_hist.append(
+                    math.sqrt(remaining / norm_sq) if norm_sq > 0.0 else 0.0
+                )
+            if threshold_sq is not None and remaining <= threshold_sq:
+                break
+        B = B_panels[0] if len(B_panels) == 1 else jnp.concatenate(B_panels, axis=0)
+        return QBResult(
+            Q=Q,
+            B=B,
+            norm_sq=float(norm_sq) if track else None,
+            remaining_sq=remaining if track else None,
+            rank_history=tuple(rank_hist),
+            err_history=tuple(err_hist),
+        )

@@ -31,10 +31,16 @@ class PCAResult:
     mean: jax.Array                # (d,)
 
 
-def pca(X, k: int, cfg: RSVDConfig = RSVDConfig.fast(), seed: int = 0) -> PCAResult:
-    """Top-k principal components of X (N x d) via randomized SVD on the
-    centered operator (X itself may be a device array, a host numpy array,
-    or any 2-D LinOp)."""
+def pca(X, k, cfg: RSVDConfig = RSVDConfig.fast(), seed: int = 0) -> PCAResult:
+    """Principal components of X (N x d) via randomized SVD on the centered
+    operator (X itself may be a device array, a host numpy array, or any
+    2-D LinOp).
+
+    `k` is a component count (int) or an accuracy spec: the paper's "top
+    1-30% of components" experiments state a variance contract, which is
+    `linalg.Energy(p)` — e.g. ``pca(X, linalg.Energy(0.95))`` keeps the
+    smallest rank explaining 95% of the variance (the adaptive QB engine
+    grows the basis until the posterior estimator says so)."""
     from repro import linalg
 
     return linalg.pca(X, k, overrides=cfg, seed=seed)

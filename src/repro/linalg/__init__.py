@@ -1,8 +1,18 @@
 # repro.linalg — the operator-source + execution-planner facade over every
 # randomized-SVD path in the repo (dense / streamed / batched / sharded /
-# matrix-free).  See DESIGN.md §"API: operators and plans".
+# matrix-free / adaptive), plus the spec-driven decomposition registry
+# (svd / eigh / qb / lu / pca).  See DESIGN.md §"API: operators and plans"
+# and §"Specs and the decomposition registry".
 from repro.core.rsvd import RSVDConfig, low_rank_error, truncation_error  # noqa: F401
-from repro.linalg.api import eigvals, pca, plan, residual, svd  # noqa: F401
+from repro.linalg.api import (  # noqa: F401
+    Decomposition,
+    decompose,
+    eigvals,
+    pca,
+    plan,
+    residual,
+    svd,
+)
 from repro.linalg.operators import (  # noqa: F401
     CenteredOp,
     DenseOp,
@@ -17,3 +27,5 @@ from repro.linalg.operators import (  # noqa: F401
     deflated,
 )
 from repro.linalg.planner import Budget, ExecutionPlan  # noqa: F401
+from repro.linalg.registry import DecompositionKind, kinds, register  # noqa: F401
+from repro.linalg.spec import Energy, Rank, Spec, Tolerance, as_spec  # noqa: F401

@@ -5,17 +5,27 @@
     U, S, Vt = linalg.svd(source, k, plan=pl)        # execute a pinned plan
     err      = linalg.residual(source, (U, S, Vt))   # panel-wise, no m x n temp
 
+Spec-driven decompositions (PR 4): call sites that know an ACCURACY rather
+than a rank state it, and pick a factorization kind from the registry:
+
+    dec = linalg.decompose(source, linalg.Tolerance(1e-2))        # adaptive rank
+    dec = linalg.decompose(source, linalg.Energy(0.95), kind="pca")
+    Q, B = linalg.decompose(source, linalg.Rank(64), kind="qb")
+    w, V = linalg.decompose(psd, linalg.Tolerance(1e-3), kind="eigh")
+
 `source` is anything `as_linop` accepts: a device array (DenseOp), a host
 numpy array (HostOp, panel-streamed), a 3-D stack (StackedOp), a
 `ShardedOp(A, mesh, axis)`, or a composed operator (CenteredOp, ScaledOp,
 LowRankUpdateOp) — the last class runs the generic operator body, nothing
 materialized.  Execution delegates to the SAME numerics as the historical
 entry points (`core/rsvd.py`, `core/blocked.py`, `core/distributed.py`), so
-fixed-seed results are bit-identical to the pre-facade paths.
+fixed-seed results are bit-identical to the pre-facade paths; `svd`,
+`eigvals`, and `pca` survive as thin Rank-spec wrappers.
 """
 from __future__ import annotations
 
 import functools
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 import jax
@@ -25,16 +35,102 @@ from repro.core import qr as qr_mod
 from repro.core import sketch as sketch_mod
 from repro.core.rsvd import RSVDConfig
 from repro.linalg import planner as planner_mod
+from repro.linalg import registry as registry_mod
 from repro.linalg.operators import LinOp, ShardedOp, as_linop
 from repro.linalg.planner import Budget, ExecutionPlan
+from repro.linalg.spec import Rank, Spec, as_spec
 
 SVDResult = Tuple[jax.Array, jax.Array, jax.Array]
 
 
-def plan(op, k: int, budget: Optional[Budget] = None,
-         overrides: Optional[RSVDConfig] = None) -> ExecutionPlan:
-    """See planner.plan — re-exported as part of the facade."""
-    return planner_mod.plan(op, k, budget=budget, overrides=overrides)
+def plan(op, spec, budget: Optional[Budget] = None,
+         overrides: Optional[RSVDConfig] = None, kind: str = "svd") -> ExecutionPlan:
+    """See planner.plan — re-exported as part of the facade.
+
+    Mirrors `decompose`'s source preparation (e.g. kind="pca" wraps in
+    CenteredOp) so a plan built here describes the operator that will
+    actually execute when pinned via `decompose(..., plan=pl)`."""
+    entry = registry_mod.get(kind)
+    op = as_linop(op)
+    if entry.prepare is not None:
+        op = entry.prepare(op)
+    return planner_mod.plan(op, spec, budget=budget, overrides=overrides, kind=kind)
+
+
+# ---------------------------------------------------------------------------
+# Spec-driven decompositions: the registry front door
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Decomposition:
+    """What `decompose` returns: the factors plus the full decision/record.
+
+    `factors` is kind-shaped — (U, S, Vt) for svd, (Q, B) for qb, (w, V)
+    for eigh, (perm_rows, L, U, perm_cols) for lu, PCAResult field order
+    for pca — and the object unpacks like that tuple.  `plan` carries the
+    PLANNED rank schedule; `rank_history` is the prefix that actually ran
+    (adaptive solves stop early), and `err_history` the posterior relative-
+    error estimate after each growth panel."""
+
+    kind: str
+    spec: Spec
+    plan: ExecutionPlan
+    rank: int
+    factors: tuple
+    rank_history: Tuple[int, ...]
+    err_history: Tuple[float, ...]
+
+    def __iter__(self):
+        return iter(self.factors)
+
+    def __getitem__(self, i):
+        return self.factors[i]
+
+    def __len__(self):
+        return len(self.factors)
+
+
+def decompose(
+    a,
+    spec,
+    kind: str = "svd",
+    *,
+    plan: Optional[ExecutionPlan] = None,
+    overrides: Optional[RSVDConfig] = None,
+    budget: Optional[Budget] = None,
+    seed: int = 0,
+) -> Decomposition:
+    """Factorize `a` to the accuracy `spec` with the registry entry `kind`.
+
+    `spec` is a rank (int / `Rank`) or an adaptive accuracy contract
+    (`Tolerance`, `Energy`); `kind` is one of `registry.kinds()` —
+    "svd" | "eigh" | "qb" | "lu" | "pca".  Rank-spec svd is bit-identical
+    to `linalg.svd(a, k)` at fixed seed (same plan, same executors)."""
+    spec = as_spec(spec)
+    entry = registry_mod.get(kind)
+    op = as_linop(a)
+    if entry.prepare is not None:
+        op = entry.prepare(op)
+    if plan is not None and (plan.kind != kind or plan.spec != spec):
+        raise ValueError(
+            f"pinned plan was built for kind={plan.kind!r} "
+            f"spec={plan.spec.describe() if plan.spec else None}, which does "
+            f"not match the requested kind={kind!r} spec={spec.describe()} — "
+            "re-plan with linalg.plan(a, spec, kind=kind)"
+        )
+    pl = plan if plan is not None else planner_mod.plan(
+        op, spec, budget=budget, overrides=overrides, kind=kind
+    )
+    factors, rank, rank_history, err_history = entry.execute(op, spec, pl, seed)
+    return Decomposition(
+        kind=kind,
+        spec=spec,
+        plan=pl,
+        rank=int(rank),
+        factors=tuple(factors),
+        rank_history=tuple(rank_history),
+        err_history=tuple(err_history),
+    )
 
 
 def _dense_array(op: LinOp) -> jax.Array:
@@ -53,9 +149,36 @@ def svd(
     seed: int = 0,
 ) -> SVDResult:
     """Rank-k randomized SVD of any operator source.  Returns (U, S, Vt)
-    with U: m x k, S: k, Vt: k x n (leading batch axis for StackedOp)."""
+    with U: m x k, S: k, Vt: k x n (leading batch axis for StackedOp).
+
+    This is the `Rank(k)`-spec thin wrapper: `decompose(a, Rank(k))` runs
+    the SAME plan and executors, bit-identical at fixed seed."""
+    k = _fixed_rank(k, "svd")
     op = as_linop(a)
     pl = plan if plan is not None else planner_mod.plan(op, k, budget=budget, overrides=overrides)
+    return _execute_svd_plan(op, k, pl, seed)
+
+
+def _fixed_rank(k, entry: str) -> int:
+    """The svd/eigvals wrappers are fixed-rank only: adaptive specs must go
+    through `decompose` (which returns the selected rank and trajectory)."""
+    spec = as_spec(k)
+    if not isinstance(spec, Rank):
+        raise ValueError(
+            f"linalg.{entry} takes a rank; for adaptive specs like "
+            f"{spec.describe()} use linalg.decompose(a, spec)"
+        )
+    return spec.k
+
+
+def _execute_svd_plan(op: LinOp, k: int, pl: ExecutionPlan, seed) -> SVDResult:
+    """Execute a fixed-rank plan through the historical per-path numerics
+    (shared by `svd` and the registry's Rank-spec handler)."""
+    if pl.path == "adaptive":
+        raise ValueError(
+            "an adaptive plan cannot execute through the fixed-rank svd "
+            "wrapper; pass it to linalg.decompose(a, spec, plan=pl)"
+        )
     cfg = pl.to_config()
     if pl.path == "dense":
         from repro.core import rsvd as rsvd_mod
@@ -92,6 +215,7 @@ def eigvals(
 ) -> jax.Array:
     """k largest singular values only (the paper's eigenvalue-benchmark
     mode: Algorithm 1 steps 1-5, Sigma only)."""
+    k = _fixed_rank(k, "eigvals")
     op = as_linop(a)
     pl = plan if plan is not None else planner_mod.plan(op, k, budget=budget, overrides=overrides)
     cfg = pl.to_config()
@@ -179,9 +303,14 @@ def _pca_centered_dense(X: jax.Array, seed: jax.Array, k: int, pl: ExecutionPlan
     return mu, S, Vt
 
 
-def pca(x, k: int, *, overrides: Optional[RSVDConfig] = None,
+def pca(x, k, *, overrides: Optional[RSVDConfig] = None,
         budget: Optional[Budget] = None, seed: int = 0):
     """Top-k principal components of X (N x d) via the CenteredOp source.
+
+    `k` is a rank (int) or an accuracy spec: `Energy(p)` keeps the smallest
+    rank explaining fraction p of the variance, `Tolerance(eps)` targets a
+    relative reconstruction error (both run the adaptive QB engine over
+    the centered operator — the spec-driven path of the registry).
 
     Returns a `repro.core.pca.PCAResult`.  Unlike the historical
     `core.pca.pca`, the centered matrix X - mu is never materialized: the
@@ -191,6 +320,14 @@ def pca(x, k: int, *, overrides: Optional[RSVDConfig] = None,
     from repro.core.pca import PCAResult
     from repro.linalg.operators import CenteredOp, DenseOp
 
+    spec = as_spec(k)
+    if not isinstance(spec, Rank):
+        dec = decompose(x, spec, kind="pca", overrides=overrides,
+                        budget=budget, seed=seed)
+        components, expvar, svals, mu = dec.factors
+        return PCAResult(components=components, explained_variance=expvar,
+                         singular_values=svals, mean=mu)
+    k = spec.k
     op = as_linop(x)
     n = op.shape[0]
     if type(op) is DenseOp:  # HostOp subclasses DenseOp — excluded by type()

@@ -262,12 +262,20 @@ class ScaledOp(ComposedOp):
 
 class CenteredOp(ComposedOp):
     """A - 1 muᵀ: the PCA operator.  mu defaults to A's column means,
-    computed with one panel-streamed pass — the centered matrix itself is
-    never formed (the m x n temporary the old `pca` materialized)."""
+    computed LAZILY with one panel-streamed pass (so shape-only planning
+    over a ShapeDtypeStruct source never touches data) — the centered
+    matrix itself is never formed (the m x n temporary the old `pca`
+    materialized)."""
 
     def __init__(self, base: LinOp, mu: Optional[jax.Array] = None):
         super().__init__(base)
-        self.mu = column_means(self.base) if mu is None else jnp.asarray(mu)
+        self._mu = None if mu is None else jnp.asarray(mu)
+
+    @property
+    def mu(self) -> jax.Array:
+        if self._mu is None:
+            self._mu = column_means(self.base)
+        return self._mu
 
     def matmat(self, X):
         correction = self.mu @ X                       # (s,)
@@ -320,11 +328,14 @@ def deflated(base: LinOp, U: jax.Array, S: jax.Array, Vt: jax.Array) -> LowRankU
 
 
 def column_means(op: LinOp) -> jax.Array:
-    """muᵀ = 1ᵀA / m, accumulated one row panel at a time."""
+    """muᵀ = 1ᵀA / m, accumulated one row panel at a time (bounded default
+    panel height — the fp32 per-panel cast must stay panel-sized even for
+    sources without a block_rows of their own)."""
     op = as_linop(op)
     m = op.shape[0]
+    b = op.block_rows or HostOp.DEFAULT_BLOCK_ROWS
     total = None
-    for panel in op.row_panels():
+    for panel in op.row_panels(b):
         contrib = jnp.sum(panel.astype(jnp.promote_types(panel.dtype, jnp.float32)), axis=0)
         total = contrib if total is None else total + contrib
     return (total / m).astype(op.dtype)
@@ -346,4 +357,12 @@ def as_linop(a) -> LinOp:
         if isinstance(a, np.ndarray):
             return HostOp(a)
         return DenseOp(a)
-    raise TypeError(f"cannot interpret {type(a).__name__} with ndim={ndim} as a LinOp")
+    if ndim is None:
+        raise TypeError(
+            f"cannot interpret {type(a).__name__} as a LinOp (no .ndim — pass"
+            " an array or a LinOp source)"
+        )
+    raise ValueError(
+        f"operator sources must be 2-D (matrix) or 3-D (stacked batch), got "
+        f"ndim={ndim} with shape {getattr(a, 'shape', None)}"
+    )

@@ -24,11 +24,13 @@ import jax.numpy as jnp
 
 from repro.core.rsvd import RSVDConfig
 from repro.linalg import operators as ops_mod
+from repro.linalg import spec as spec_mod
 from repro.linalg.operators import LinOp, as_linop
+from repro.linalg.spec import Rank, Spec
 from repro.roofline import rsvd_model
 
 #: execution paths the planner can choose
-PATHS = ("dense", "streamed", "batched", "sharded", "matfree")
+PATHS = ("dense", "streamed", "batched", "sharded", "matfree", "adaptive")
 
 
 @dataclass(frozen=True)
@@ -66,9 +68,9 @@ class ExecutionPlan:
     plus the roofline prediction, so a plan is inspectable and loggable
     (benchmarks/bench_rsvd.py persists executed plans to BENCH_rsvd.json)."""
 
-    path: str                      # dense | streamed | batched | sharded | matfree
-    m: int                         # post-orientation tall dim (m >= n)
-    n: int
+    path: str                      # dense | streamed | batched | sharded | matfree | adaptive
+    m: int                         # post-orientation tall dim (m >= n); adaptive
+    n: int                         # plans record the EXECUTED (source) orientation
     k: int
     s: int                         # sketch width = min(k + oversample, n)
     batch: int                     # leading batch dim (1 unless path=batched)
@@ -88,6 +90,16 @@ class ExecutionPlan:
     block_cols: Optional[int]
     blocks: Tuple[int, int, int]   # (bm, bn, bk) the kernels will tile with
     predicted_hbm_bytes: int       # roofline/rsvd_model.py whole-solve bytes
+    # spec-driven decomposition fields (PR 4): what the caller asked for and,
+    # for adaptive (fixed-precision) plans, the planned rank growth.  For
+    # Rank specs, k above IS the target; for Tolerance/Energy, k records the
+    # max-rank cap (the full-rank fallback) and s the growth-panel sketch
+    # width.
+    kind: str = "svd"                           # registry entry to execute
+    spec: Optional[Spec] = None                 # the accuracy contract
+    panel: Optional[int] = None                 # adaptive growth-panel width
+    rank_schedule: Tuple[int, ...] = ()         # planned cumulative basis sizes
+    schedule_hbm_bytes: Tuple[int, ...] = ()    # roofline bytes per growth step
 
     def to_config(self) -> RSVDConfig:
         """The thin frozen RSVDConfig view the core numerics execute."""
@@ -109,13 +121,18 @@ class ExecutionPlan:
     def describe(self) -> str:
         """One-line human summary (examples/quickstart.py prints this)."""
         shape = f"{self.batch}x{self.m}x{self.n}" if self.batch > 1 else f"{self.m}x{self.n}"
+        spec_str = self.spec.describe() if self.spec is not None else f"rank(k={self.k})"
         bits = [
             f"path={self.path}", f"shape={shape}", f"k={self.k}", f"s={self.s}",
+            f"kind={self.kind}", f"spec={spec_str}",
             f"qr={self.qr_method}", f"backend={self.kernel_backend}",
             f"fused_sketch={self.fused_sketch}", f"fused_power={self.fused_power}",
         ]
         if self.block_rows:
             bits.append(f"block_rows={self.block_rows}")
+        if self.path == "adaptive":
+            bits.append(f"panel={self.panel}")
+            bits.append(f"steps={len(self.rank_schedule)}")
         bits.append(f"pred_hbm={self.predicted_hbm_bytes / 1e6:.1f}MB")
         return " ".join(bits)
 
@@ -182,6 +199,11 @@ def _default_config(op: LinOp, path: str, budget: Budget) -> RSVDConfig:
                                    fused_sketch=_on_tpu() and not f64,
                                    kernel_backend="pallas" if _on_tpu() and not f64 else "jnp")
     if f64:
+        if path == "adaptive":
+            # the adaptive body is CholeskyQR-shaped (deflation + CGS2); the
+            # jnp backend keeps the faithful f64 precision end to end
+            return RSVDConfig(power_scheme="stabilized", qr_method="cqr2",
+                              small_svd="lapack")
         return RSVDConfig.faithful()  # the paper's dgesvd setting: jnp, no fusion
     if _on_tpu():
         if path == "dense":
@@ -215,20 +237,149 @@ def _effective_fused_power(m: int, n: int, s: int, dtype, cfg: RSVDConfig,
     return _use_fused_power(shape, cfg, s, vmem_budget=vmem)
 
 
+def _validate(op: LinOp, spec: Spec, kind: str) -> None:
+    """Facade-level input validation: bad ranks and unknown kinds fail HERE
+    with a clear ValueError instead of deep inside the numerics."""
+    from repro.linalg import registry
+
+    registry.get(kind)  # unknown kinds raise registry's ValueError
+    shape = op.shape
+    rmax = min(shape[-2], shape[-1])
+    if rmax == 0:
+        raise ValueError(f"source has an empty dimension: shape {tuple(shape)}")
+    if isinstance(spec, Rank):
+        if spec.k <= 0:
+            raise ValueError(f"rank k must be positive, got k={spec.k}")
+        if spec.k > rmax:
+            raise ValueError(
+                f"rank k={spec.k} exceeds min(m, n)={rmax} for source shape "
+                f"{tuple(shape)}"
+            )
+    elif len(shape) == 3:
+        raise ValueError(
+            f"adaptive spec {spec.describe()} needs a 2-D source, got shape "
+            f"{tuple(shape)} (per-slice ranks would be ragged — solve slices "
+            "individually or use a Rank spec)"
+        )
+    if kind == "eigh" and shape[-2] != shape[-1]:
+        raise ValueError(
+            f"kind='eigh' needs a square (PSD) source, got shape {tuple(shape)}"
+        )
+    if kind in _QB_KINDS and len(shape) == 3:
+        raise ValueError(
+            f"kind={kind!r} needs a 2-D source, got shape {tuple(shape)}"
+        )
+
+
+#: kinds that always execute through the QB engine (core/adaptive.py), even
+#: under a Rank spec — their plan records the QB growth, not a dense solve
+_QB_KINDS = ("qb", "eigh", "lu")
+
+
+def _plan_adaptive(op: LinOp, spec: Spec, kind: str, budget: Budget,
+                   overrides: Optional[RSVDConfig]) -> ExecutionPlan:
+    """Fixed-precision (Tolerance/Energy) plan: the rank is unknown, so the
+    plan records the GROWTH SCHEDULE — cumulative basis sizes in autotune-
+    sized panels up to the max-rank cap — and the roofline bytes of each
+    step.  Execution (registry -> core/adaptive.py) stops early once the
+    posterior estimator meets the spec; the executed prefix of the schedule
+    is what actually runs.
+
+    Unlike the fixed-rank paths, the QB engine does NOT transpose wide
+    sources (qb/lu factor shapes are part of the caller's contract, and the
+    basis approximates range(A), which is orientation-specific), so the
+    plan records the EXECUTED orientation — m/n are the source dims as-is,
+    and the roofline schedule (whose deflation/reorth terms scale with the
+    basis length m) models the solve that actually runs."""
+    from repro.kernels.ops import _block, _select_blocks
+
+    shape = op.shape
+    m, n = shape[-2], shape[-1]
+    rmax = min(m, n)
+    f64 = _is_f64(op.dtype)
+    cfg = overrides if overrides is not None else _default_config(op, "adaptive", budget)
+
+    if isinstance(spec, Rank):
+        # a _QB_KINDS entry at fixed rank: ONE oversampled panel, trimmed
+        # back to k by the rank reveal
+        cap = min(spec.k + cfg.oversample, rmax)
+        panel = cap
+    else:
+        cap = min(getattr(spec, "max_rank", None) or rmax, rmax)
+        panel = getattr(spec, "panel", None)
+        if not panel:
+            # autotune-sized growth panel: the sketch kernel's preferred s-tile
+            panel = _select_blocks("sketch_matmul", (m, 128, n), op.dtype)[1]
+        panel = max(1, min(panel, cap))
+
+    # the fused in-VMEM sketch serves device-resident dense sources only
+    # (HostOp subclasses DenseOp but streams from host — excluded by type)
+    fused_sketch = (
+        bool(cfg.fused_sketch) and not f64 and type(op) is ops_mod.DenseOp
+    )
+    backend = "jnp" if f64 else cfg.kernel_backend
+
+    steps = -(-cap // panel)  # ceil
+    rank_schedule = tuple(min((i + 1) * panel, cap) for i in range(steps))
+    dtype_bytes = jnp.dtype(op.dtype).itemsize
+    schedule_bytes = rsvd_model.adaptive_schedule_bytes(
+        m, n, rank_schedule, cfg.power_iters,
+        dtype_bytes=dtype_bytes, fused_sketch=fused_sketch,
+    )
+    if fused_sketch:
+        bm_, bn_, bk_ = _select_blocks("sketch_matmul", (m, panel, n), op.dtype)
+        blocks = (bm_, min(bn_, _block(panel)), bk_)
+    else:
+        blocks = _select_blocks("matmul", (m, n, panel), op.dtype)
+
+    return ExecutionPlan(
+        path="adaptive",
+        m=m, n=n, k=cap, s=panel, batch=1,
+        dtype=jnp.dtype(op.dtype).name,
+        oversample=cfg.oversample,
+        power_iters=cfg.power_iters,
+        power_scheme=cfg.power_scheme,
+        qr_method=cfg.qr_method,
+        small_svd=cfg.small_svd,
+        sketch_kind=cfg.sketch_kind,
+        fused_sketch=fused_sketch,
+        fused_power=False,          # the growth loop never fuses the power step
+        kernel_backend=backend,
+        block_rows=None,
+        block_cols=cfg.block_cols,
+        blocks=tuple(blocks),
+        predicted_hbm_bytes=sum(schedule_bytes),
+        kind=kind,
+        spec=spec,
+        panel=panel,
+        rank_schedule=rank_schedule,
+        schedule_hbm_bytes=schedule_bytes,
+    )
+
+
 def plan(
     op,
-    k: int,
+    spec,
     budget: Optional[Budget] = None,
     overrides: Optional[RSVDConfig] = None,
+    kind: str = "svd",
 ) -> ExecutionPlan:
-    """Build the execution plan for a rank-k solve over `op`.
+    """Build the execution plan for a solve over `op`.
 
-    Shape-only: `op` may wrap a `jax.ShapeDtypeStruct` — nothing is
-    computed or moved here.  `overrides` pins the numerical variant and the
-    historical dispatch; otherwise the planner picks device-appropriate
-    defaults per source kind."""
+    `spec` is a rank (int, the historical signature) or an accuracy `Spec`
+    (`Rank`/`Tolerance`/`Energy`).  Shape-only: `op` may wrap a
+    `jax.ShapeDtypeStruct` — nothing is computed or moved here.  `overrides`
+    pins the numerical variant and the historical dispatch; otherwise the
+    planner picks device-appropriate defaults per source kind.  `kind`
+    names the decomposition-registry entry the plan targets (svd, eigh, qb,
+    lu, pca)."""
     op = as_linop(op)
     budget = budget or Budget.default()
+    spec = spec_mod.as_spec(spec)
+    _validate(op, spec, kind)
+    if not isinstance(spec, Rank) or kind in _QB_KINDS:
+        return _plan_adaptive(op, spec, kind, budget, overrides)
+    k = spec.k
     path = _pick_path(op, overrides)
     cfg = overrides if overrides is not None else _default_config(op, path, budget)
 
@@ -301,4 +452,7 @@ def plan(
         block_cols=cfg.block_cols,
         blocks=tuple(blocks),
         predicted_hbm_bytes=predicted,
+        kind=kind,
+        spec=spec,
+        rank_schedule=(k,),
     )

@@ -1,0 +1,227 @@
+"""The decomposition registry: `kind -> how to finish a solve`.
+
+`linalg.decompose(source, spec, kind=...)` looks the kind up here.  Every
+entry shares one engine — the (possibly adaptive) QB factorization from
+core/adaptive.py, spec-driven — and differs only in how the revealed
+factors are finished:
+
+  svd    U = Q U_b, S, Vt              (Rank specs on array sources keep the
+                                        historical fixed-rank executors —
+                                        bit-identical to `linalg.svd`)
+  qb     Q' = Q U_b[:, :r], B' = S Vt  (rank-revealed orthonormal basis)
+  eigh   Nystrom for PSD sources:      A ~= F F^T,  F = (A Q) R^{-1},
+                                        R^T R = Q^T A Q (floor-shifted
+                                        Cholesky), eigpairs from svd(F)
+  lu     randomized LU (Shabat et al. 2013 via the QB core):
+                                        A[pr][:, pc] ~= L @ U with L m x r
+                                        lower-trapezoidal, U r x n upper-
+                                        trapezoidal, from pivoted LUs of Q
+                                        and of the r x n middle factor
+  pca    svd over the CenteredOp       (components / explained variance;
+                                        Energy(p) is the explained-variance
+                                        contract)
+
+A handler returns ``(factors, rank, rank_history, err_history)``; the
+facade wraps that in a `Decomposition`.  Third parties can add kinds with
+`register(DecompositionKind(...))` — the planner validates requested kinds
+against `kinds()` at plan time.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import qr as qr_mod
+from repro.core.rsvd import _small_svd
+from repro.linalg.spec import Rank, Spec
+
+#: (factors, rank, rank_history, err_history)
+HandlerResult = Tuple[tuple, int, Tuple[int, ...], Tuple[float, ...]]
+
+
+@dataclass(frozen=True)
+class DecompositionKind:
+    """One registry entry.  `execute` finishes the solve; `prepare` (optional)
+    transforms the source BEFORE planning (pca wraps in CenteredOp here, so
+    the plan sees the operator that actually runs)."""
+
+    name: str
+    execute: Callable  # (op, spec, plan, seed) -> HandlerResult
+    prepare: Optional[Callable] = None  # (op) -> op
+    description: str = ""
+
+
+_REGISTRY: Dict[str, DecompositionKind] = {}
+
+
+def register(entry: DecompositionKind) -> DecompositionKind:
+    """Add (or replace) a decomposition kind."""
+    _REGISTRY[entry.name] = entry
+    return entry
+
+
+def get(name: str) -> DecompositionKind:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown decomposition kind {name!r}; registered kinds: "
+            f"{', '.join(_REGISTRY)}"
+        ) from None
+
+
+def kinds() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# Shared engine: spec-driven QB + rank reveal
+# ---------------------------------------------------------------------------
+
+def _qb_core(op, spec: Spec, pl, seed):
+    """Run the (adaptive) QB engine under the plan's switches.  The plan's
+    `panel` / `k` carry the growth schedule (single `s`-wide panel for Rank
+    specs); `threshold_sq` comes from the spec's stopping contract.  Rank
+    specs need no stopping estimator, so they skip the ||A||_F^2 pass —
+    one fewer read of A on the fixed-rank qb/lu/eigh paths."""
+    from repro.core import adaptive
+
+    norm_sq = threshold_sq = None
+    if not isinstance(spec, Rank):
+        norm_sq = adaptive.fro_norm_sq(op)
+        threshold_sq = spec.threshold_sq(norm_sq)
+    return adaptive.adaptive_qb(
+        op,
+        panel=pl.panel or pl.s,
+        max_rank=pl.k,
+        threshold_sq=threshold_sq,
+        seed=seed,
+        power_iters=pl.power_iters,
+        qr_method=pl.qr_method,
+        sketch_kind=pl.sketch_kind,
+        fused_sketch=pl.fused_sketch,
+        kernel_backend=pl.kernel_backend,
+        norm_sq=norm_sq,
+    )
+
+
+def _reveal(qb, spec: Spec, pl):
+    """Small SVD of B reveals the spectrum; the spec trims the rank (the
+    ±panel overshoot of blocked growth, or the oversampling of a Rank
+    spec's single panel)."""
+    U_b, S, Vt = _small_svd(qb.B, pl.small_svd)
+    keep = spec.select_rank(np.asarray(S), qb.remaining_sq or 0.0,
+                            qb.norm_sq or 0.0)
+    return U_b, S, Vt, int(keep)
+
+
+# ---------------------------------------------------------------------------
+# Handlers
+# ---------------------------------------------------------------------------
+
+def _execute_svd(op, spec, pl, seed) -> HandlerResult:
+    if pl.path != "adaptive":
+        # Rank spec on an array source: the historical fixed-rank executors,
+        # bit-identical to pre-spec `linalg.svd` at fixed seed.
+        from repro.linalg import api
+
+        factors = api._execute_svd_plan(op, spec.k, pl, seed)
+        return tuple(factors), spec.k, (spec.k,), ()
+    qb = _qb_core(op, spec, pl, seed)
+    U_b, S, Vt, keep = _reveal(qb, spec, pl)
+    U = qb.Q @ U_b[:, :keep]
+    return (U, S[:keep], Vt[:keep, :]), keep, qb.rank_history, qb.err_history
+
+
+def _execute_qb(op, spec, pl, seed) -> HandlerResult:
+    qb = _qb_core(op, spec, pl, seed)
+    U_b, S, Vt, keep = _reveal(qb, spec, pl)
+    Qk = qb.Q @ U_b[:, :keep]
+    Bk = S[:keep, None] * Vt[:keep, :]
+    return (Qk, Bk), keep, qb.rank_history, qb.err_history
+
+
+def _execute_eigh(op, spec, pl, seed) -> HandlerResult:
+    """Nystrom eigendecomposition for a PSD source: one extra pass over A
+    (C = A Q) beyond the QB growth, everything else sketch-width."""
+    qb = _qb_core(op, spec, pl, seed)
+    U_b, S, Vt, keep = _reveal(qb, spec, pl)
+    fdtype = jnp.promote_types(op.dtype, jnp.float32)
+    Qk = (qb.Q @ U_b[:, :keep]).astype(fdtype)
+    with qr_mod.kernel_backend(pl.kernel_backend):
+        C = op.matmat(Qk).astype(fdtype)        # A Q, n x keep
+        T = Qk.T @ C                            # Q^T A Q, keep x keep
+        T = 0.5 * (T + T.T)
+        # floor-shifted Cholesky (qr.cholesky_r_from_gram): indefinite noise
+        # from a nearly-PSD source perturbs R at the eps level only
+        R = qr_mod.cholesky_r_from_gram(T)
+        F = qr_mod.tri_solve_right(C, R)        # A_nys = F F^T
+    Uf, sf, _ = jnp.linalg.svd(F, full_matrices=False)
+    w = sf**2                                   # descending eigenvalues
+    return (w, Uf), keep, qb.rank_history, qb.err_history
+
+
+def _execute_lu(op, spec, pl, seed) -> HandlerResult:
+    """Randomized LU via the QB core: pivoted LU of the revealed basis Q,
+    then of the r x n middle factor, composed so that
+
+        A[perm_rows][:, perm_cols] ~= L @ U
+
+    with L (m x r) lower-trapezoidal and U (r x n) unit-upper-trapezoidal —
+    the two-sided permutation structure of Shabat et al. 2013, with the
+    sketch stage replaced by the spec-driven (adaptive) basis."""
+    from jax.lax import linalg as lax_linalg
+
+    qb = _qb_core(op, spec, pl, seed)
+    U_b, S, Vt, keep = _reveal(qb, spec, pl)
+    fdtype = jnp.promote_types(op.dtype, jnp.float32)
+    m, n = op.shape
+    r = keep
+    Qk = (qb.Q @ U_b[:, :r]).astype(fdtype)            # m x r, orthonormal
+    Bk = (S[:r, None] * Vt[:r, :]).astype(fdtype)      # r x n
+    lu1, _, perm_rows = lax_linalg.lu(Qk)              # Qk[perm] = L1 U1
+    L1 = jnp.tril(lu1, -1) + jnp.eye(m, r, dtype=fdtype)
+    U1 = jnp.triu(lu1[:r, :])
+    mid = U1 @ Bk                                      # r x n
+    lu2, _, perm_cols = lax_linalg.lu(mid.T)           # mid.T[perm] = L2 U2
+    L2 = jnp.tril(lu2, -1) + jnp.eye(n, r, dtype=fdtype)
+    U2 = jnp.triu(lu2[:r, :])
+    # A[pr] ~= L1 (U1 Bk) = L1 mid;  mid[:, pc] = U2^T L2^T
+    L = L1 @ U2.T                                      # lower-trapezoidal
+    U = L2.T                                           # unit-upper-trapezoidal
+    return (perm_rows, L, U, perm_cols), keep, qb.rank_history, qb.err_history
+
+
+def _prepare_pca(op):
+    from repro.linalg.operators import CenteredOp
+
+    return op if isinstance(op, CenteredOp) else CenteredOp(op)
+
+
+def _execute_pca(op, spec, pl, seed) -> HandlerResult:
+    """PCA = svd of the CenteredOp (`prepare` wrapped it).  Factors follow
+    `core.pca.PCAResult` field order: (components, explained_variance,
+    singular_values, mean)."""
+    (U, S, Vt), keep, rank_hist, err_hist = _execute_svd(op, spec, pl, seed)
+    n = op.shape[0]
+    return (Vt, S**2 / (n - 1), S, op.mu), keep, rank_hist, err_hist
+
+
+register(DecompositionKind(
+    "svd", _execute_svd,
+    description="U S Vt; Rank specs keep the historical fixed-rank paths"))
+register(DecompositionKind(
+    "qb", _execute_qb,
+    description="rank-revealed orthonormal basis: A ~= Q B"))
+register(DecompositionKind(
+    "eigh", _execute_eigh,
+    description="Nystrom eigendecomposition of a PSD source: A ~= V diag(w) V^T"))
+register(DecompositionKind(
+    "lu", _execute_lu,
+    description="randomized LU: A[pr][:, pc] ~= L U (Shabat et al. 2013)"))
+register(DecompositionKind(
+    "pca", _execute_pca, prepare=_prepare_pca,
+    description="PCA over the centered operator; Energy(p) = explained variance"))

@@ -1,0 +1,148 @@
+"""Accuracy specs: *what* a decomposition must achieve, not *what rank to run*.
+
+The paper's Algorithm 1 takes a target rank `k`, but the applications it
+serves (compression, PCA, low-rank serving) actually know an *accuracy*:
+"2% Frobenius error" or "95% of the variance".  A `Spec` states that
+contract; the planner and the adaptive QB engine (core/adaptive.py) turn it
+into an execution:
+
+  Rank(k)                  fixed rank — the historical entry points, exactly
+  Tolerance(eps)           grow the basis until ||A - QB||_F <= eps ||A||_F
+  Energy(p)                grow until the basis captures fraction p of
+                           ||A||_F^2 (PCA's explained-variance contract)
+
+`Tolerance`/`Energy` share one stopping machinery: the posterior estimator
+``remaining = ||A||_F^2 - ||B||_F^2`` (exact for an orthonormal basis Q, see
+core/adaptive.py), so both reduce to a threshold on the remaining energy —
+`threshold_sq` below.  After the basis converges, `select_rank` trims the
+revealed spectrum to the smallest rank that still meets the spec (the
+±panel overshoot of blocked growth is removed).
+
+Specs are frozen/hashable: they ride inside `ExecutionPlan` (a jit static
+argument) and serialize through `dataclasses.asdict` into BENCH_rsvd.json.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Spec:
+    """Base accuracy spec.  See `Rank`, `Tolerance`, `Energy`."""
+
+    def describe(self) -> str:
+        raise NotImplementedError
+
+    def threshold_sq(self, norm_sq: float) -> Optional[float]:
+        """Stop growing the basis once the estimated remaining energy
+        ||A - QB||_F^2 drops to this value (None = fixed-rank, no stop)."""
+        return None
+
+    def select_rank(self, svals, remaining_sq: float, norm_sq: float) -> int:
+        """Trim the revealed spectrum: smallest rank meeting the spec.
+
+        ``svals`` are the singular values of B (== those of QB, Q
+        orthonormal), descending; ``remaining_sq`` is the estimated energy
+        outside range(Q).  Rank j leaves a squared residual of
+        ``remaining_sq + sum(svals[j:]**2)``."""
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class Rank(Spec):
+    """Fixed target rank — the paper's original contract."""
+
+    k: int
+
+    def __post_init__(self):
+        if not isinstance(self.k, (int, np.integer)) or isinstance(self.k, bool):
+            raise ValueError(f"Rank takes an integer k, got {self.k!r}")
+
+    def describe(self) -> str:
+        return f"rank(k={self.k})"
+
+    def select_rank(self, svals, remaining_sq, norm_sq) -> int:
+        return min(self.k, len(svals))
+
+
+def _tail_sq(svals) -> np.ndarray:
+    """tail_sq[j] = sum(svals[j:]**2) for j = 0..len, in float64."""
+    sq = np.asarray(svals, np.float64) ** 2
+    return np.concatenate([np.cumsum(sq[::-1])[::-1], [0.0]])
+
+
+@dataclass(frozen=True)
+class Tolerance(Spec):
+    """Relative-error target: ||A - A_r||_norm <= eps * ||A||_norm.
+
+    Only ``norm="fro"`` is implemented (the posterior estimator is exact in
+    the Frobenius norm; a spectral-norm stop would need power iteration on
+    the residual operator).  ``panel`` overrides the autotune-sized growth
+    panel; ``max_rank`` caps the search (default min(m, n) — the full-rank
+    fallback when the tolerance is unreachable)."""
+
+    eps: float
+    norm: str = "fro"
+    max_rank: Optional[int] = None
+    panel: Optional[int] = None
+
+    def __post_init__(self):
+        if not (float(self.eps) > 0.0):
+            raise ValueError(f"Tolerance eps must be positive, got {self.eps}")
+        if self.norm != "fro":
+            raise ValueError(
+                f"Tolerance norm={self.norm!r} not supported (only 'fro' — the"
+                " posterior energy estimator is a Frobenius identity)"
+            )
+
+    def describe(self) -> str:
+        return f"tol(eps={float(self.eps):g})"
+
+    def threshold_sq(self, norm_sq: float) -> float:
+        return float(self.eps) ** 2 * norm_sq
+
+    def select_rank(self, svals, remaining_sq, norm_sq) -> int:
+        target = self.threshold_sq(norm_sq)
+        resid = remaining_sq + _tail_sq(svals)          # resid[j]: keep j vals
+        ok = np.nonzero(resid <= target)[0]
+        return max(1, int(ok[0])) if ok.size else len(svals)
+
+
+@dataclass(frozen=True)
+class Energy(Spec):
+    """Captured-energy target: keep the smallest rank whose components hold
+    fraction ``p`` of ||A||_F^2 (PCA's explained-variance contract)."""
+
+    p: float
+    max_rank: Optional[int] = None
+    panel: Optional[int] = None
+
+    def __post_init__(self):
+        if not (0.0 < float(self.p) <= 1.0):
+            raise ValueError(f"Energy fraction p must be in (0, 1], got {self.p}")
+
+    def describe(self) -> str:
+        return f"energy(p={float(self.p):g})"
+
+    def threshold_sq(self, norm_sq: float) -> float:
+        # captured >= p * total  <=>  remaining <= (1 - p) * total
+        return (1.0 - float(self.p)) * norm_sq
+
+    def select_rank(self, svals, remaining_sq, norm_sq) -> int:
+        captured = np.cumsum(np.asarray(svals, np.float64) ** 2)
+        ok = np.nonzero(captured >= float(self.p) * norm_sq)[0]
+        return int(ok[0]) + 1 if ok.size else len(svals)
+
+
+def as_spec(x) -> Spec:
+    """Coerce the facade's rank-or-spec argument: ints become `Rank`."""
+    if isinstance(x, Spec):
+        return x
+    if isinstance(x, (int, np.integer)) and not isinstance(x, bool):
+        return Rank(int(x))
+    raise ValueError(
+        f"expected a rank (int) or a Spec (Rank/Tolerance/Energy), got {x!r}"
+    )

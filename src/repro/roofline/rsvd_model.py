@@ -65,6 +65,75 @@ def projection_bytes(m: int, n: int, s: int, fused_power: bool, dtype_bytes: int
     return (cqr + b) * dtype_bytes
 
 
+def adaptive_panel_bytes(
+    m: int,
+    n: int,
+    b: int,
+    r_prev: int,
+    power_iters: int,
+    dtype_bytes: int = 4,
+    fused_sketch: bool = False,
+) -> int:
+    """HBM traffic of ONE adaptive growth panel (core/adaptive.py), with an
+    accumulated basis of `r_prev` columns already on device.
+
+      sketch    Y = A @ Omega_p         read A, Omega panel (free if fused),
+                                        write Y (m x b)
+      deflate   Y -= Q (Q^T Y)          read Q twice + round-trip Y — the
+                                        term that grows linearly in r_prev
+      power     q x { orth(Y), Z = A^T Q_y, orth(Z), Y = A Q_z, deflate }
+                                        TWO reads of A per iteration (the
+                                        adaptive loop runs the unfused
+                                        operator body) + panel-width CQR2s
+      reorth    orth(Y) + CGS2 pass against Q + orth  (panel CQR2s + one
+                                        more deflation)
+      project   B_p = (A^T Q_p)^T       one more read of A
+      estimate  ||B_p||_F^2             re-read of the b x n panel
+
+    Panel-width CQR2 on an m x b block costs ~6 m b (two Grams + two TRSMs,
+    matching `hbm_bytes_per_power_iter`'s counting convention); s x s and
+    b x b Grams are dropped as O(b^2).
+    """
+    deflate = 2 * m * r_prev + 2 * m * b
+    sketch = m * n + m * b + (0 if fused_sketch else 2 * n * b)
+    power = power_iters * (
+        6 * m * b            # orth(Y), CQR2
+        + (m * n + m * b + n * b)  # Z = A^T Q_y
+        + 6 * n * b          # orth(Z), CQR2 on n x b
+        + (m * n + n * b + m * b)  # Y = A Q_z
+        + deflate
+    )
+    reorth = 6 * m * b + deflate + 6 * m * b
+    project = m * n + m * b + n * b
+    estimate = n * b
+    return (sketch + deflate + power + reorth + project + estimate) * dtype_bytes
+
+
+def adaptive_schedule_bytes(
+    m: int,
+    n: int,
+    rank_schedule: tuple,
+    power_iters: int,
+    dtype_bytes: int = 4,
+    fused_sketch: bool = False,
+) -> tuple:
+    """Per-growth-step bytes for a cumulative `rank_schedule` (r_1, r_2, ...):
+    step i grows the basis from r_{i-1} to r_i.  The planner stamps this
+    tuple on adaptive ExecutionPlans; summing it gives the full-schedule
+    (worst-case, tolerance never met) prediction."""
+    out = []
+    r_prev = 0
+    for r in rank_schedule:
+        out.append(
+            adaptive_panel_bytes(
+                m, n, r - r_prev, r_prev, power_iters,
+                dtype_bytes=dtype_bytes, fused_sketch=fused_sketch,
+            )
+        )
+        r_prev = r
+    return tuple(out)
+
+
 def predicted_hbm_bytes(
     m: int,
     n: int,

@@ -1,17 +1,21 @@
 """Low-rank serve-time weight compression via the paper's randomized SVD.
 
-W (m x n) ~= A @ B with A = U_k sqrt(S_k), B = sqrt(S_k) V_k^T computed by
-core.rsvd.randomized_svd.  At decode batch sizes the two skinny GEMMs are
-memory-bound wins: HBM reads drop from mn to k(m+n) per token.
+W (m x n) ~= A @ B with A = U_k sqrt(S_k), B = sqrt(S_k) V_k^T.  At decode
+batch sizes the two skinny GEMMs are memory-bound wins: HBM reads drop from
+mn to k(m+n) per token.
 
 Applied to the large projection matrices (FFN + attention out) whose spectra
-decay; the embedding and router stay exact.  Quality is the caller's choice
-of rank — `compression_report` gives per-matrix relative error so the choice
-is informed (the paper's 1+eps guarantee, applied to weights).
+decay; the embedding and router stay exact.  Quality is stated either as a
+rank (`factorize_params(params, rank=64)` — the caller reads the error
+report and iterates) or, since the spec redesign, directly as an accuracy:
+`factorize_params(params, tol=0.02)` lets the adaptive QB engine
+(`linalg.Tolerance`) pick each matrix's OWN rank for a uniform 2% relative
+error — spectra differ per layer, so a single global rank over- or
+under-compresses somewhere.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +47,17 @@ def _factorize_2d(W: jax.Array, rank: int):
     return U * root[None, :], root[:, None] * Vt, err
 
 
+def _factorize_2d_tol(W: jax.Array, tol: float):
+    """Accuracy-first factorization: the adaptive QB engine grows the rank
+    until ||W - A B||_F <= tol ||W||_F, so every matrix lands on its own
+    (smallest) rank for the requested error."""
+    dec = linalg.decompose(W, linalg.Tolerance(tol), overrides=_RSVD)
+    U, S, Vt = dec.factors
+    root = jnp.sqrt(S)
+    err = linalg.residual(W, dec.factors, block_rows=2048)
+    return U * root[None, :], root[:, None] * Vt, err, dec.rank
+
+
 def _factorize_stacked(W: jax.Array, rank: int):
     """[units, m, n] leaf: one batched RSVD (the StackedOp execution path)
     for all units, with per-unit decorrelated sketch seeds."""
@@ -54,25 +69,69 @@ def _factorize_stacked(W: jax.Array, rank: int):
     return A, B, err
 
 
-def factorize_params(params, rank: int) -> Tuple[Any, Dict[str, float]]:
+def factorize_params(
+    params, rank: Optional[int] = None, *, tol: Optional[float] = None
+) -> Tuple[Any, Dict[str, float]]:
     """Replace each target weight W with {'lr_a': A, 'lr_b': B}.
+
+    Exactly one of `rank` / `tol` picks the quality contract: a fixed rank
+    for every leaf, or a relative Frobenius tolerance that lets each leaf
+    find its own rank (adaptive QB).  Stacked leaves probe slice 0
+    adaptively and run every unit at that rank under one vmap (per-unit
+    ragged ranks would break the scan layout); since other slices may need
+    MORE rank, the reported error is the WORST slice and the stack-wide
+    rank is escalated until that worst slice meets `tol` (or the dense
+    fallback triggers).
 
     Scan-stacked leaves [U, m, n] are factorized with a vmapped RSVD so the
     per-unit slices that lax.scan extracts are already the two skinny GEMM
-    factors.  Leaves with min(m, n) <= 2*rank stay dense (no saving)."""
+    factors.  Leaves whose selected rank r has min(m, n) <= 2*r stay dense
+    (no saving)."""
+    if (rank is None) == (tol is None):
+        raise ValueError("factorize_params needs exactly one of rank= or tol=")
     report: Dict[str, float] = {}
 
     def visit(path, leaf):
-        if not _is_target(path, leaf) or min(leaf.shape[-2:]) <= 2 * rank:
+        if not _is_target(path, leaf):
+            return leaf
+        if rank is not None and min(leaf.shape[-2:]) <= 2 * rank:
             return leaf
         name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
         W = leaf.astype(jnp.float32)
         if leaf.ndim == 2:
-            A, B, err = _factorize_2d(W, rank)
+            if tol is not None:
+                A, B, err, r = _factorize_2d_tol(W, tol)
+                if min(leaf.shape) <= 2 * r:
+                    return leaf  # tolerance needs too much rank: no saving
+            else:
+                A, B, err = _factorize_2d(W, rank)
             report[name] = float(err)
         else:
-            A, B, err = _factorize_stacked(W, rank)
-            report[name] = float(jnp.mean(err))
+            if tol is not None:
+                # one adaptive probe seeds the stack-wide rank; the vmapped
+                # pass then verifies the WORST slice, and if some unit's
+                # spectrum needs more than slice 0 did, THAT slice is
+                # probed adaptively and the stack re-run at its rank
+                r = linalg.decompose(W[0], linalg.Tolerance(tol), overrides=_RSVD).rank
+                while True:
+                    if min(leaf.shape[-2:]) <= 2 * r:
+                        return leaf  # tolerance needs too much rank: no saving
+                    A, B, err = _factorize_stacked(W, r)
+                    worst = float(jnp.max(err))
+                    if worst <= tol:
+                        break
+                    i = int(jnp.argmax(err))
+                    r_worst = linalg.decompose(
+                        W[i], linalg.Tolerance(tol), overrides=_RSVD).rank
+                    # progress by at least the oversample margin: the probe
+                    # can certify a rank the fixed-rank vmapped run (other
+                    # seeds, trimmed oversampling) just misses, and +1 steps
+                    # would re-factorize the whole stack O(min(m, n)) times
+                    r = max(r_worst, r + _RSVD.oversample)
+                report[name] = worst
+            else:
+                A, B, err = _factorize_stacked(W, rank)
+                report[name] = float(jnp.mean(err))
         return {"lr_a": A.astype(leaf.dtype), "lr_b": B.astype(leaf.dtype)}
 
     new_params = jax.tree_util.tree_map_with_path(visit, params)

@@ -1,0 +1,225 @@
+"""Fixed-precision (adaptive-rank) QB: the stopping rule and its estimator.
+
+Spectra with known decay (core/spectra.py) make the ORACLE rank computable:
+the smallest j with `truncation_error(sig, j) <= eps`.  The adaptive engine
+must land within one growth panel of it, meet the requested residual, and
+run strictly fewer panels than the full-rank fallback whenever the spectrum
+decays."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import linalg
+from repro.core import truncation_error
+from repro.core.adaptive import adaptive_qb, fro_norm_sq
+from repro.core.spectra import make_test_matrix
+
+
+def _analytic_rank(sig, eps: float) -> int:
+    """Smallest rank whose optimal truncation meets the tolerance."""
+    for j in range(len(sig)):
+        if float(truncation_error(sig, j)) <= eps:
+            return j
+    return len(sig)
+
+
+# ---------------------------------------------------------------------------
+# Rank selection: within +/- panel of the oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,eps", [("fast", 1e-2), ("sharp", 1e-2)])
+def test_tolerance_selects_rank_within_one_panel_of_oracle(kind, eps):
+    panel = 8
+    A, sig = make_test_matrix(224, 96, kind, seed=0)
+    dec = linalg.decompose(A, linalg.Tolerance(eps, panel=panel), seed=1)
+    oracle = _analytic_rank(sig, eps)
+    # selected rank can never beat the oracle (randomized tail >= optimal
+    # tail), and trimming removes all but the blocked-growth overshoot
+    assert oracle <= dec.rank <= oracle + panel, (dec.rank, oracle)
+    achieved = float(linalg.residual(A, dec.factors))
+    assert achieved <= eps, (achieved, eps)
+
+
+def test_adaptive_runs_strictly_fewer_panels_than_full_rank_fallback():
+    """The acceptance property: on a decaying spectrum the tolerance is met
+    with a strict prefix of the planned growth schedule, and the plan
+    records that schedule."""
+    A, _ = make_test_matrix(224, 96, "sharp", seed=2)
+    dec = linalg.decompose(A, linalg.Tolerance(1e-2, panel=16), seed=0)
+    assert dec.plan.path == "adaptive"
+    assert dec.plan.rank_schedule[-1] == 96            # full-rank fallback cap
+    assert len(dec.rank_history) < len(dec.plan.rank_schedule)
+    assert dec.rank_history == dec.plan.rank_schedule[: len(dec.rank_history)]
+    assert len(dec.plan.schedule_hbm_bytes) == len(dec.plan.rank_schedule)
+    assert float(linalg.residual(A, dec.factors)) <= 1e-2
+
+
+def test_unreachable_tolerance_falls_back_to_full_rank():
+    """A slow (1/i^0.1) spectrum cannot reach 1% error below full rank: the
+    engine must stop at the cap instead of looping."""
+    A, sig = make_test_matrix(96, 48, "slow", seed=3)
+    dec = linalg.decompose(A, linalg.Tolerance(1e-2, panel=16), seed=0)
+    assert dec.rank_history[-1] == 48
+    assert len(dec.rank_history) == len(dec.plan.rank_schedule)
+
+
+def test_max_rank_caps_the_search():
+    A, _ = make_test_matrix(96, 48, "slow", seed=4)
+    dec = linalg.decompose(A, linalg.Tolerance(1e-3, panel=8, max_rank=24), seed=0)
+    assert dec.rank <= 24 and dec.rank_history[-1] == 24
+
+
+# ---------------------------------------------------------------------------
+# Property: achieved residual <= requested tolerance across decays / dtypes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,eps", [
+    ("fast", 5e-2), ("fast", 1e-2), ("sharp", 1e-2), ("slow", 0.5),
+])
+@pytest.mark.parametrize("seed", [0, 7])
+def test_achieved_residual_meets_tolerance_f32(kind, eps, seed):
+    A, _ = make_test_matrix(192, 64, kind, seed=seed)
+    dec = linalg.decompose(A, linalg.Tolerance(eps, panel=8), seed=seed + 1)
+    achieved = float(linalg.residual(A, dec.factors))
+    assert achieved <= eps, (kind, eps, achieved, dec.rank)
+    # the posterior estimate agrees with the measured residual at the
+    # stopping panel (exact identity up to fp32 roundoff, pre-trim)
+    assert dec.err_history[-1] <= eps
+
+
+def test_achieved_residual_meets_tolerance_f64():
+    from repro.compat import enable_x64
+
+    with enable_x64():
+        A, _ = make_test_matrix(160, 64, "fast", seed=5, dtype=jnp.float64)
+        dec = linalg.decompose(A, linalg.Tolerance(1e-3, panel=8), seed=2)
+        assert dec.plan.kernel_backend == "jnp" and not dec.plan.fused_sketch
+        achieved = float(linalg.residual(A, dec.factors))
+        assert achieved <= 1e-3, achieved
+
+
+def test_f64_certifies_below_the_f32_estimator_floor():
+    """An f64 source keeps the f64 estimator floor: a 1e-6 tolerance (far
+    below the ~3e-4 fp32 floor) is certified AND trimmed to the analytic
+    rank on a true exponential spectrum."""
+    from repro.compat import enable_x64
+    from repro.core.spectra import random_orthogonal
+
+    with enable_x64():
+        n = 96
+        sig = jnp.asarray(10.0 ** (-jnp.arange(n, dtype=jnp.float64) / 3.0))
+        U = random_orthogonal(192, n, 1, dtype=jnp.float64)
+        V = random_orthogonal(n, n, 2, dtype=jnp.float64)
+        A = (U * sig[None, :]) @ V.T
+        dec = linalg.decompose(A, linalg.Tolerance(1e-6, panel=8), seed=0)
+        achieved = float(linalg.residual(A, dec.factors))
+        tail = np.sqrt(np.cumsum(np.asarray(sig[::-1]) ** 2)[::-1]
+                       / np.sum(np.asarray(sig) ** 2))
+        analytic = int(np.nonzero(tail <= 1e-6)[0][0])
+        assert achieved <= 1e-6, achieved
+        assert analytic <= dec.rank <= analytic + 8, (dec.rank, analytic)
+
+
+def test_tolerance_streams_host_source():
+    """Adaptive growth over a HostOp: only panel-sized state moves, and the
+    stopping rule sees the same estimator."""
+    A_np = np.asarray(make_test_matrix(256, 64, "fast", seed=6)[0])
+    op = linalg.HostOp(A_np, block_rows=64)
+    dec = linalg.decompose(op, linalg.Tolerance(2e-2, panel=8), seed=1)
+    assert float(linalg.residual(op, dec.factors)) <= 2e-2
+    assert dec.rank < 64
+
+
+def test_wide_source_plan_records_executed_orientation():
+    """The QB engine never transposes (qb/lu factor shapes are contract-
+    bound): a wide source's adaptive plan must record the source dims as-is
+    and the solve must still meet the tolerance."""
+    A, _ = make_test_matrix(224, 96, "fast", seed=13)
+    A_wide = A.T                                   # 96 x 224
+    dec = linalg.decompose(A_wide, linalg.Tolerance(2e-2, panel=8), seed=2)
+    assert (dec.plan.m, dec.plan.n) == (96, 224)
+    U, S, Vt = dec.factors
+    assert U.shape[0] == 96 and Vt.shape[1] == 224
+    assert float(linalg.residual(A_wide, dec.factors)) <= 2e-2
+
+
+def test_tolerance_on_composed_operator():
+    """CenteredOp source: the estimator's ||A||_F^2 walk composes panel-wise
+    (never materializing the centered matrix)."""
+    X = make_test_matrix(192, 48, "fast", seed=8)[0] + 0.75
+    op = linalg.CenteredOp(linalg.DenseOp(X))
+    dec = linalg.decompose(op, linalg.Tolerance(5e-2, panel=8), seed=3)
+    Xc = X - jnp.mean(X, axis=0)[None, :]
+    U, S, Vt = dec.factors
+    err = float(jnp.linalg.norm(Xc - (U * S[None, :]) @ Vt) / jnp.linalg.norm(Xc))
+    assert err <= 5e-2 + 1e-5, err
+
+
+# ---------------------------------------------------------------------------
+# Energy spec
+# ---------------------------------------------------------------------------
+
+def test_energy_captures_requested_fraction():
+    A, sig = make_test_matrix(192, 64, "fast", seed=9)
+    p = 0.99
+    dec = linalg.decompose(A, linalg.Energy(p, panel=4), seed=0)
+    U, S, Vt = dec.factors
+    captured = float(jnp.sum(S**2)) / float(jnp.sum(A.astype(jnp.float32) ** 2))
+    assert captured >= p - 1e-4, (captured, p)
+    # and the oracle comparison: smallest rank with cumulative energy >= p
+    e = np.cumsum(np.asarray(sig, np.float64) ** 2)
+    oracle = int(np.nonzero(e >= p * e[-1])[0][0]) + 1
+    assert oracle <= dec.rank <= oracle + 4
+
+
+# ---------------------------------------------------------------------------
+# The engine itself: estimator identity + basis quality
+# ---------------------------------------------------------------------------
+
+def test_posterior_estimator_matches_true_residual():
+    """remaining = ||A||^2 - ||B||^2 must equal the true ||A - Q Q^T A||^2
+    (the Frobenius identity the stopping rule rests on)."""
+    A, _ = make_test_matrix(128, 48, "sharp", seed=10)
+    norm = fro_norm_sq(linalg.DenseOp(A))
+    qb = adaptive_qb(linalg.DenseOp(A), panel=12, max_rank=36,
+                     threshold_sq=None, norm_sq=norm, seed=4)
+    R = A - qb.Q @ qb.B
+    true_sq = float(jnp.sum(R.astype(jnp.float32) ** 2))
+    assert math.isclose(qb.remaining_sq, true_sq, rel_tol=1e-3, abs_tol=1e-4 * norm)
+
+
+def test_fixed_rank_qb_skips_the_estimator_pass():
+    """Rank specs have no stopping rule: no ||A||_F^2 pass, no estimator
+    fields (one fewer read of A on the fixed-rank qb/lu/eigh paths)."""
+    A, _ = make_test_matrix(96, 32, "fast", seed=12)
+    qb = adaptive_qb(linalg.DenseOp(A), panel=12, max_rank=12,
+                     threshold_sq=None, seed=4)
+    assert qb.norm_sq is None and qb.remaining_sq is None
+    assert qb.err_history == () and qb.rank_history == (12,)
+    dec = linalg.decompose(A, linalg.Rank(8), kind="qb", seed=1)
+    assert dec.err_history == ()
+
+
+def test_grown_basis_stays_orthonormal():
+    """CGS2 against the accumulated basis: ||Q^T Q - I|| = O(eps) even after
+    several growth panels."""
+    # slow decay: every panel contributes, so the basis actually grows to 48
+    A, _ = make_test_matrix(160, 64, "slow", seed=11)
+    qb = adaptive_qb(linalg.DenseOp(A), panel=8, max_rank=48,
+                     threshold_sq=None, seed=5)
+    G = np.asarray(qb.Q.T @ qb.Q)
+    assert np.max(np.abs(G - np.eye(G.shape[0]))) < 5e-5
+    assert qb.rank_history == (8, 16, 24, 32, 40, 48)
+
+
+def test_panel_seeds_decorrelate():
+    """Different growth panels draw DIFFERENT sketches (per-panel seed
+    offsets through the counter RNG) — a repeated sketch would stall the
+    basis on slow-decay spectra."""
+    from repro.core.sketch import sketch_matrix
+
+    s0 = np.asarray(sketch_matrix(32, 8, jnp.uint32(3)))
+    s1 = np.asarray(sketch_matrix(32, 8, jnp.uint32(4)))
+    assert not np.allclose(s0, s1)

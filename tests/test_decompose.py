@@ -1,0 +1,433 @@
+"""Spec-driven decompositions: the registry, facade validation, plan
+summaries, and the non-SVD kinds (qb / lu / eigh / pca).
+
+The Rank-spec svd path must be BIT-identical to `linalg.svd` (same planner,
+same executors) — that is the contract that lets every historical call site
+become a thin spec wrapper."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import linalg
+from repro.core.rsvd import RSVDConfig
+from repro.core.spectra import make_test_matrix, random_orthogonal, spectrum
+
+
+def _sds(m, n, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct((m, n), dtype)
+
+
+def _psd(n, kind="sharp", seed=0):
+    """A = V diag(sig) V^T: symmetric PSD with a known spectrum."""
+    V = random_orthogonal(n, n, seed)
+    sig = spectrum(n, kind)
+    return (V * sig[None, :]) @ V.T, sig
+
+
+# ---------------------------------------------------------------------------
+# Spec objects + coercion
+# ---------------------------------------------------------------------------
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="positive"):
+        linalg.Tolerance(0.0)
+    with pytest.raises(ValueError, match="norm"):
+        linalg.Tolerance(1e-2, norm="spectral")
+    with pytest.raises(ValueError, match="in \\(0, 1\\]"):
+        linalg.Energy(0.0)
+    with pytest.raises(ValueError, match="in \\(0, 1\\]"):
+        linalg.Energy(1.5)
+    with pytest.raises(ValueError, match="integer"):
+        linalg.Rank(2.5)
+    with pytest.raises(ValueError, match="rank .* or a Spec"):
+        linalg.as_spec("twelve")
+    assert linalg.as_spec(8) == linalg.Rank(8)
+    spec = linalg.Tolerance(1e-2)
+    assert linalg.as_spec(spec) is spec
+
+
+# ---------------------------------------------------------------------------
+# Facade validation: clear ValueErrors at plan time, not deep in numerics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("entry", [linalg.svd, linalg.eigvals])
+def test_bad_rank_raises_at_plan_time(entry):
+    A = jnp.zeros((32, 16))
+    with pytest.raises(ValueError, match="positive"):
+        entry(A, 0)
+    with pytest.raises(ValueError, match="positive"):
+        entry(A, -3)
+    with pytest.raises(ValueError, match="exceeds min"):
+        entry(A, 17)
+
+
+def test_bad_rank_raises_for_stacked_and_pca():
+    with pytest.raises(ValueError, match="exceeds min"):
+        linalg.svd(jnp.zeros((2, 32, 16)), 20)
+    with pytest.raises(ValueError, match="positive"):
+        linalg.pca(jnp.zeros((32, 16)), 0)
+
+
+def test_empty_dimension_raises_at_plan_time():
+    with pytest.raises(ValueError, match="empty dimension"):
+        linalg.decompose(jnp.zeros((0, 8)), linalg.Tolerance(0.1))
+    with pytest.raises(ValueError, match="empty dimension|exceeds min"):
+        linalg.svd(jnp.zeros((8, 0)), 2)
+
+
+def test_bad_ndim_raises_value_error():
+    with pytest.raises(ValueError, match="2-D .* or 3-D"):
+        linalg.svd(jnp.zeros((8,)), 2)
+    with pytest.raises(ValueError, match="2-D .* or 3-D"):
+        linalg.plan(jnp.zeros((2, 2, 2, 2)), 1)
+
+
+def test_fixed_rank_wrappers_reject_adaptive_specs():
+    """svd/eigvals are the Rank-spec thin wrappers: an adaptive spec must be
+    redirected to decompose() with a clear message, not crash deep in the
+    path dispatch."""
+    A = jnp.zeros((32, 16))
+    with pytest.raises(ValueError, match="use linalg.decompose"):
+        linalg.svd(A, linalg.Tolerance(1e-2))
+    with pytest.raises(ValueError, match="use linalg.decompose"):
+        linalg.eigvals(A, linalg.Energy(0.9))
+    pl = linalg.plan(A, linalg.Tolerance(1e-2))
+    with pytest.raises(ValueError, match="decompose"):
+        linalg.svd(A, 4, plan=pl)
+
+
+def test_pinned_plan_must_match_spec_and_kind():
+    """decompose with a pinned plan built for a DIFFERENT spec/kind fails
+    with a clear re-plan message, not an internal AttributeError."""
+    A, _ = make_test_matrix(96, 32, "fast", seed=30)
+    pl = linalg.plan(A, 8)
+    with pytest.raises(ValueError, match="re-plan"):
+        linalg.decompose(A, linalg.Tolerance(1e-2), plan=pl)
+    with pytest.raises(ValueError, match="re-plan"):
+        linalg.decompose(A, 8, kind="qb", plan=pl)
+
+
+def test_plan_facade_prepares_pca_sources():
+    """linalg.plan(kind='pca') must describe the CenteredOp that decompose
+    actually executes, so a pinned pca plan round-trips — and the lazy mu
+    keeps shape-only planning data-free."""
+    X = make_test_matrix(128, 32, "fast", seed=31)[0] + 0.5
+    pl = linalg.plan(X, 6, kind="pca")
+    assert pl.path == "matfree" and pl.kind == "pca"
+    res = linalg.decompose(X, 6, kind="pca", plan=pl)
+    direct = linalg.pca(X, 6)
+    np.testing.assert_allclose(np.asarray(res.factors[2]),
+                               np.asarray(direct.singular_values), rtol=1e-5)
+    # shape-only: a ShapeDtypeStruct source plans without touching data
+    pl_sds = linalg.plan(linalg.DenseOp(_sds(512, 64)), 6, kind="pca")
+    assert pl_sds.path == "matfree"
+
+
+def test_fro_norm_sq_bounds_composed_panel_height():
+    """The ||A||_F^2 walk must not materialize the full centered matrix:
+    the default panel height is bounded even when the source has no
+    block_rows of its own."""
+    from repro.core.adaptive import DEFAULT_NORM_PANEL_ROWS, fro_norm_sq
+
+    seen = []
+
+    class Recorder(linalg.DenseOp):
+        def row_panels(self, block_rows=None):
+            seen.append(block_rows)
+            return super().row_panels(block_rows)
+
+    X = make_test_matrix(96, 24, "fast", seed=32)[0] + 1.0
+    op = linalg.CenteredOp(Recorder(X))
+    got = fro_norm_sq(op)
+    # two bounded walks: the lazy mu (column_means) and the norm itself
+    assert seen == [linalg.HostOp.DEFAULT_BLOCK_ROWS, DEFAULT_NORM_PANEL_ROWS]
+    Xc = X - jnp.mean(X, axis=0)[None, :]
+    np.testing.assert_allclose(got, float(jnp.sum(Xc * Xc)), rtol=1e-5)
+
+
+def test_unknown_kind_and_shape_constraints():
+    A = jnp.zeros((16, 16))
+    with pytest.raises(ValueError, match="unknown decomposition kind"):
+        linalg.decompose(A, 4, kind="polar")
+    with pytest.raises(ValueError, match="unknown decomposition kind"):
+        linalg.plan(A, 4, kind="polar")
+    with pytest.raises(ValueError, match="square"):
+        linalg.plan(jnp.zeros((32, 16)), 4, kind="eigh")
+    with pytest.raises(ValueError, match="2-D source"):
+        linalg.plan(jnp.zeros((2, 16, 8)), linalg.Tolerance(1e-2))
+
+
+# ---------------------------------------------------------------------------
+# Plan summaries: golden describe() strings (kind/spec included)
+# ---------------------------------------------------------------------------
+
+DESCRIBE_GOLDEN = [
+    (lambda: linalg.plan(linalg.DenseOp(_sds(1024, 512)), 32,
+                         overrides=RSVDConfig()),
+     "path=dense shape=1024x512 k=32 s=42 kind=svd spec=rank(k=32)"
+     " qr=householder backend=jnp fused_sketch=False fused_power=False"
+     " pred_hbm=18.7MB"),
+    (lambda: linalg.plan(linalg.DenseOp(_sds(1024, 512)),
+                         linalg.Tolerance(1e-2, panel=64),
+                         overrides=RSVDConfig()),
+     "path=adaptive shape=1024x512 k=512 s=64 kind=svd spec=tol(eps=0.01)"
+     " qr=householder backend=jnp fused_sketch=False fused_power=False"
+     " panel=64 steps=8 pred_hbm=260.0MB"),
+    (lambda: linalg.plan(linalg.DenseOp(_sds(1024, 512)), linalg.Rank(16),
+                         overrides=RSVDConfig(), kind="qb"),
+     "path=adaptive shape=1024x512 k=26 s=26 kind=qb spec=rank(k=16)"
+     " qr=householder backend=jnp fused_sketch=False fused_power=False"
+     " panel=26 steps=1 pred_hbm=17.7MB"),
+    (lambda: linalg.plan(linalg.DenseOp(_sds(512, 512)),
+                         linalg.Energy(0.9, panel=32),
+                         overrides=RSVDConfig(), kind="eigh"),
+     "path=adaptive shape=512x512 k=512 s=32 kind=eigh spec=energy(p=0.9)"
+     " qr=householder backend=jnp fused_sketch=False fused_power=False"
+     " panel=32 steps=16 pred_hbm=224.4MB"),
+]
+
+
+@pytest.mark.parametrize("mk_plan,want", DESCRIBE_GOLDEN,
+                         ids=["rank", "tol", "qb", "eigh"])
+def test_describe_golden(mk_plan, want):
+    assert mk_plan().describe() == want
+
+
+def test_adaptive_plan_bytes_match_roofline_schedule():
+    from repro.roofline import rsvd_model
+
+    pl = linalg.plan(linalg.DenseOp(_sds(1024, 512)),
+                     linalg.Tolerance(1e-2, panel=64), overrides=RSVDConfig())
+    want = rsvd_model.adaptive_schedule_bytes(
+        pl.m, pl.n, pl.rank_schedule, pl.power_iters,
+        dtype_bytes=4, fused_sketch=pl.fused_sketch)
+    assert pl.schedule_hbm_bytes == want
+    assert pl.predicted_hbm_bytes == sum(want)
+
+
+# ---------------------------------------------------------------------------
+# Rank-spec svd is bit-identical to linalg.svd (the thin-wrapper contract)
+# ---------------------------------------------------------------------------
+
+def _assert_same(a, b):
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_decompose_rank_svd_bit_identical_dense():
+    A, _ = make_test_matrix(192, 64, "fast", seed=0)
+    dec = linalg.decompose(A, linalg.Rank(8), seed=3)
+    _assert_same(dec.factors, linalg.svd(A, 8, seed=3))
+    assert dec.rank == 8 and dec.plan.path == "dense"
+    assert dec.rank_history == (8,)
+
+
+def test_decompose_rank_svd_bit_identical_streamed_and_batched():
+    A_host = np.asarray(make_test_matrix(200, 48, "fast", seed=1)[0])
+    op = linalg.HostOp(A_host, block_rows=64)
+    _assert_same(linalg.decompose(op, 6, seed=2).factors,
+                 linalg.svd(op, 6, seed=2))
+    stack = jnp.stack([make_test_matrix(64, 32, "fast", seed=4 + i)[0]
+                       for i in range(2)])
+    _assert_same(linalg.decompose(stack, 4, seed=9).factors,
+                 linalg.svd(stack, 4, seed=9))
+
+
+def test_decomposition_unpacks_like_its_factors():
+    A, _ = make_test_matrix(96, 32, "fast", seed=2)
+    dec = linalg.decompose(A, 5)
+    U, S, Vt = dec
+    assert U.shape == (96, 5) and S.shape == (5,) and Vt.shape == (5, 32)
+    assert len(dec) == 3 and dec[1] is dec.factors[1]
+
+
+# ---------------------------------------------------------------------------
+# qb kind
+# ---------------------------------------------------------------------------
+
+def test_qb_rank_spec_shapes_orthonormality_and_residual():
+    A, sig = make_test_matrix(192, 64, "fast", seed=5)
+    k = 12
+    Q, B = linalg.decompose(A, linalg.Rank(k), kind="qb", seed=1)
+    assert Q.shape == (192, k) and B.shape == (k, 64)
+    G = np.asarray(Q.T @ Q)
+    assert np.max(np.abs(G - np.eye(k))) < 5e-5
+    err = float(jnp.linalg.norm(A - Q @ B) / jnp.linalg.norm(A))
+    from repro.core import truncation_error
+
+    assert err <= 1.1 * float(truncation_error(sig, k)) + 1e-6
+
+
+def test_qb_tolerance_meets_residual():
+    A, _ = make_test_matrix(192, 64, "sharp", seed=6)
+    dec = linalg.decompose(A, linalg.Tolerance(1e-2, panel=16), kind="qb", seed=2)
+    Q, B = dec
+    err = float(jnp.linalg.norm(A - Q @ B) / jnp.linalg.norm(A))
+    assert err <= 1e-2 and Q.shape[1] == dec.rank
+
+
+# ---------------------------------------------------------------------------
+# lu kind: A[pr][:, pc] ~= L U on dense and host-streamed sources
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("source", ["dense", "host"])
+def test_lu_reconstructs(source):
+    A_dev, _ = make_test_matrix(160, 64, "sharp", seed=7)
+    a = np.asarray(A_dev) if source == "host" else A_dev
+    if source == "host":
+        a = linalg.HostOp(np.asarray(A_dev), block_rows=48)
+    dec = linalg.decompose(a, linalg.Tolerance(1e-2, panel=16), kind="lu", seed=3)
+    pr, L, U, pc = dec
+    r = dec.rank
+    assert L.shape == (160, r) and U.shape == (r, 64)
+    # structure: L lower-trapezoidal, U unit-upper-trapezoidal
+    np.testing.assert_allclose(np.triu(np.asarray(L), 1), 0.0, atol=1e-6)
+    np.testing.assert_allclose(np.tril(np.asarray(U), -1), 0.0, atol=1e-6)
+    np.testing.assert_allclose(np.diagonal(np.asarray(U)), 1.0, atol=1e-5)
+    R = np.asarray(A_dev)[np.asarray(pr)][:, np.asarray(pc)] - np.asarray(L @ U)
+    err = np.linalg.norm(R) / np.linalg.norm(np.asarray(A_dev))
+    assert err <= 1e-2, err
+
+
+def test_lu_fixed_rank():
+    A, sig = make_test_matrix(128, 48, "fast", seed=8)
+    k = 10
+    pr, L, U, pc = linalg.decompose(A, linalg.Rank(k), kind="lu", seed=1)
+    assert L.shape == (128, k) and U.shape == (k, 48)
+    R = np.asarray(A)[np.asarray(pr)][:, np.asarray(pc)] - np.asarray(L @ U)
+    from repro.core import truncation_error
+
+    err = np.linalg.norm(R) / np.linalg.norm(np.asarray(A))
+    assert err <= 1.5 * float(truncation_error(sig, k)) + 1e-5
+
+
+# ---------------------------------------------------------------------------
+# eigh kind (Nystrom, PSD sources) on dense and host-streamed sources
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("source", ["dense", "host"])
+def test_eigh_reconstructs_psd(source):
+    A, sig = _psd(96, "sharp", seed=9)
+    a = linalg.HostOp(np.asarray(A), block_rows=32) if source == "host" else A
+    dec = linalg.decompose(a, linalg.Tolerance(1e-2, panel=16), kind="eigh", seed=4)
+    w, V = dec
+    assert w.shape == (dec.rank,) and V.shape == (96, dec.rank)
+    # eigenvalues descend and match the known spectrum
+    assert np.all(np.diff(np.asarray(w)) <= 1e-6)
+    np.testing.assert_allclose(np.asarray(w[:8]), np.asarray(sig[:8]), rtol=5e-3)
+    rec = (V * w[None, :]) @ V.T
+    err = float(jnp.linalg.norm(A - rec) / jnp.linalg.norm(A))
+    assert err <= 1.5e-2, err
+
+
+def test_eigh_fixed_rank():
+    A, sig = _psd(64, "fast", seed=10)
+    w, V = linalg.decompose(A, linalg.Rank(6), kind="eigh", seed=2)
+    assert w.shape == (6,) and V.shape == (64, 6)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(sig[:6]), rtol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# pca kind / energy-fraction PCA
+# ---------------------------------------------------------------------------
+
+def test_pca_energy_matches_exact_variance_fraction():
+    from repro.core.pca import pca_exact
+
+    X = make_test_matrix(200, 40, "fast", seed=11)[0] + 1.0
+    p = 0.98
+    res = linalg.pca(X, linalg.Energy(p, panel=4), seed=0)
+    exact = pca_exact(X, 40)
+    total = float(jnp.sum(exact.singular_values**2))
+    captured = float(jnp.sum(res.singular_values**2))
+    assert captured / total >= p - 1e-4
+    # oracle rank from the exact spectrum
+    e = np.cumsum(np.asarray(exact.singular_values, np.float64) ** 2)
+    oracle = int(np.nonzero(e >= p * e[-1])[0][0]) + 1
+    assert oracle <= res.components.shape[0] <= oracle + 4
+    np.testing.assert_allclose(np.asarray(res.mean), np.asarray(exact.mean),
+                               atol=1e-5)
+
+
+def test_core_pca_accepts_specs():
+    from repro.core import pca as pca_mod
+
+    X = make_test_matrix(160, 32, "fast", seed=12)[0] + 0.5
+    res = pca_mod.pca(X, linalg.Energy(0.95, panel=4))
+    assert res.components.shape[1] == 32 and res.components.shape[0] < 32
+
+
+def test_registry_is_extensible():
+    """Third-party kinds: register, plan, execute, unregister."""
+    from repro.linalg import registry
+
+    def _execute_norm(op, spec, pl, seed):
+        qb = registry._qb_core(op, spec, pl, seed)
+        return (jnp.sqrt(jnp.asarray(qb.norm_sq - qb.remaining_sq)),), \
+            qb.rank, qb.rank_history, qb.err_history
+
+    entry = registry.DecompositionKind("lowrank_norm", _execute_norm,
+                                       description="||QB||_F")
+    registry.register(entry)
+    try:
+        assert "lowrank_norm" in linalg.kinds()
+        A, _ = make_test_matrix(96, 32, "fast", seed=13)
+        dec = linalg.decompose(A, linalg.Tolerance(0.05, panel=8),
+                               kind="lowrank_norm", seed=1)
+        want = float(jnp.linalg.norm(A))
+        assert abs(float(dec.factors[0]) - want) / want < 5e-3
+    finally:
+        registry._REGISTRY.pop("lowrank_norm", None)
+
+
+# ---------------------------------------------------------------------------
+# serve/lowrank: accuracy-first factorization
+# ---------------------------------------------------------------------------
+
+def test_factorize_params_tol_mode():
+    from repro.serve.lowrank import dense_equivalent, factorize_params
+
+    params = {
+        "blk": {
+            "w_up": np.asarray(make_test_matrix(128, 96, "fast", seed=14)[0]),
+            "w_gate": np.asarray(make_test_matrix(256, 192, "sharp", seed=15)[0]),
+            "other": np.ones((128, 96), np.float32),  # not a target key
+        }
+    }
+    params = jax.tree.map(jnp.asarray, params)
+    fact, report = factorize_params(params, tol=0.02)
+    assert set(report) == {"blk/w_up", "blk/w_gate"}
+    assert all(v <= 0.02 for v in report.values()), report
+    # different spectra -> different adaptive ranks
+    r_up = fact["blk"]["w_up"]["lr_a"].shape[1]
+    r_gate = fact["blk"]["w_gate"]["lr_a"].shape[1]
+    assert r_up != r_gate
+    dense = dense_equivalent(fact)
+    assert dense["blk"]["other"].shape == (128, 96)
+    with pytest.raises(ValueError, match="exactly one"):
+        factorize_params(params)
+    with pytest.raises(ValueError, match="exactly one"):
+        factorize_params(params, rank=8, tol=0.1)
+
+
+def test_factorize_params_tol_mode_stacked_meets_worst_slice():
+    """Stacked leaves: the slice-0 probe can undershoot units with slower
+    spectral decay — the vmapped pass must escalate the stack-wide rank
+    until the WORST slice meets the tolerance, and report that worst
+    error."""
+    from repro.serve.lowrank import factorize_params
+
+    # slice 0 decays fast (small probe rank); slice 1 is sharp (needs more)
+    W = jnp.stack([
+        make_test_matrix(192, 160, "fast", seed=20)[0],
+        make_test_matrix(192, 160, "sharp", seed=21)[0],
+    ])
+    params = {"w_o": W}
+    tol = 0.05
+    fact, report = factorize_params(params, tol=tol)
+    assert report["w_o"] <= tol, report
+    A, B = fact["w_o"]["lr_a"], fact["w_o"]["lr_b"]
+    for i in range(2):
+        err = float(jnp.linalg.norm(W[i] - A[i] @ B[i]) / jnp.linalg.norm(W[i]))
+        assert err <= tol, (i, err)

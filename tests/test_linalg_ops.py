@@ -66,8 +66,11 @@ def test_as_linop_coercions():
     assert isinstance(linalg.as_linop(jnp.zeros((2, 4, 3))), linalg.StackedOp)
     op = linalg.DenseOp(jnp.zeros((4, 3)))
     assert linalg.as_linop(op) is op
-    with pytest.raises(TypeError):
+    # clear facade-level errors: bad rank -> ValueError, non-array -> TypeError
+    with pytest.raises(ValueError, match="2-D .* or 3-D"):
         linalg.as_linop(jnp.zeros((4,)))
+    with pytest.raises(TypeError, match="no .ndim"):
+        linalg.as_linop(object())
 
 
 # ---------------------------------------------------------------------------

@@ -73,3 +73,66 @@ def test_shim_deprecation_is_an_error_outside_this_marker():
     A, _ = make_test_matrix(32, 16, "fast", seed=4)
     with pytest.raises(DeprecationWarning):
         randomized_svd(A, 4)
+
+
+# ---------------------------------------------------------------------------
+# Pre-facade aliased names from blocked.py / distributed.py: downstream code
+# imported these directly, so they must stay bound to the renamed functions.
+# ---------------------------------------------------------------------------
+
+def test_blocked_aliases_are_the_renamed_functions():
+    from repro.core import blocked
+
+    assert blocked.blocked_randomized_svd is blocked.svd_streamed
+    assert blocked.blocked_randomized_eigvals is blocked.eigvals_streamed
+    assert blocked.batched_randomized_svd is blocked.svd_batched
+    # and they re-export through the repro.core namespace
+    from repro.core import (batched_randomized_svd,
+                            blocked_randomized_eigvals, blocked_randomized_svd)
+
+    assert blocked_randomized_svd is blocked.svd_streamed
+    assert blocked_randomized_eigvals is blocked.eigvals_streamed
+    assert batched_randomized_svd is blocked.svd_batched
+
+
+def test_distributed_alias_is_the_renamed_function():
+    from repro.core import distributed
+
+    assert distributed.distributed_randomized_svd is distributed.svd_sharded
+
+
+def test_blocked_alias_matches_facade_streamed_path():
+    """The alias executes the SAME numerics the facade's streamed plan runs:
+    bit-identical factors at fixed seed."""
+    from repro.core.blocked import blocked_randomized_svd
+
+    A_host = np.asarray(make_test_matrix(160, 48, "fast", seed=6)[0])
+    cfg = RSVDConfig.streaming(block_rows=64)
+    U0, S0, Vt0 = blocked_randomized_svd(A_host, 6, cfg, seed=3)
+    U1, S1, Vt1 = linalg.svd(linalg.HostOp(A_host, block_rows=64), 6,
+                             overrides=cfg, seed=3)
+    np.testing.assert_array_equal(np.asarray(U0), np.asarray(U1))
+    np.testing.assert_array_equal(np.asarray(S0), np.asarray(S1))
+    np.testing.assert_array_equal(np.asarray(Vt0), np.asarray(Vt1))
+
+
+def test_batched_alias_matches_facade_batched_path():
+    from repro.core.blocked import batched_randomized_svd
+
+    A = jnp.stack([make_test_matrix(48, 24, "fast", seed=7 + i)[0] for i in range(2)])
+    U0, S0, Vt0 = batched_randomized_svd(A, 4, RSVDConfig(), seed=2)
+    U1, S1, Vt1 = linalg.svd(linalg.StackedOp(A), 4, overrides=RSVDConfig(), seed=2)
+    np.testing.assert_array_equal(np.asarray(U0), np.asarray(U1))
+    np.testing.assert_array_equal(np.asarray(S0), np.asarray(S1))
+    np.testing.assert_array_equal(np.asarray(Vt0), np.asarray(Vt1))
+
+
+def test_blocked_eigvals_alias_runs():
+    from repro.core.blocked import blocked_randomized_eigvals
+
+    A_host = np.asarray(make_test_matrix(96, 32, "fast", seed=9)[0])
+    S = blocked_randomized_eigvals(A_host, 5, RSVDConfig.streaming(block_rows=32),
+                                   seed=1)
+    S_ref = linalg.eigvals(linalg.HostOp(A_host, block_rows=32), 5,
+                           overrides=RSVDConfig.streaming(block_rows=32), seed=1)
+    np.testing.assert_array_equal(np.asarray(S), np.asarray(S_ref))
