@@ -32,7 +32,13 @@ their streaming residency.
 
 Everything is phrased through the LinOp protocol (matmat / rmatmat /
 row_panels) — this module deliberately imports nothing from repro.linalg,
-the operators arrive duck-typed.
+the operators arrive duck-typed.  Out-of-core overlap rides that protocol:
+host-resident sources stream their matmat/rmatmat (and the ||A||_F^2 walk
+below) through `prefetch_panels`, so the growth loop's every touch of A
+double-buffers host->device transfer against compute at the ambient
+`pipeline.default_depth` — the executing plan's `pipeline_depth` — and a
+mid-stream early stop (tolerance met) just abandons the in-flight prefetch.
+The per-panel deflation update is a donated jitted step (`_deflate_step`).
 
 Precision floor: the estimator subtracts O(norm)-sized fp32 sums, so it
 cannot resolve relative residuals much below ~sqrt(eps_f32) ≈ 3e-4 (f64
@@ -46,6 +52,7 @@ under a floor-adjacent tolerance.
 """
 from __future__ import annotations
 
+import functools
 import math
 from dataclasses import dataclass
 from typing import Optional, Tuple
@@ -91,10 +98,19 @@ def fro_norm_sq(op, block_rows: Optional[int] = None) -> float:
     temporaries stay panel-sized).  Panels are summed in their own (>= fp32)
     precision — an f64 source keeps the f64 estimator floor — and ACROSS
     panels the accumulation is host f64, keeping the floor at the per-panel
-    roundoff rather than growing with the panel count."""
+    roundoff rather than growing with the panel count.
+
+    The walk is prefetched when the source offers it (LinOp sources do:
+    `prefetch_panels` overlaps panel i+1's host->device copy with panel i's
+    square-and-sum; the ambient `pipeline.default_depth` scope — set by the
+    executing plan — picks the depth) — the float(...) sync per panel would
+    otherwise stall the link, making this transfer-bound pass the worst
+    serialization in the adaptive path."""
     b = block_rows or getattr(op, "block_rows", None) or DEFAULT_NORM_PANEL_ROWS
+    prefetch = getattr(op, "prefetch_panels", None)
+    panels = prefetch(b) if prefetch is not None else op.row_panels(b)
     total = 0.0
-    for panel in op.row_panels(b):
+    for panel in panels:
         P = panel.astype(jnp.promote_types(panel.dtype, jnp.float32))
         total += float(jnp.sum(P * P))
     return total
@@ -121,11 +137,21 @@ def _panel_sketch(op, b: int, seed_p, kind: str, fused: bool, fdtype) -> jax.Arr
     return op.matmat(omega)
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _deflate_step(Y: jax.Array, Q: jax.Array) -> jax.Array:
+    """Y - Q (Qᵀ Y) with Y's buffer donated: the growth loop re-deflates
+    after every touch of A, and every call rebinds Y — donation reuses the
+    m x b panel buffer instead of allocating a fresh one per projection
+    (the launch/dryrun.py donation pattern; kept out of shard_map bodies,
+    see core/blocked.py)."""
+    return Y - Q @ (Q.T @ Y)
+
+
 def _deflate(Y: jax.Array, Q: Optional[jax.Array]) -> jax.Array:
     """Project the accumulated basis out of Y (no-op before the first panel)."""
     if Q is None:
         return Y
-    return Y - Q @ (Q.T @ Y)
+    return _deflate_step(Y, Q)
 
 
 def _overlap_tol(fdtype) -> float:

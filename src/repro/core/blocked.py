@@ -37,6 +37,14 @@ Dispatch now lives in the execution planner (`repro.linalg.plan`): HostOp /
 `svd_batched`; the deprecated `core.rsvd.randomized_svd` shim routes here
 through the same planner.  See DESIGN.md §"Blocked & batched execution" and
 §"API: operators and plans".
+
+Out-of-core transfers are OVERLAPPED: every pass over A's panels goes
+through the prefetch pipeline (linalg/pipeline.py — the plan's
+`pipeline_depth`, double-buffered by default for host numpy sources), and
+the per-panel accumulator updates (Gram, Z, B, streamed-sketch Y) are
+donated jitted steps so each accumulator occupies ONE device buffer for the
+whole pass.  Neither changes a single arithmetic operation — results stay
+bit-identical to the synchronous, undonated walk (DESIGN.md §Pipeline).
 """
 from __future__ import annotations
 
@@ -54,15 +62,76 @@ from repro.core.rsvd import RSVDConfig, _rsvd_body, _small_svd
 
 
 def _panel_bounds(m: int, b: int) -> List[Tuple[int, int]]:
-    """[(lo, hi), ...] covering [0, m) in strides of b (last panel ragged)."""
-    if b <= 0:
-        raise ValueError(f"panel size must be positive, got {b}")
-    return [(lo, min(lo + b, m)) for lo in range(0, m, b)]
+    """[(lo, hi), ...] covering [0, m) in strides of b (last panel ragged).
+    One source of truth — linalg/pipeline.py — shared with the staging ring
+    and the bench, so panel coverage can never desynchronize."""
+    from repro.linalg.pipeline import panel_bounds  # lazy: core stays cycle-free
+
+    return panel_bounds(m, b)
 
 
 def _device(panel) -> jax.Array:
     """Move one panel to device (no-op for arrays already there)."""
     return jnp.asarray(panel)
+
+
+def _panel_stream(A, bounds, depth):
+    """Factory of device-panel passes over A's row slices, prefetched.
+
+    Each call starts one pass; with resolved depth > 1 the host->device copy
+    of panel i+1 is issued while panel i computes (linalg/pipeline.py) —
+    host numpy sources take the staged ring, device arrays degrade to the
+    plain lazy-slice walk.  Values and order are bit-identical to the
+    synchronous walk either way."""
+    from repro.linalg import pipeline as pipe  # lazy: core stays cycle-free
+
+    host = isinstance(A, np.ndarray)
+    d = pipe.resolve_depth(depth, host_resident=host)
+    if host and d > 1:
+        return lambda: pipe.stream_host_panels(A, bounds, d)
+    return lambda: pipe.lookahead((_device(A[lo:hi]) for lo, hi in bounds), d)
+
+
+# ---------------------------------------------------------------------------
+# Donated per-panel update steps: the accumulator carries (Gram, Z, B, the
+# streamed-sketch Y) are rebound every panel — donate_argnums lets XLA write
+# the update into the SAME HBM buffer instead of reallocating per panel
+# (the launch/dryrun.py train/serve-step pattern; like there, donation stays
+# OUT of shard_map bodies — donate_argnums + manual-axis shard_map trips the
+# XLA:CPU "Invalid binary instruction opcode copy" crash, so the distributed
+# path in core/distributed.py keeps its undonated psum form).
+# tests/test_pipeline.py asserts the input/output aliasing on compiled HLO.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _add_donated(acc, x):
+    """acc + x, with acc's buffer reused for the result."""
+    return acc + x
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _accum_xty(acc, X, Y):
+    """acc + Xᵀ Y — the power-loop Z and projection-B panel updates."""
+    return acc + X.T @ Y
+
+
+@functools.partial(jax.jit, donate_argnums=(0,), static_argnames=("backend",))
+def _gram_accum(G, Yp, *, backend):
+    """G + YpᵀYp through the named kernel backend (static: the backend is a
+    trace-time switch, so it must key the jit cache — the ambient context
+    at call time may differ from the one a cached trace was built under)."""
+    with qr_mod.kernel_backend(backend):
+        return G + qr_mod.gram(Yp)
+
+
+def _accum_panels(terms):
+    """Left-associated sum of an iterable of equally-shaped terms, donating
+    the running accumulator (same order as functools.reduce(jnp.add, ...),
+    so results are bit-identical to the undonated form)."""
+    acc = None
+    for t in terms:
+        acc = t if acc is None else _add_donated(acc, t)
+    return acc
 
 
 # ---------------------------------------------------------------------------
@@ -93,14 +162,14 @@ def streamed_sketch(
         if fused:
             from repro.kernels.ops import sketch_matmul
 
-            Y = Y + sketch_matmul(
+            Y = _add_donated(Y, sketch_matmul(
                 panel, s, seed, kind=kind, out_dtype=jnp.float32, row_offset=lo
-            )
+            ))
         else:
             omega = sketch_mod.sketch_matrix(
                 hi - lo, s, seed, kind, dtype=jnp.float32, row_offset=lo
             )
-            Y = Y + panel.astype(jnp.float32) @ omega
+            Y = _add_donated(Y, panel.astype(jnp.float32) @ omega)
     return Y.astype(jnp.asarray(A[:1, :1]).dtype)
 
 
@@ -118,7 +187,10 @@ def _blocked_cholesky_qr(Y_panels: Sequence[jax.Array], G: jax.Array | None = No
     first pass skips re-reading every panel."""
     dtype = Y_panels[0].dtype
     if G is None:
-        G = functools.reduce(jnp.add, [qr_mod.gram(Yp) for Yp in Y_panels])
+        backend = qr_mod.active_kernel_backend()
+        G = None
+        for Yp in Y_panels:
+            G = qr_mod.gram(Yp) if G is None else _gram_accum(G, Yp, backend=backend)
     # Factor and solve at >= fp32 (LAPACK has no bf16 Cholesky/TRSM), then
     # cast Q back so the panel dtype — and the assembled U — is preserved.
     fdtype = jnp.promote_types(dtype, jnp.float32)
@@ -147,12 +219,17 @@ def svd_streamed(
     cfg: RSVDConfig = RSVDConfig(),
     seed: int = 0,
     block_rows: int | None = None,
+    pipeline_depth: int | None = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Rank-k randomized SVD of A streamed in row panels of the tall side.
 
     Accepts a jax array OR a host numpy array (the out-of-core case: only
     `block_rows x n` of A is device-resident at a time; the s-column panels
     Y/Q — m x s in total — stay on device, see the module docstring).
+    Host panels move through the prefetch pipeline: at `pipeline_depth`
+    (arg > cfg.pipeline_depth > auto: double-buffered for numpy sources)
+    panel i+1 transfers while panel i computes, every pass over A, with
+    results bit-identical to the depth-1 synchronous walk.
     Returns (U, S, Vt) with the same contract as `linalg.svd`; U is
     assembled from per-panel GEMMs, so for a truly out-of-core caller the
     per-panel `Q_p @ U_b` products could be written back to host storage
@@ -162,7 +239,8 @@ def svd_streamed(
     if m < n:
         # Orientation swap: stream the taller side of A^T.  For numpy inputs
         # .T is a view — no host copy is made.
-        V, S, Ut = svd_streamed(A.T, k, cfg, seed=seed, block_rows=block_rows)
+        V, S, Ut = svd_streamed(A.T, k, cfg, seed=seed, block_rows=block_rows,
+                                pipeline_depth=pipeline_depth)
         return Ut.T, S, V.T
 
     b = block_rows or cfg.block_rows
@@ -170,7 +248,8 @@ def svd_streamed(
         raise ValueError("svd_streamed needs block_rows (arg or cfg)")
     s = min(k + cfg.oversample, n)
     bounds = _panel_bounds(m, b)
-    panels = lambda: (_device(A[lo:hi]) for lo, hi in bounds)
+    depth = pipeline_depth if pipeline_depth is not None else cfg.pipeline_depth
+    panels = _panel_stream(A, bounds, depth)
 
     with qr_mod.kernel_backend(cfg.kernel_backend):
         return _blocked_body(panels, k, s, cfg, seed, _device(A[:1, :1]).dtype)
@@ -192,7 +271,7 @@ def _blocked_body(panels, k: int, s: int, cfg: RSVDConfig, seed, dtype):
 
         pairs = [sketch_gram(Ap, s, seed, kind=cfg.sketch_kind) for Ap in panels()]
         Y = [y for y, _ in pairs]
-        G1 = functools.reduce(jnp.add, [g for _, g in pairs])
+        G1 = _accum_panels(g for _, g in pairs)
     else:
         Y = [
             streamed_sketch(
@@ -203,18 +282,21 @@ def _blocked_body(panels, k: int, s: int, cfg: RSVDConfig, seed, dtype):
             for Ap in panels()
         ]
 
-    # Step 2: power iteration through the n x s accumulator Z.
+    # Step 2: power iteration through the n x s accumulator Z.  The Z / B
+    # accumulators below are donated per panel (_accum_xty): one n x s (or
+    # s x n) HBM buffer carries the whole pass instead of a fresh
+    # allocation per panel, and the summation order is unchanged.
     for _ in range(cfg.power_iters):
         if cfg.power_scheme == "plain":
-            Z = functools.reduce(
-                jnp.add, [Ap.T @ Yp for Ap, Yp in zip(panels(), Y)]
-            )
+            Z = None
+            for Ap, Yp in zip(panels(), Y):
+                Z = Ap.T @ Yp if Z is None else _accum_xty(Z, Ap, Yp)
             Y = [Ap @ Z for Ap in panels()]
         else:
             Q, _ = _blocked_cholesky_qr2(Y, G1)
-            Z = functools.reduce(
-                jnp.add, [Ap.T @ Qp for Ap, Qp in zip(panels(), Q)]
-            )
+            Z = None
+            for Ap, Qp in zip(panels(), Q):
+                Z = Ap.T @ Qp if Z is None else _accum_xty(Z, Ap, Qp)
             Qz = qr_mod.orthonormalize(Z, cfg.qr_method)  # n x s, fits
             Y = [Ap @ Qz for Ap in panels()]
         G1 = None  # Y was replaced; the sketch-pass Gram no longer matches
@@ -222,8 +304,10 @@ def _blocked_body(panels, k: int, s: int, cfg: RSVDConfig, seed, dtype):
     # Step 3: orthonormal range basis, panel-split.
     Q, _ = _blocked_cholesky_qr2(Y, G1)
 
-    # Step 4: B = Q^T A through the s x n accumulator.
-    B = functools.reduce(jnp.add, [Qp.T @ Ap for Ap, Qp in zip(panels(), Q)])
+    # Step 4: B = Q^T A through the s x n accumulator (donated per panel).
+    B = None
+    for Ap, Qp in zip(panels(), Q):
+        B = Qp.T @ Ap if B is None else _accum_xty(B, Qp, Ap)
 
     # Steps 5-6: small SVD (s x n, in-memory) and per-panel U assembly.
     U_b, S, Vt = _small_svd(B, cfg.small_svd)
@@ -233,10 +317,11 @@ def _blocked_body(panels, k: int, s: int, cfg: RSVDConfig, seed, dtype):
 
 def eigvals_streamed(
     A, k: int, cfg: RSVDConfig = RSVDConfig(), seed: int = 0,
-    block_rows: int | None = None,
+    block_rows: int | None = None, pipeline_depth: int | None = None,
 ) -> jax.Array:
     """k largest singular values, streaming — Sigma-only mode of the above."""
-    _, S, _ = svd_streamed(A, k, cfg, seed=seed, block_rows=block_rows)
+    _, S, _ = svd_streamed(A, k, cfg, seed=seed, block_rows=block_rows,
+                           pipeline_depth=pipeline_depth)
     return S
 
 
@@ -277,8 +362,11 @@ def svd_batched(
     if m < n:
         V, S, Ut = svd_batched(jnp.swapaxes(A, -1, -2), k, cfg, seed=seed)
         return jnp.swapaxes(Ut, -1, -2), S, jnp.swapaxes(V, -1, -2)
-    if cfg.fused_power or cfg.block_rows:
-        cfg = dataclasses.replace(cfg, fused_power=False, block_rows=None)
+    if cfg.fused_power or cfg.block_rows or cfg.pipeline_depth:
+        # pipeline_depth is also normalized away: it is meaningless under
+        # vmap and would only fragment the jit cache key
+        cfg = dataclasses.replace(cfg, fused_power=False, block_rows=None,
+                                  pipeline_depth=None)
     seeds = jnp.uint32(seed) + jnp.arange(A.shape[0], dtype=jnp.uint32)
     return _batched_tall(A, seeds, k, cfg)
 

@@ -77,6 +77,11 @@ class RSVDConfig:
     block_rows: int | None = None  # panel-stream the tall dimension
     block_cols: int | None = None  # panel-stream the sketch reduction
     batched: bool = False          # vmap over a leading batch dimension
+    pipeline_depth: int | None = None  # streamed-panel prefetch depth (None =
+    #                               auto: double-buffered for host sources,
+    #                               1 — fully synchronous — otherwise; the
+    #                               planner stamps the effective value on
+    #                               every streamed/adaptive ExecutionPlan)
 
     @staticmethod
     def faithful() -> "RSVDConfig":
@@ -100,12 +105,16 @@ class RSVDConfig:
     def streaming(block_rows: int = 4096) -> "RSVDConfig":
         """Out-of-core configuration: CholeskyQR2 accumulation over row
         panels (Householder QR of a panel-split Y is not expressible as a
-        panel-local op; the Gram trick is — see core/blocked.py)."""
+        panel-local op; the Gram trick is — see core/blocked.py), with the
+        panel prefetch DOUBLE-BUFFERED — panel i+1's host->device copy
+        overlaps panel i's compute (linalg/pipeline.py; the planner still
+        clamps the depth to what the HBM budget and panel count allow)."""
         return RSVDConfig(
             power_scheme="stabilized",
             qr_method="cqr2",
             small_svd="lapack",
             block_rows=block_rows,
+            pipeline_depth=2,
         )
 
 

@@ -25,7 +25,9 @@ from repro.linalg.operators import (  # noqa: F401
     as_linop,
     column_means,
     deflated,
+    prefetch_panels,
 )
+from repro.linalg import pipeline  # noqa: F401
 from repro.linalg.planner import Budget, ExecutionPlan  # noqa: F401
 from repro.linalg.registry import DecompositionKind, kinds, register  # noqa: F401
 from repro.linalg.spec import Energy, Rank, Spec, Tolerance, as_spec  # noqa: F401

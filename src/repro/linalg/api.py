@@ -34,9 +34,10 @@ import jax.numpy as jnp
 from repro.core import qr as qr_mod
 from repro.core import sketch as sketch_mod
 from repro.core.rsvd import RSVDConfig
+from repro.linalg import pipeline as pipeline_mod
 from repro.linalg import planner as planner_mod
 from repro.linalg import registry as registry_mod
-from repro.linalg.operators import LinOp, ShardedOp, as_linop
+from repro.linalg.operators import LinOp, ShardedOp, as_linop, prefetch_panels
 from repro.linalg.planner import Budget, ExecutionPlan
 from repro.linalg.spec import Rank, Spec, as_spec
 
@@ -200,7 +201,10 @@ def _execute_svd_plan(op: LinOp, k: int, pl: ExecutionPlan, seed) -> SVDResult:
         mesh, axis = op.sharding
         return distributed.svd_sharded(op.array, k, mesh, axis, cfg, seed=seed)
     if pl.path == "matfree":
-        return _matfree_svd(op, k, pl, seed)
+        # host-rooted composed sources stream underneath matmat/rmatmat;
+        # the ambient scope hands them the plan's prefetch depth
+        with pipeline_mod.default_depth(pl.pipeline_depth):
+            return _matfree_svd(op, k, pl, seed)
     raise ValueError(f"unknown execution path: {pl.path}")
 
 
@@ -230,7 +234,8 @@ def eigvals(
 
         return blocked.eigvals_streamed(op.array, k, cfg, seed=seed)
     if pl.path == "matfree":
-        return _matfree_svd(op, k, pl, seed, want_uv=False)
+        with pipeline_mod.default_depth(pl.pipeline_depth):
+            return _matfree_svd(op, k, pl, seed, want_uv=False)
     # batched / sharded: Sigma rides the factor solve
     return svd(op, k, plan=pl, seed=seed)[1]
 
@@ -381,7 +386,9 @@ def residual(a, result: SVDResult, block_rows: Optional[int] = None) -> jax.Arra
     den = jnp.zeros((), jnp.float32)
     lo = 0
     scaled_vt = (S[:, None] * Vt).astype(jnp.float32)          # (k, n), skinny
-    for panel in op.row_panels(block_rows):
+    # prefetched walk: host panel i+1 transfers while panel i's residual
+    # GEMM runs — same panels, same order, same accumulation
+    for panel in prefetch_panels(op, block_rows):
         hi = lo + panel.shape[0]
         P = panel.astype(jnp.float32)
         R = P - U[lo:hi].astype(jnp.float32) @ scaled_vt

@@ -19,6 +19,10 @@ Composed operators (the new workload class — nothing is materialized):
   ScaledOp          alpha * A
   CenteredOp        A - 1 muᵀ    (PCA without forming the centered matrix)
   LowRankUpdateOp   A + U Vᵀ     (deflation: A - U_k S_k V_kᵀ as an operator)
+
+`prefetch_panels(op, block_rows, depth)` is the overlapped edition of
+`row_panels`: host->device movement of panel i+1 is issued while panel i
+computes (linalg/pipeline.py), bit-identical values in the same order.
 """
 from __future__ import annotations
 
@@ -27,6 +31,8 @@ from typing import Iterator, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.linalg import pipeline as pipeline_mod
 
 
 class LinOp:
@@ -38,6 +44,9 @@ class LinOp:
     sharding: Optional[Tuple[jax.sharding.Mesh, str]] = None
     #: preferred row-panel height for streamed execution, else None.
     block_rows: Optional[int] = None
+    #: preferred prefetch depth for panel walks, else None (auto: the
+    #: pipeline default for host-resident sources, 1 otherwise).
+    pipeline_depth: Optional[int] = None
 
     @property
     def shape(self) -> Tuple[int, ...]:
@@ -70,6 +79,14 @@ class LinOp:
             # A[lo:hi] = (E_panelᵀ A)ᵀ through rmatmat — panel-local only.
             e = jnp.zeros((m, hi - lo), eye_dtype).at[jnp.arange(lo, hi), jnp.arange(hi - lo)].set(1.0)
             yield self.rmatmat(e).T.astype(self.dtype)
+
+    def prefetch_panels(
+        self, block_rows: Optional[int] = None, depth: Optional[int] = None
+    ) -> Iterator[jax.Array]:
+        """`row_panels` with depth-deep prefetch — see module-level
+        `prefetch_panels` (this method exists so duck-typed consumers like
+        core/adaptive.py can reach the pipeline without importing it)."""
+        return prefetch_panels(self, block_rows, depth)
 
     @property
     def T(self) -> "LinOp":
@@ -107,11 +124,13 @@ class _TransposedOp(LinOp):
 class DenseOp(LinOp):
     """Device-resident 2-D array (the paper's in-core case)."""
 
-    def __init__(self, array, block_rows: Optional[int] = None):
+    def __init__(self, array, block_rows: Optional[int] = None,
+                 pipeline_depth: Optional[int] = None):
         if getattr(array, "ndim", None) != 2:
             raise ValueError(f"DenseOp expects a 2-D array, got shape {getattr(array, 'shape', None)}")
         self.array = array
         self.block_rows = block_rows
+        self.pipeline_depth = pipeline_depth
 
     @property
     def shape(self):
@@ -130,8 +149,14 @@ class DenseOp(LinOp):
     def row_panels(self, block_rows: Optional[int] = None):
         m = self.shape[0]
         b = block_rows or self.block_rows or m
+        device_resident = isinstance(self.array, jax.Array)
         for lo in range(0, m, b):
-            yield jnp.asarray(self.array[lo : min(lo + b, m)])
+            panel = self.array[lo : min(lo + b, m)]
+            # Device-resident arrays slice lazily — re-wrapping the slice in
+            # jnp.asarray forced a per-panel copy of data that never left
+            # HBM.  Host (numpy) slices keep the explicit host->device move
+            # (the HostOp contract; prefetch_panels overlaps it).
+            yield panel if device_resident else jnp.asarray(panel)
 
 
 class HostOp(DenseOp):
@@ -144,19 +169,23 @@ class HostOp(DenseOp):
 
     DEFAULT_BLOCK_ROWS = 4096
 
-    def __init__(self, array, block_rows: Optional[int] = None):
+    def __init__(self, array, block_rows: Optional[int] = None,
+                 pipeline_depth: Optional[int] = None):
         array = np.asarray(array)
-        super().__init__(array, block_rows or self.DEFAULT_BLOCK_ROWS)
+        super().__init__(array, block_rows or self.DEFAULT_BLOCK_ROWS,
+                         pipeline_depth)
 
     def matmat(self, X):
-        parts = [panel @ X for panel in self.row_panels()]
+        # prefetch_panels: panel p+1 transfers while panel p multiplies —
+        # same values, same summation order as the synchronous walk.
+        parts = [panel @ X for panel in self.prefetch_panels()]
         return jnp.concatenate(parts, axis=0)
 
     def rmatmat(self, Y):
         m, _ = self.shape
         out = None
         lo = 0
-        for panel in self.row_panels():
+        for panel in self.prefetch_panels():
             hi = lo + panel.shape[0]
             contrib = panel.T @ Y[lo:hi]
             out = contrib if out is None else out + contrib
@@ -221,7 +250,13 @@ class ShardedOp(LinOp):
 # ---------------------------------------------------------------------------
 
 class ComposedOp(LinOp):
-    """Base for operators derived from another operator."""
+    """Base for operators derived from another operator.
+
+    Subclasses implement `_panel_map(panel, lo, hi)` — the per-panel form of
+    the composition — and get `row_panels` for free; `prefetch_panels`
+    recurses into the BASE, so the host->device transfer under a composed
+    operator is the thing that overlaps, with the panel transform riding the
+    already-prefetched device panel."""
 
     def __init__(self, base: LinOp):
         self.base = as_linop(base)
@@ -232,6 +267,8 @@ class ComposedOp(LinOp):
                 " for per-channel PCA)"
             )
         self.block_rows = self.base.block_rows
+        self.pipeline_depth = self.base.pipeline_depth  # like block_rows: the
+        # base is what streams, so its prefetch preference rides along
 
     @property
     def shape(self):
@@ -240,6 +277,17 @@ class ComposedOp(LinOp):
     @property
     def dtype(self):
         return self.base.dtype
+
+    def _panel_map(self, panel: jax.Array, lo: int, hi: int) -> jax.Array:
+        """The composition applied to base rows [lo, hi) (device-resident)."""
+        raise NotImplementedError
+
+    def row_panels(self, block_rows: Optional[int] = None):
+        lo = 0
+        for panel in self.base.row_panels(block_rows):
+            hi = lo + panel.shape[0]
+            yield self._panel_map(panel, lo, hi)
+            lo = hi
 
 
 class ScaledOp(ComposedOp):
@@ -255,9 +303,8 @@ class ScaledOp(ComposedOp):
     def rmatmat(self, Y):
         return self.alpha * self.base.rmatmat(Y)
 
-    def row_panels(self, block_rows: Optional[int] = None):
-        for panel in self.base.row_panels(block_rows):
-            yield (self.alpha * panel).astype(panel.dtype)
+    def _panel_map(self, panel, lo, hi):
+        return (self.alpha * panel).astype(panel.dtype)
 
 
 class CenteredOp(ComposedOp):
@@ -285,9 +332,8 @@ class CenteredOp(ComposedOp):
         colsum = jnp.sum(Y, axis=0)                    # (s,)
         return self.base.rmatmat(Y) - jnp.outer(self.mu, colsum)
 
-    def row_panels(self, block_rows: Optional[int] = None):
-        for panel in self.base.row_panels(block_rows):
-            yield (panel - self.mu[None, :]).astype(panel.dtype)
+    def _panel_map(self, panel, lo, hi):
+        return (panel - self.mu[None, :]).astype(panel.dtype)
 
 
 class LowRankUpdateOp(ComposedOp):
@@ -314,17 +360,57 @@ class LowRankUpdateOp(ComposedOp):
     def rmatmat(self, Y):
         return self.base.rmatmat(Y) + self.V @ (self.U.T @ Y)
 
-    def row_panels(self, block_rows: Optional[int] = None):
-        lo = 0
-        for panel in self.base.row_panels(block_rows):
-            hi = lo + panel.shape[0]
-            yield (panel + self.U[lo:hi] @ self.V.T).astype(panel.dtype)
-            lo = hi
+    def _panel_map(self, panel, lo, hi):
+        return (panel + self.U[lo:hi] @ self.V.T).astype(panel.dtype)
 
 
 def deflated(base: LinOp, U: jax.Array, S: jax.Array, Vt: jax.Array) -> LowRankUpdateOp:
     """A - U S Vᵀ as an operator (the deflation workload)."""
     return LowRankUpdateOp(base, -(U * S[None, :]), Vt.T)
+
+
+def prefetch_panels(
+    op, block_rows: Optional[int] = None, depth: Optional[int] = None
+) -> Iterator[jax.Array]:
+    """`op.row_panels(block_rows)` with depth-deep prefetch: the production
+    of panel i+1 (host->device copy, lazy slice, composed transform) is
+    issued while the consumer computes on panel i.
+
+    Panel VALUES and order are identical to the synchronous walk — only
+    transfer timing changes — so any row_panels consumer can switch over
+    without a numerics diff (tests/test_pipeline.py pins bit-identity).
+
+    Depth: explicit arg > the `pipeline.default_depth(...)` ambient scope
+    (how an ExecutionPlan's `pipeline_depth` reaches nested walks) > the
+    source's own `pipeline_depth` attribute > auto (DEFAULT_DEPTH for
+    host-resident sources, 1 — plain iteration — otherwise).
+
+    Routing: host numpy sources with plain-slice panels (HostOp) take the
+    staged ring (`pipeline.stream_host_panels`: uniform zero-padded staging
+    buffers, bounded at `depth` in flight); composed operators recurse into
+    their BASE so the transfer underneath is what overlaps; everything else
+    gets the generic `pipeline.lookahead` pull-ahead."""
+    op = as_linop(op)
+    b = block_rows or op.block_rows or op.shape[0]
+    if isinstance(op, ComposedOp):
+        def _mapped():
+            lo = 0
+            for panel in prefetch_panels(op.base, b, depth):
+                hi = lo + panel.shape[0]
+                yield op._panel_map(panel, lo, hi)
+                lo = hi
+        return _mapped()
+    arr = getattr(op, "array", None)
+    host = isinstance(arr, np.ndarray)
+    d = pipeline_mod.resolve_depth(depth, host_resident=host,
+                                   source_default=op.pipeline_depth)
+    # the staged ring replicates DenseOp's plain-slice panels exactly; a
+    # subclass with its own row_panels semantics must keep them
+    if host and d > 1 and type(op).row_panels is DenseOp.row_panels:
+        return pipeline_mod.stream_host_panels(
+            arr, pipeline_mod.panel_bounds(op.shape[0], b), d
+        )
+    return pipeline_mod.lookahead(op.row_panels(b), d)
 
 
 def column_means(op: LinOp) -> jax.Array:
@@ -335,7 +421,7 @@ def column_means(op: LinOp) -> jax.Array:
     m = op.shape[0]
     b = op.block_rows or HostOp.DEFAULT_BLOCK_ROWS
     total = None
-    for panel in op.row_panels(b):
+    for panel in prefetch_panels(op, b):
         contrib = jnp.sum(panel.astype(jnp.promote_types(panel.dtype, jnp.float32)), axis=0)
         total = contrib if total is None else total + contrib
     return (total / m).astype(op.dtype)

@@ -1,0 +1,210 @@
+"""Overlapped out-of-core panel pipeline: double-buffered prefetch.
+
+The streamed/adaptive paths consume A one row panel at a time.  Before this
+module, every panel was moved host->device *synchronously* — the sketch /
+power GEMMs sat idle during the transfer and the transfer engine sat idle
+during the GEMMs, so out-of-core walltime was ``sum(transfer) + sum(compute)``.
+Lu et al. (arXiv:1706.07191) show the out-of-core block rSVD bottleneck is
+exactly this serialization: with the copy of panel *i+1* issued while panel
+*i* computes, walltime drops to ``max(transfer, compute)`` per panel plus a
+fill/drain term (the overlap model in roofline/rsvd_model.py).
+
+Two primitives, composed by `operators.prefetch_panels`:
+
+  stream_host_panels   host (numpy) slices staged through a ring of `depth`
+                       reusable uniform staging buffers (CUDA pinned-buffer
+                       discipline, jax edition).  The tail panel is ZERO-
+                       PADDED so every transfer has the same (block, n)
+                       shape — one transfer program, jit-stable consumers —
+                       and sliced back to its true height on device, so
+                       yielded values are bit-identical to the synchronous
+                       `jnp.asarray(array[lo:hi])`.
+  lookahead            generic depth-deep pull-ahead over any panel
+                       iterator: jax dispatches asynchronously, so *pulling*
+                       panel i+1 (its slice / transfer / per-panel compose)
+                       enqueues its production while the consumer's compute
+                       on panel i is still running.
+
+Only transfer ORDER changes — never arithmetic: each yielded panel holds
+exactly the bytes the synchronous path would have moved, so every consumer
+(core/blocked.py, core/adaptive.py, linalg.residual, HostOp products) stays
+bit-identical at fixed seed, prefetched or not (tests/test_pipeline.py).
+
+Depth resolution: an explicit ``depth`` argument wins; else the ambient
+`default_depth(...)` scope (how the execution planner's ``pipeline_depth``
+reaches duck-typed consumers like core/adaptive.py without threading a
+parameter through every layer); else DEFAULT_DEPTH for host-resident
+sources and 1 (no prefetch — today's behavior) for device-resident ones.
+
+Early stop is free: a consumer that abandons the iterator (adaptive QB
+meeting its tolerance mid-stream) simply drops the generator — in-flight
+transfers complete in the background against staging buffers nobody will
+read again, and no estimator state ever saw the un-consumed panels.
+"""
+from __future__ import annotations
+
+import collections
+import contextlib
+from typing import Iterable, Iterator, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: prefetch depth for host-resident sources when neither the caller nor the
+#: ambient scope says otherwise: classic double buffering (panel i computes
+#: while panel i+1 transfers; deeper rings only help jittery links)
+DEFAULT_DEPTH = 2
+
+_depth_override: Optional[int] = None
+
+
+@contextlib.contextmanager
+def default_depth(depth: Optional[int]):
+    """Ambient prefetch depth for every panel walk in the scope.
+
+    The planner stamps `pipeline_depth` on the ExecutionPlan; executors wrap
+    the solve in this scope so duck-typed panel consumers (core/adaptive.py,
+    HostOp.matmat) honor the plan without a threaded parameter."""
+    global _depth_override
+    prev = _depth_override
+    _depth_override = depth
+    try:
+        yield
+    finally:
+        _depth_override = prev
+
+
+def resolve_depth(depth: Optional[int] = None, host_resident: bool = False,
+                  source_default: Optional[int] = None) -> int:
+    """Explicit depth > ambient scope > source attribute > auto.
+
+    The ambient scope outranks `source_default` (an operator's own
+    `pipeline_depth` attribute) deliberately: the scope is how an
+    ExecutionPlan's budget-clamped depth reaches nested walks, and a
+    source preference must not override what the planner decided fits.
+
+    Auto is DEFAULT_DEPTH for host-resident sources on a REAL accelerator
+    and 1 everywhere else: on the CPU backend "device" memory is host
+    memory — there is no link to overlap, and the staging ring's extra
+    panel copies are pure overhead (measured ~1.6x slower end-to-end), so
+    prefetch there must be an explicit opt-in (testing the machinery)."""
+    if depth:
+        return max(1, int(depth))
+    if _depth_override:
+        return max(1, int(_depth_override))
+    if source_default:
+        return max(1, int(source_default))
+    if host_resident and jax.default_backend() != "cpu":
+        return DEFAULT_DEPTH
+    return 1
+
+
+#: jitted identity copy — a fresh device buffer (non-donated jit inputs are
+#: never aliased to outputs), used to sever CPU zero-copy device_put aliases
+_device_copy = jax.jit(jnp.copy)
+
+
+def panel_bounds(m: int, b: int) -> List[Tuple[int, int]]:
+    """[(lo, hi), ...] covering [0, m) in strides of b (last panel ragged)."""
+    if b <= 0:
+        raise ValueError(f"panel size must be positive, got {b}")
+    return [(lo, min(lo + b, m)) for lo in range(0, m, b)]
+
+
+def stream_host_panels(
+    array,
+    bounds: Sequence[Tuple[int, int]],
+    depth: int,
+) -> Iterator[jax.Array]:
+    """Device panels ``array[lo:hi]`` with `depth`-deep staged prefetch.
+
+    A ring of `depth` reusable host staging buffers, each sized to the
+    LARGEST panel (the tail is zero-padded up to it, so every
+    `jax.device_put` ships the same uniform shape).  When panel *i* is
+    yielded, panels *i+1 .. i+depth-1* are already in flight — jax's async
+    dispatch runs those copies while the consumer computes on panel *i*.
+
+    Slot-reuse safety: before a staging buffer is overwritten for panel
+    *i+depth*, the device array produced from its PREVIOUS occupant
+    (panel *i*) is awaited — by then that transfer finished long ago (the
+    consumer is `depth` panels ahead), so the wait is ~free, but it makes
+    overwriting the source memory of an in-flight DMA impossible.  On the
+    CPU backend `jax.device_put` may ZERO-COPY an aligned host buffer — the
+    "transfer" is permanent aliasing, which no await can fence — so there
+    each staged panel is chased with an explicit on-device copy
+    (`_device_copy`) and the slot wait lands on the copy instead; real
+    accelerators DMA host memory and skip the extra hop.
+
+    Yields are bit-identical to ``jnp.asarray(array[lo:hi])``: the pad rows
+    are sliced back off on device before the consumer ever sees them.
+    """
+    bounds = list(bounds)
+    if not bounds:
+        return
+    depth = max(1, min(int(depth), len(bounds)))
+    if depth == 1:
+        for lo, hi in bounds:
+            yield jnp.asarray(array[lo:hi])
+        return
+    block = max(hi - lo for lo, hi in bounds)
+    n = array.shape[1]
+    ring = [np.empty((block, n), dtype=array.dtype) for _ in range(depth)]
+    in_flight: List[Optional[jax.Array]] = [None] * depth
+
+    # On CPU, device_put of an aligned numpy buffer can alias it outright
+    # (no copy ever happens) — reusing the slot would then rewrite panels a
+    # consumer still holds.  An explicit device-side copy severs the alias;
+    # waiting on the COPY before slot reuse guarantees its read of the
+    # (possibly aliased) staging memory is complete.
+    chase_copy = jax.default_backend() == "cpu"
+
+    def stage(idx: int) -> jax.Array:
+        lo, hi = bounds[idx]
+        rows = hi - lo
+        slot = idx % depth
+        prev = in_flight[slot]
+        if prev is not None:
+            prev.block_until_ready()  # DMA/copy out of this slot must be done
+        buf = ring[slot]
+        buf[:rows] = array[lo:hi]
+        if rows < block:
+            buf[rows:] = 0  # uniform transfer shape, jit-stable
+        dev = jax.device_put(buf)
+        if chase_copy:
+            dev = _device_copy(dev)
+        in_flight[slot] = dev
+        return dev if rows == block else dev[:rows]
+
+    pending: collections.deque = collections.deque()
+    for i in range(depth):
+        pending.append(stage(i))
+    nxt = depth
+    while pending:
+        panel = pending.popleft()
+        if nxt < len(bounds):
+            # issue the NEXT transfer before handing back control, so it
+            # overlaps the consumer's compute on this panel
+            pending.append(stage(nxt))
+            nxt += 1
+        yield panel
+
+
+def lookahead(panels: Iterable, depth: int) -> Iterator:
+    """Pull up to `depth - 1` panels ahead of the consumer.
+
+    The generic prefetch for sources whose panels are PRODUCED rather than
+    copied (device-resident slices, composed per-panel transforms over an
+    already-prefetched base): pulling enqueues the producer's async work,
+    which then overlaps the consumer's compute on earlier panels.  Depth 1
+    degrades to plain iteration — exactly the pre-pipeline behavior."""
+    if depth <= 1:
+        yield from panels
+        return
+    queue: collections.deque = collections.deque()
+    for panel in panels:
+        queue.append(panel)
+        if len(queue) >= depth:
+            yield queue.popleft()
+    while queue:
+        yield queue.popleft()

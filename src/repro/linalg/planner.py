@@ -21,9 +21,11 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.rsvd import RSVDConfig
 from repro.linalg import operators as ops_mod
+from repro.linalg import pipeline as pipeline_mod
 from repro.linalg import spec as spec_mod
 from repro.linalg.operators import LinOp, as_linop
 from repro.linalg.spec import Rank, Spec
@@ -100,6 +102,12 @@ class ExecutionPlan:
     panel: Optional[int] = None                 # adaptive growth-panel width
     rank_schedule: Tuple[int, ...] = ()         # planned cumulative basis sizes
     schedule_hbm_bytes: Tuple[int, ...] = ()    # roofline bytes per growth step
+    # out-of-core pipeline fields (PR 5): how deep the panel prefetch runs
+    # (1 = fully synchronous — the pre-pipeline behavior) and the overlap-
+    # aware walltime prediction (rsvd_model.streamed_walltime_s for streamed
+    # plans, plain HBM-bandwidth time elsewhere).
+    pipeline_depth: int = 1
+    predicted_walltime_s: float = 0.0
 
     def to_config(self) -> RSVDConfig:
         """The thin frozen RSVDConfig view the core numerics execute."""
@@ -116,6 +124,7 @@ class ExecutionPlan:
             block_rows=self.block_rows if self.path == "streamed" else None,
             block_cols=self.block_cols,
             batched=self.path == "batched",
+            pipeline_depth=self.pipeline_depth if self.path == "streamed" else None,
         )
 
     def describe(self) -> str:
@@ -127,6 +136,7 @@ class ExecutionPlan:
             f"kind={self.kind}", f"spec={spec_str}",
             f"qr={self.qr_method}", f"backend={self.kernel_backend}",
             f"fused_sketch={self.fused_sketch}", f"fused_power={self.fused_power}",
+            f"pipeline_depth={self.pipeline_depth}",
         ]
         if self.block_rows:
             bits.append(f"block_rows={self.block_rows}")
@@ -237,6 +247,42 @@ def _effective_fused_power(m: int, n: int, s: int, dtype, cfg: RSVDConfig,
     return _use_fused_power(shape, cfg, s, vmem_budget=vmem)
 
 
+def _host_rooted(op: LinOp) -> bool:
+    """Does the solve ultimately stream a HOST-resident array?  Composed /
+    transposed operators are peeled down to their base: the transfers a
+    CenteredOp-over-HostOp pays are the HostOp's."""
+    while isinstance(op, (ops_mod.ComposedOp, ops_mod._TransposedOp)):
+        op = op.base if isinstance(op, ops_mod.ComposedOp) else op._op
+    return isinstance(getattr(op, "array", None), np.ndarray)
+
+
+def _pick_pipeline_depth(cfg: Optional[RSVDConfig], m: int, n: int,
+                         block_rows: int, itemsize: int,
+                         budget: Budget,
+                         source_depth: Optional[int] = None) -> int:
+    """Prefetch depth for a panel-streaming plan, from the same quarter-HBM
+    budget rule that sizes the panels: `depth` staging panels must be
+    co-resident, so depth shrinks (down to 1 — synchronous) whenever
+    depth * panel_bytes overflows the quarter budget a single panel was
+    sized into.  An explicit cfg.pipeline_depth — else the source's own
+    preference, mirroring the block_rows precedence — is the starting point
+    (still budget- and panel-count-clamped: a plan must be executable);
+    otherwise the default is double-buffered on real accelerators and 1 on
+    the CPU backend, where no host link exists to overlap."""
+    n_panels = -(-m // block_rows)  # ceil
+    requested = (cfg.pipeline_depth if cfg is not None else None) or source_depth
+    if requested:
+        depth = min(requested, n_panels)
+    elif jax.default_backend() == "cpu":
+        return 1
+    else:
+        depth = min(pipeline_mod.DEFAULT_DEPTH, n_panels)
+    panel_bytes = block_rows * n * itemsize
+    while depth > 1 and depth * panel_bytes > budget.hbm_bytes // 4:
+        depth -= 1
+    return max(depth, 1)
+
+
 def _validate(op: LinOp, spec: Spec, kind: str) -> None:
     """Facade-level input validation: bad ranks and unknown kinds fail HERE
     with a clear ValueError instead of deep inside the numerics."""
@@ -332,6 +378,17 @@ def _plan_adaptive(op: LinOp, spec: Spec, kind: str, budget: Budget,
     else:
         blocks = _select_blocks("matmul", (m, n, panel), op.dtype)
 
+    # Host-rooted sources stream their matmat/rmatmat (and the ||A||_F^2
+    # walk) through the prefetch pipeline at this depth — the registry sets
+    # it as the ambient pipeline.default_depth around the growth loop.
+    pipeline_depth = 1
+    if _host_rooted(op):
+        stream_block = op.block_rows or ops_mod.HostOp.DEFAULT_BLOCK_ROWS
+        pipeline_depth = _pick_pipeline_depth(
+            overrides, m, n, stream_block, dtype_bytes, budget,
+            source_depth=op.pipeline_depth,
+        )
+
     return ExecutionPlan(
         path="adaptive",
         m=m, n=n, k=cap, s=panel, batch=1,
@@ -354,6 +411,8 @@ def _plan_adaptive(op: LinOp, spec: Spec, kind: str, budget: Budget,
         panel=panel,
         rank_schedule=rank_schedule,
         schedule_hbm_bytes=schedule_bytes,
+        pipeline_depth=pipeline_depth,
+        predicted_walltime_s=rsvd_model.hbm_walltime_s(sum(schedule_bytes)),
     )
 
 
@@ -430,10 +489,30 @@ def plan(
     )
 
     block_rows = None
+    pipeline_depth = 1
     if path == "streamed":
         # cfg's explicit panel height wins; else the source's; else the
         # streaming default (so a streamed plan is always executable).
         block_rows = cfg.block_rows or op.block_rows or ops_mod.HostOp.DEFAULT_BLOCK_ROWS
+        pipeline_depth = _pick_pipeline_depth(
+            cfg, m, n, block_rows, jnp.dtype(op.dtype).itemsize, budget,
+            source_depth=op.pipeline_depth,
+        )
+        predicted_walltime = rsvd_model.streamed_walltime_s(
+            m, n, s, block_rows, cfg.power_iters, pipeline_depth,
+            dtype_bytes=jnp.dtype(op.dtype).itemsize, fused_sketch=fused_sketch,
+        )
+    elif path == "matfree" and _host_rooted(op):
+        # composed-over-host sources stream underneath the operator products;
+        # record the depth their prefetched base walk resolves to
+        pipeline_depth = _pick_pipeline_depth(
+            cfg, m, n, op.block_rows or ops_mod.HostOp.DEFAULT_BLOCK_ROWS,
+            jnp.dtype(op.dtype).itemsize, budget,
+            source_depth=op.pipeline_depth,
+        )
+        predicted_walltime = rsvd_model.hbm_walltime_s(predicted)
+    else:
+        predicted_walltime = rsvd_model.hbm_walltime_s(predicted)
 
     return ExecutionPlan(
         path=path,
@@ -455,4 +534,6 @@ def plan(
         kind=kind,
         spec=spec,
         rank_schedule=(k,),
+        pipeline_depth=pipeline_depth,
+        predicted_walltime_s=predicted_walltime,
     )

@@ -86,26 +86,33 @@ def _qb_core(op, spec: Spec, pl, seed):
     `panel` / `k` carry the growth schedule (single `s`-wide panel for Rank
     specs); `threshold_sq` comes from the spec's stopping contract.  Rank
     specs need no stopping estimator, so they skip the ||A||_F^2 pass —
-    one fewer read of A on the fixed-rank qb/lu/eigh paths."""
-    from repro.core import adaptive
+    one fewer read of A on the fixed-rank qb/lu/eigh paths.
 
-    norm_sq = threshold_sq = None
-    if not isinstance(spec, Rank):
-        norm_sq = adaptive.fro_norm_sq(op)
-        threshold_sq = spec.threshold_sq(norm_sq)
-    return adaptive.adaptive_qb(
-        op,
-        panel=pl.panel or pl.s,
-        max_rank=pl.k,
-        threshold_sq=threshold_sq,
-        seed=seed,
-        power_iters=pl.power_iters,
-        qr_method=pl.qr_method,
-        sketch_kind=pl.sketch_kind,
-        fused_sketch=pl.fused_sketch,
-        kernel_backend=pl.kernel_backend,
-        norm_sq=norm_sq,
-    )
+    The whole growth runs under the plan's `pipeline_depth` as the ambient
+    prefetch scope: host-rooted sources double-buffer every touch of A
+    (matmat / rmatmat / the norm walk) without core/adaptive.py knowing the
+    pipeline exists, and an early stop abandons in-flight prefetch cleanly."""
+    from repro.core import adaptive
+    from repro.linalg import pipeline
+
+    with pipeline.default_depth(pl.pipeline_depth):
+        norm_sq = threshold_sq = None
+        if not isinstance(spec, Rank):
+            norm_sq = adaptive.fro_norm_sq(op)
+            threshold_sq = spec.threshold_sq(norm_sq)
+        return adaptive.adaptive_qb(
+            op,
+            panel=pl.panel or pl.s,
+            max_rank=pl.k,
+            threshold_sq=threshold_sq,
+            seed=seed,
+            power_iters=pl.power_iters,
+            qr_method=pl.qr_method,
+            sketch_kind=pl.sketch_kind,
+            fused_sketch=pl.fused_sketch,
+            kernel_backend=pl.kernel_backend,
+            norm_sq=norm_sq,
+        )
 
 
 def _reveal(qb, spec: Spec, pl):

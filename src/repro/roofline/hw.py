@@ -3,6 +3,9 @@
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s per chip
 HBM_BW = 819e9                  # bytes/s per chip
 ICI_LINK_BW = 50e9              # bytes/s per link (assignment figure)
+HOST_LINK_BW = 32e9             # bytes/s host<->device (PCIe gen4 x16 per
+#                                 direction — the out-of-core streaming link
+#                                 the overlap model in rsvd_model.py prices)
 HBM_BYTES = 16 * 2**30          # 16 GiB per chip
 VMEM_BYTES = 128 * 2**20        # ~128 MiB vector memory
 

@@ -9,6 +9,14 @@ fused-vs-unfused saving against the SAME numbers the planner reports.
 Counting convention: fp32 words x `dtype_bytes`, reads AND writes of every
 large operand; s x s Grams are dropped (O(s^2) << m*s).  A is m x n (tall
 orientation — callers pass the post-orientation dims), sketch width s.
+
+Beyond bytes, the model prices WALLTIME: in-core paths at HBM bandwidth
+(`hbm_walltime_s`), and the out-of-core streamed path with the overlap
+model (`streamed_walltime_s`) — per panel, max(host-link transfer, HBM
+compute) plus pipeline fill/drain when the prefetch pipeline
+(linalg/pipeline.py) is at depth >= 2, or their SUM when synchronous.
+benchmarks/bench_rsvd.py measures the real transfer/compute split against
+these same numbers (schema v4).
 """
 from __future__ import annotations
 
@@ -132,6 +140,72 @@ def adaptive_schedule_bytes(
         )
         r_prev = r
     return tuple(out)
+
+
+def streamed_pass_count(power_iters: int) -> int:
+    """Host->device passes over A's row panels per streamed solve
+    (core/blocked.py): the sketch, TWO per stabilized power iteration (the
+    Z = ΣAᵀQ accumulation and the Y = A·Qz rebuild), and the projection
+    B = ΣQᵀA.  Every pass re-transfers every panel — out-of-core A has no
+    device residency to amortize."""
+    return 2 + 2 * power_iters
+
+
+def hbm_walltime_s(total_bytes: int, hbm_bw: float | None = None) -> float:
+    """Bandwidth-bound walltime of an in-core solve: every path in this
+    model is BLAS-3 with arithmetic intensity past the roofline ridge only
+    for tiny s, so HBM traffic over HBM bandwidth is the floor the kernels
+    chase."""
+    from repro.roofline import hw
+
+    return total_bytes / (hbm_bw or hw.HBM_BW)
+
+
+def streamed_walltime_s(
+    m: int,
+    n: int,
+    s: int,
+    block_rows: int,
+    power_iters: int,
+    pipeline_depth: int,
+    dtype_bytes: int = 4,
+    fused_sketch: bool = False,
+    link_bw: float | None = None,
+    hbm_bw: float | None = None,
+) -> float:
+    """Overlap-aware walltime of a streamed out-of-core solve.
+
+    Per pass over A, every panel costs a host->device transfer
+    ``t_x = block_rows * n * dtype_bytes / HOST_LINK_BW`` (the staging ring
+    ships the tail zero-padded, so transfers are uniform) and a compute
+    slice ``t_c`` = the pass's share of the solve's HBM traffic at HBM
+    bandwidth.  Synchronous (depth 1) pays ``n_panels * (t_x + t_c)``;
+    the double-buffered pipeline pays the FILL (first transfer, nothing to
+    overlap it with), ``max(t_x, t_c)`` for each interior panel, and the
+    DRAIN (last panel's compute after its transfer) —
+
+        t_x + (n_panels - 1) * max(t_x, t_c) + t_c
+
+    — the Lu et al. (arXiv:1706.07191) overlap bound.  Depth >= 2 is all
+    the model distinguishes: one panel in flight already hides the link
+    behind compute (deeper rings only absorb jitter, which a bandwidth
+    model has none of)."""
+    from repro.roofline import hw
+
+    link_bw = link_bw or hw.HOST_LINK_BW
+    hbm_bw = hbm_bw or hw.HBM_BW
+    n_panels = -(-m // block_rows)  # ceil
+    passes = streamed_pass_count(power_iters)
+    t_x = block_rows * n * dtype_bytes / link_bw
+    compute_bytes = predicted_hbm_bytes(
+        m, n, s, power_iters, False, fused_sketch, dtype_bytes
+    )
+    t_c = compute_bytes / (passes * n_panels) / hbm_bw
+    if pipeline_depth >= 2 and n_panels > 1:
+        per_pass = t_x + (n_panels - 1) * max(t_x, t_c) + t_c
+    else:
+        per_pass = n_panels * (t_x + t_c)
+    return passes * per_pass
 
 
 def predicted_hbm_bytes(

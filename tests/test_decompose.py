@@ -167,24 +167,24 @@ DESCRIBE_GOLDEN = [
                          overrides=RSVDConfig()),
      "path=dense shape=1024x512 k=32 s=42 kind=svd spec=rank(k=32)"
      " qr=householder backend=jnp fused_sketch=False fused_power=False"
-     " pred_hbm=18.7MB"),
+     " pipeline_depth=1 pred_hbm=18.7MB"),
     (lambda: linalg.plan(linalg.DenseOp(_sds(1024, 512)),
                          linalg.Tolerance(1e-2, panel=64),
                          overrides=RSVDConfig()),
      "path=adaptive shape=1024x512 k=512 s=64 kind=svd spec=tol(eps=0.01)"
      " qr=householder backend=jnp fused_sketch=False fused_power=False"
-     " panel=64 steps=8 pred_hbm=260.0MB"),
+     " pipeline_depth=1 panel=64 steps=8 pred_hbm=260.0MB"),
     (lambda: linalg.plan(linalg.DenseOp(_sds(1024, 512)), linalg.Rank(16),
                          overrides=RSVDConfig(), kind="qb"),
      "path=adaptive shape=1024x512 k=26 s=26 kind=qb spec=rank(k=16)"
      " qr=householder backend=jnp fused_sketch=False fused_power=False"
-     " panel=26 steps=1 pred_hbm=17.7MB"),
+     " pipeline_depth=1 panel=26 steps=1 pred_hbm=17.7MB"),
     (lambda: linalg.plan(linalg.DenseOp(_sds(512, 512)),
                          linalg.Energy(0.9, panel=32),
                          overrides=RSVDConfig(), kind="eigh"),
      "path=adaptive shape=512x512 k=512 s=32 kind=eigh spec=energy(p=0.9)"
      " qr=householder backend=jnp fused_sketch=False fused_power=False"
-     " panel=32 steps=16 pred_hbm=224.4MB"),
+     " pipeline_depth=1 panel=32 steps=16 pred_hbm=224.4MB"),
 ]
 
 

@@ -1,0 +1,285 @@
+"""Overlapped out-of-core pipeline: bit-identity, depth semantics, donation.
+
+The contract under test (DESIGN.md §Pipeline): prefetch reorders TRANSFERS,
+never arithmetic —
+
+  * panel walks / streamed SVD / adaptive QB at depths 1, 2, 3 are
+    BIT-identical on HostOp and composed (CenteredOp) sources, dividing and
+    odd-tail panel shapes alike;
+  * depth 1 degrades to the pre-pipeline synchronous behavior;
+  * adaptive QB early-stopping mid-stream abandons in-flight prefetch
+    cleanly (same rank, same estimator trajectory at every depth);
+  * the donated per-panel update steps (core/blocked.py, core/adaptive.py)
+    really alias their accumulator in the compiled HLO — the peak-memory
+    parity check;
+  * the planner's depth selection follows the quarter-HBM budget rule and
+    stamps a walltime from the overlap model.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import linalg
+from repro.core.blocked import svd_streamed
+from repro.core.rsvd import RSVDConfig
+from repro.core.spectra import make_test_matrix
+from repro.linalg import pipeline, prefetch_panels
+from repro.roofline import rsvd_model
+
+
+def _host(m, n, seed=0, kind="fast"):
+    return np.asarray(make_test_matrix(m, n, kind, seed=seed)[0])
+
+
+def _assert_bit_identical(a, b):
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# Panel-walk bit-identity (the primitive everything else rides)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,block", [(256, 64), (250, 64), (130, 32), (96, 96)])
+@pytest.mark.parametrize("depth", [1, 2, 3])
+def test_prefetch_panels_bit_identical_hostop(m, block, depth):
+    """Staged-ring panels == synchronous panels, odd tails included
+    (250/64 and 130/32 leave ragged last panels the ring zero-pads)."""
+    A = _host(m, 48, seed=1)
+    op = linalg.HostOp(A, block_rows=block)
+    sync = [np.asarray(p) for p in op.row_panels(block)]
+    pre = [np.asarray(p) for p in prefetch_panels(op, block, depth)]
+    assert len(sync) == len(pre)
+    for s, p in zip(sync, pre):
+        np.testing.assert_array_equal(s, p)
+
+
+@pytest.mark.parametrize("depth", [1, 2, 3])
+def test_prefetch_panels_bit_identical_composed(depth):
+    """CenteredOp over a host source: the BASE transfer is what prefetches;
+    the per-panel centering rides the already-staged device panel."""
+    A = _host(200, 24, seed=2) + 1.0
+    cop = linalg.CenteredOp(linalg.HostOp(A, block_rows=48))
+    sync = [np.asarray(p) for p in cop.row_panels(48)]
+    pre = [np.asarray(p) for p in prefetch_panels(cop, 48, depth)]
+    for s, p in zip(sync, pre):
+        np.testing.assert_array_equal(s, p)
+
+
+def test_prefetch_ring_reuse_many_panels():
+    """More panels than depth slots: every slot is reused multiple times and
+    no panel is corrupted by a later occupant (the staging-ring guard)."""
+    A = np.arange(512 * 8, dtype=np.float32).reshape(512, 8)
+    got = list(prefetch_panels(linalg.HostOp(A, block_rows=32), 32, 2))
+    assert len(got) == 16
+    for i, p in enumerate(got):
+        np.testing.assert_array_equal(np.asarray(p), A[i * 32 : (i + 1) * 32])
+
+
+def test_depth_one_is_the_synchronous_walk():
+    """Depth 1 must degrade to today's behavior: plain `jnp.asarray(slice)`
+    per panel, no staging ring, no lookahead queue."""
+    A = _host(128, 16, seed=3)
+    bounds = pipeline.panel_bounds(128, 32)
+    out = list(pipeline.stream_host_panels(A, bounds, 1))
+    for (lo, hi), p in zip(bounds, out):
+        np.testing.assert_array_equal(np.asarray(p), A[lo:hi])
+    # lookahead(it, 1) is a pass-through of the same iterator items
+    items = [object() for _ in range(5)]
+    assert list(pipeline.lookahead(iter(items), 1)) == items
+
+
+def test_default_depth_resolution():
+    """Explicit depth > ambient scope > source attribute > backend-aware
+    auto (host-resident sources double-buffer on real accelerators; on a
+    CPU host there is no link to overlap, so auto stays 1)."""
+    auto_host = 1 if jax.default_backend() == "cpu" else pipeline.DEFAULT_DEPTH
+    assert pipeline.resolve_depth(3, host_resident=False) == 3
+    assert pipeline.resolve_depth(None, host_resident=True) == auto_host
+    assert pipeline.resolve_depth(None, host_resident=False) == 1
+    with pipeline.default_depth(4):
+        assert pipeline.resolve_depth(None, host_resident=False) == 4
+        assert pipeline.resolve_depth(2, host_resident=False) == 2
+        # the ambient (plan-decided, budget-clamped) depth outranks a
+        # source's own pipeline_depth attribute
+        assert pipeline.resolve_depth(None, source_default=3) == 4
+    assert pipeline.resolve_depth(None, source_default=3) == 3
+    assert pipeline.resolve_depth(None, host_resident=False) == 1
+
+
+# ---------------------------------------------------------------------------
+# Streamed SVD bit-identity across depths (HostOp end to end)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("block_rows", [100, 128])  # 100: odd tail panel
+def test_svd_streamed_prefetch_bit_identical(block_rows):
+    A = _host(300, 64, seed=4)
+    cfg = RSVDConfig.streaming(block_rows=block_rows)
+    base = svd_streamed(A, 8, cfg, seed=1, pipeline_depth=1)
+    for depth in (2, 3):
+        got = svd_streamed(A, 8, cfg, seed=1, pipeline_depth=depth)
+        _assert_bit_identical(got, base)
+
+
+def test_facade_streamed_plan_prefetch_bit_identical():
+    """The planned (depth-2) facade solve == the forced-synchronous solve.
+    The streaming preset pins depth 2 explicitly — the backend-aware
+    default would stay synchronous on this CPU test host."""
+    A = _host(300, 48, seed=5)
+    op = linalg.HostOp(A, block_rows=64)
+    pl = linalg.plan(op, 8, overrides=RSVDConfig.streaming(block_rows=64))
+    assert pl.path == "streamed" and pl.pipeline_depth == 2
+    got = linalg.svd(op, 8, plan=pl, seed=3)
+    sync = linalg.svd(op, 8, seed=3,
+                      overrides=dataclasses.replace(
+                          RSVDConfig.streaming(block_rows=64), pipeline_depth=1))
+    _assert_bit_identical(got, sync)
+
+
+def test_centered_matfree_prefetch_bit_identical():
+    """Composed-over-host matfree path: ambient depth changes nothing but
+    transfer timing."""
+    A = _host(256, 32, seed=6) + 0.5
+    op = linalg.CenteredOp(linalg.HostOp(A, block_rows=64))
+    runs = []
+    for depth in (1, 2, 3):
+        with pipeline.default_depth(depth):
+            runs.append(linalg.svd(op, 6, seed=2))
+    _assert_bit_identical(runs[0], runs[1])
+    _assert_bit_identical(runs[0], runs[2])
+
+
+# ---------------------------------------------------------------------------
+# Adaptive QB: early stop mid-pipeline
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("depth", [2, 3])
+def test_adaptive_early_stop_discards_inflight_prefetch(depth):
+    """A Tolerance solve on a host source stops growing panels the moment
+    the estimator clears eps — with prefetch in flight.  The abandoned
+    transfers must not perturb ANYTHING: same executed rank, same estimator
+    trajectory, same factors as the synchronous run."""
+    A = _host(256, 96, seed=7, kind="sharp")
+    spec = linalg.Tolerance(1e-2, panel=16)
+    sync = linalg.decompose(linalg.HostOp(A, block_rows=64), spec, seed=0,
+                            overrides=RSVDConfig(pipeline_depth=1))
+    over = linalg.decompose(linalg.HostOp(A, block_rows=64), spec, seed=0,
+                            overrides=RSVDConfig(pipeline_depth=depth))
+    assert over.plan.pipeline_depth == depth
+    # the solve stopped early (otherwise nothing was in flight to discard)
+    assert len(over.rank_history) < len(over.plan.rank_schedule)
+    assert over.rank == sync.rank
+    assert over.rank_history == sync.rank_history
+    assert over.err_history == sync.err_history
+    _assert_bit_identical(over.factors, sync.factors)
+
+
+# ---------------------------------------------------------------------------
+# Donation: the compiled HLO really aliases the accumulator buffer
+# ---------------------------------------------------------------------------
+
+def _alias_bytes(jitted, *args):
+    compiled = jitted.lower(*args).compile()
+    return compiled.memory_analysis().alias_size_in_bytes
+
+
+def test_donated_updates_alias_accumulator_buffer():
+    """Peak-memory parity: each donated per-panel update step must reuse its
+    accumulator's buffer (alias bytes == accumulator bytes), i.e. the
+    compiled program allocates NO fresh output for the carry."""
+    from repro.core import adaptive, blocked
+
+    acc = jnp.zeros((64, 16), jnp.float32)
+    x = jnp.ones((64, 16), jnp.float32)
+    assert _alias_bytes(blocked._add_donated, acc, x) == acc.nbytes
+
+    Z = jnp.zeros((48, 16), jnp.float32)
+    Ap = jnp.ones((32, 48), jnp.float32)
+    Qp = jnp.ones((32, 16), jnp.float32)
+    assert _alias_bytes(blocked._accum_xty, Z, Ap, Qp) == Z.nbytes
+
+    G = jnp.zeros((16, 16), jnp.float32)
+    Yp = jnp.ones((32, 16), jnp.float32)
+    compiled = blocked._gram_accum.lower(G, Yp, backend="jnp").compile()
+    assert compiled.memory_analysis().alias_size_in_bytes == G.nbytes
+
+    Y = jnp.zeros((64, 8), jnp.float32)
+    Q = jnp.ones((64, 24), jnp.float32)
+    assert _alias_bytes(adaptive._deflate_step, Y, Q) == Y.nbytes
+
+
+def test_donated_update_matches_undonated():
+    """Donation must not change a single bit of the update arithmetic."""
+    from repro.core import blocked
+
+    rng = np.random.RandomState(11)
+    Z0 = jnp.asarray(rng.randn(24, 8).astype(np.float32))
+    Ap = jnp.asarray(rng.randn(16, 24).astype(np.float32))
+    Qp = jnp.asarray(rng.randn(16, 8).astype(np.float32))
+    want = np.asarray(Z0 + Ap.T @ Qp)
+    got = np.asarray(blocked._accum_xty(Z0, Ap, Qp))
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# Planner: depth selection + overlap-model walltime
+# ---------------------------------------------------------------------------
+
+def test_plan_depth_shrinks_under_tight_hbm_budget():
+    """The quarter-HBM rule that sizes panels also caps the staging ring:
+    a budget that fits one panel but not two forces depth 1 (synchronous)."""
+    op = linalg.DenseOp(jax.ShapeDtypeStruct((65536, 4096), jnp.float32),
+                        block_rows=4096)
+    panel_bytes = 4096 * 4096 * 4
+    tight = linalg.Budget(hbm_bytes=panel_bytes * 4)      # quarter = 1 panel
+    roomy = linalg.Budget(hbm_bytes=panel_bytes * 8)      # quarter = 2 panels
+    assert linalg.plan(op, 16, budget=tight,
+                       overrides=RSVDConfig.streaming()).pipeline_depth == 1
+    assert linalg.plan(op, 16, budget=roomy,
+                       overrides=RSVDConfig.streaming()).pipeline_depth == 2
+
+
+def test_plan_depth_clamped_to_panel_count():
+    """A single-panel stream has nothing to prefetch: depth collapses to 1
+    even when explicitly asked for more."""
+    A = _host(64, 32, seed=8)
+    pl = linalg.plan(linalg.HostOp(A, block_rows=128), 8,
+                     overrides=dataclasses.replace(
+                         RSVDConfig.streaming(block_rows=128), pipeline_depth=4))
+    assert pl.pipeline_depth == 1
+
+
+def test_overlap_walltime_model_shape():
+    """The overlap model's structural properties: depth 2 is never slower
+    than depth 1, is bounded below by both the pure-transfer and the
+    pure-compute time, and equals the plan's stamped prediction."""
+    m, n, s, block, q = 65536, 4096, 128, 4096, 2
+    sync_t = rsvd_model.streamed_walltime_s(m, n, s, block, q, 1)
+    over_t = rsvd_model.streamed_walltime_s(m, n, s, block, q, 2)
+    assert over_t < sync_t
+    from repro.roofline import hw
+    passes = rsvd_model.streamed_pass_count(q)
+    transfer_total = passes * m * n * 4 / hw.HOST_LINK_BW
+    compute_total = rsvd_model.hbm_walltime_s(
+        rsvd_model.predicted_hbm_bytes(m, n, s, q, False, False))
+    assert over_t >= max(transfer_total, compute_total) * 0.99
+    assert sync_t >= transfer_total + compute_total * 0.99
+    pl = linalg.plan(linalg.DenseOp(jax.ShapeDtypeStruct((m, n), jnp.float32)),
+                     118, overrides=RSVDConfig.streaming())
+    assert pl.predicted_walltime_s == rsvd_model.streamed_walltime_s(
+        pl.m, pl.n, pl.s, pl.block_rows, pl.power_iters, pl.pipeline_depth,
+        dtype_bytes=4, fused_sketch=pl.fused_sketch)
+
+
+def test_dense_lazy_row_panels_no_copy():
+    """DenseOp.row_panels on a device array yields lazy slices — no
+    re-wrap copy; HostOp keeps the host->device move per panel."""
+    A = jnp.asarray(_host(128, 16, seed=9))
+    op = linalg.DenseOp(A, block_rows=64)
+    panels = list(op.row_panels(64))
+    assert all(isinstance(p, jax.Array) for p in panels)
+    np.testing.assert_array_equal(np.asarray(jnp.concatenate(panels)),
+                                  np.asarray(A))

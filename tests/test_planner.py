@@ -14,6 +14,8 @@ Properties:
     distributed implementations at fixed seed;
   * CenteredOp-based PCA equals `pca_exact` on small inputs.
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -39,17 +41,24 @@ GOLDEN = [
     # the VMEM budget allows, unfused where the n x s accumulators blow it.
     ("fast_2000", lambda: linalg.DenseOp(_sds(2000, 2000)), RSVDConfig.fast(), 90,
      dict(path="dense", fused_power=True, fused_sketch=True,
-          kernel_backend="pallas", qr_method="cqr2", s=100)),
+          kernel_backend="pallas", qr_method="cqr2", s=100, pipeline_depth=1)),
     ("fast_8192_vmem_gate", lambda: linalg.DenseOp(_sds(8192, 8192)), RSVDConfig.fast(), 246,
      dict(path="dense", fused_power=False, fused_sketch=True,
           kernel_backend="pallas", s=256)),
     ("fast_65536x4096", lambda: linalg.DenseOp(_sds(65536, 4096)), RSVDConfig.fast(), 118,
      dict(path="dense", fused_power=True, m=65536, n=4096, s=128)),
     # streaming() preset: panel-streamed, CQR2, no fusion of the power step
+    # streamed plans double-buffer the panel prefetch by default (the
+    # quarter-HBM budget fits 2 staging panels comfortably at this shape)
     ("streaming_65536x4096", lambda: linalg.DenseOp(_sds(65536, 4096)),
      RSVDConfig.streaming(), 118,
      dict(path="streamed", block_rows=4096, qr_method="cqr2",
-          small_svd="lapack", fused_power=False)),
+          small_svd="lapack", fused_power=False, pipeline_depth=2)),
+    # an explicit depth override is the starting point (still clamped by the
+    # panel count AND the quarter-HBM budget rule; 3 x 64MB panels fit here)
+    ("streaming_depth_override", lambda: linalg.DenseOp(_sds(65536, 4096)),
+     dataclasses.replace(RSVDConfig.streaming(), pipeline_depth=3), 118,
+     dict(path="streamed", pipeline_depth=3)),
     # f64 faithful: everything un-fused, jnp backend (paper's dgesvd setting)
     ("faithful_f64", lambda: linalg.DenseOp(_sds(300, 200, jnp.float64)),
      RSVDConfig.faithful(), 20,
@@ -248,6 +257,16 @@ def test_predicted_bytes_match_roofline_model(mk_op, overrides, k):
         dtype_bytes=jnp.dtype(pl.dtype).itemsize, batch=pl.batch,
     )
     assert pl.predicted_hbm_bytes == want
+    # the walltime prediction comes from the SAME model, at the plan's own
+    # fields: the overlap model for streamed plans, HBM bandwidth elsewhere
+    if pl.path == "streamed":
+        want_t = rsvd_model.streamed_walltime_s(
+            pl.m, pl.n, pl.s, pl.block_rows, pl.power_iters, pl.pipeline_depth,
+            dtype_bytes=jnp.dtype(pl.dtype).itemsize, fused_sketch=pl.fused_sketch,
+        )
+    else:
+        want_t = rsvd_model.hbm_walltime_s(pl.predicted_hbm_bytes)
+    assert pl.predicted_walltime_s == want_t
     # and the fused plan must predict strictly less traffic than unfused
     if pl.fused_power:
         unfused = rsvd_model.predicted_hbm_bytes(
