@@ -7,11 +7,14 @@ structural HBM-traffic model that the fused one-pass range finder is built
 on (now shared with the execution planner — repro/roofline/rsvd_model.py),
 the EXECUTED `ExecutionPlan` for every variant, the ADAPTIVE
 (fixed-precision) mode (schema v3: rank-growth trajectory, per-step
-roofline bytes, adaptive-vs-oracle walltime), and — schema v4 — the
-OUT-OF-CORE PIPELINE: synchronous (depth 1) vs double-buffered streamed
-SVD walltime on a host source, the measured per-pass transfer vs compute
-split, and the overlap model's predictions, asserted equal to the plan's
-own `pipeline_depth` / `predicted_walltime_s` fields.  EXPERIMENTS.md
+roofline bytes, adaptive-vs-oracle walltime), the OUT-OF-CORE PIPELINE
+(schema v4: synchronous vs double-buffered streamed SVD walltime, the
+measured per-pass transfer vs compute split, and the overlap model's
+predictions, asserted equal to the plan's own `pipeline_depth` /
+`predicted_walltime_s` fields), and — schema v5 — the SPARSE path: a
+density sweep (nnz/mn in {0.001, 0.01, 0.1}) of SpMM-sketch vs dense
+walltime with the plan's bytes asserted equal to the sparse roofline and
+the density-0.01 sketch priced >= 10x below dense.  EXPERIMENTS.md
 records the history; the model derivations live in rsvd_model.py.
 """
 from __future__ import annotations
@@ -198,9 +201,56 @@ def pipeline_rows(m=16384, n=2048, k=64, block_rows=2048):
     return [row]
 
 
+def sparse_rows(m=2048, n=1024, k=16, densities=(0.001, 0.01, 0.1)):
+    """Schema v5: the sparse path across a density sweep.
+
+    For each density: SpMM-sketch SVD walltime on a `SparseOp` vs the dense
+    solve on the densified matrix, the executed sparse plan, and the model
+    ratio dense-sketch-bytes / sparse-sketch-bytes.  Two asserts gate the
+    sweep on EVERY backend: the plan's whole-solve bytes equal the sparse
+    roofline model, and the density-0.01 sketch is priced >= 10x below the
+    dense sketch.  The measured walltime ratio is gated on TPU only — in
+    interpret mode SpMM runs as a trace, not a kernel, so the CPU ratio is
+    recorded for trend-tracking, never asserted.
+    """
+    import numpy as np
+    from jax.experimental import sparse as jsparse
+
+    from repro import linalg
+    from repro.roofline import rsvd_model
+
+    rows = []
+    for density in densities:
+        rng = np.random.default_rng(int(density * 1e6))
+        mask = rng.random((m, n)) < density
+        A_np = (rng.standard_normal((m, n)) * mask).astype(np.float32)
+        A = jnp.asarray(A_np)
+        op = linalg.SparseOp(jsparse.BCOO.fromdense(A))
+        pl = linalg.plan(op, k)
+        assert pl.path == "sparse" and pl.nnz == op.nnz, pl.describe()
+        t_sparse = _time(lambda o, p=pl: linalg.svd(o, k, plan=p, seed=0), op)
+        t_dense = _time(lambda a: linalg.svd(a, k, seed=0), A)
+        sketch_sparse = rsvd_model.spmm_sketch_bytes(
+            m, n, pl.s, pl.nnz, fused_sketch=pl.fused_sketch)
+        sketch_dense = rsvd_model.sketch_bytes(
+            m, n, pl.s, fused_sketch=False)
+        rows.append(dict(
+            m=m, n=n, k=k, density=density, nnz=pl.nnz,
+            wall_s_sparse=round(t_sparse, 4),
+            wall_s_dense=round(t_dense, 4),
+            walltime_ratio=round(t_sparse / t_dense, 3),
+            sketch_bytes_sparse=sketch_sparse,
+            sketch_bytes_dense=sketch_dense,
+            sketch_pricing_ratio=round(sketch_dense / sketch_sparse, 2),
+            backend=jax.default_backend(),
+            plan=dataclasses.asdict(pl),
+        ))
+    return rows
+
+
 def build_report(smoke: bool = False) -> dict:
     report = {
-        "schema": "bench_rsvd/v4",
+        "schema": "bench_rsvd/v5",
         "backend": jax.default_backend(),
         "interpret_mode": jax.default_backend() != "tpu",
         "traffic_model_per_power_iter": traffic_rows(),
@@ -209,6 +259,7 @@ def build_report(smoke: bool = False) -> dict:
                                     else (512, 256, 1e-2, 16))),
         "pipeline": pipeline_rows(*((1024, 256, 8, 256) if smoke
                                     else (16384, 2048, 64, 2048))),
+        "sparse": sparse_rows(*((512, 256, 8) if smoke else (2048, 1024, 16))),
     }
     for row in report["traffic_model_per_power_iter"]:
         assert row["saving"] >= 1.5, (
@@ -240,6 +291,22 @@ def build_report(smoke: bool = False) -> dict:
             batch=p["batch"],
         ), row
         assert p["pipeline_depth"] >= 2, row
+    for row in report["sparse"]:
+        # the executed sparse plan's bytes ARE the sparse roofline model —
+        # same guard against model drift as the dense variants above
+        p = row["plan"]
+        assert p["predicted_hbm_bytes"] == rsvd_model.sparse_predicted_hbm_bytes(
+            p["m"], p["n"], p["s"], p["power_iters"], p["nnz"],
+            fused_sketch=p["fused_sketch"],
+            dtype_bytes=jnp.dtype(p["dtype"]).itemsize,
+        ), row
+        if row["density"] <= 0.01 and not smoke:
+            # the acceptance bar holds at the full sweep shape; the smoke
+            # shape's m*s / n*s output terms dominate and cap the ratio
+            assert row["sketch_pricing_ratio"] >= 10.0, row
+        if jax.default_backend() == "tpu":
+            # the walltime bar holds only where SpMM runs as a real kernel
+            assert row["walltime_ratio"] <= 0.5, row
     return report
 
 
@@ -263,6 +330,12 @@ def main(out_path: str = "BENCH_rsvd.json", smoke: bool = False) -> None:
               f"sync{row['wall_s_sync'] * 1e6:.0f}us;"
               f"ratio{row['overlap_ratio']};"
               f"xfer{row['transfer_s_total'] * 1e6:.0f}us")
+    for row in report["sparse"]:
+        print(f"rsvd_sparse_d{row['density']},"
+              f"{row['wall_s_sparse'] * 1e6:.0f},"
+              f"dense{row['wall_s_dense'] * 1e6:.0f}us;"
+              f"nnz{row['nnz']};"
+              f"pricing{row['sketch_pricing_ratio']}x")
     print(f"# wrote {out_path}")
 
 

@@ -129,6 +129,11 @@ def _small_svd(B: jax.Array, method: SmallSVD):
 
 
 def _sketch(A: jax.Array, s: int, seed, cfg: RSVDConfig) -> jax.Array:
+    if cfg.sketch_kind in sketch_mod.STRUCTURED_KINDS:
+        # SRHT / CountSketch apply by transform (sign flip + FWHT + column
+        # subsample / signed segment-sum) — O(mn log n) / O(mn) instead of
+        # the O(mns) GEMM, and nothing to fuse: there is no RNG tile.
+        return sketch_mod.apply_structured(A, s, seed, cfg.sketch_kind)
     if cfg.fused_sketch and A.dtype != jnp.float64:
         # Fused RNG+GEMM Pallas kernel — Omega never materialized in HBM.
         # The seed is a traced SMEM scalar: seed sweeps / GaLore refreshes /
@@ -230,9 +235,11 @@ def _rsvd_body_fused(
     # The sketch pass already emits W = AᵀY (sketch_power strip layout), so
     # even the FIRST power iteration closes through a sketch-width TRSM
     # instead of re-reading A: reads of A = 1 + q exactly.
-    if cfg.fused_sketch:
+    if cfg.fused_sketch and cfg.sketch_kind not in sketch_mod.STRUCTURED_KINDS:
         Y, W, G1 = ops.sketch_power(A, s, seed, kind=cfg.sketch_kind)
     else:
+        # structured kinds have no in-kernel RNG — materialize Omega and
+        # still take the one-pass strip kernel for Y / W / G
         omega = sketch_mod.sketch_matrix(n, s, seed, cfg.sketch_kind, dtype=A.dtype)
         Y, W, G1 = ops.power_step(A, omega, with_gram=True)
     for _ in range(cfg.power_iters):

@@ -16,6 +16,7 @@ from repro.kernels import gram as _gram
 from repro.kernels import matmul as _mm
 from repro.kernels import power_step as _ps
 from repro.kernels import sketch_matmul as _sm
+from repro.kernels import spmm_sketch as _spmm
 from repro.kernels import trsm as _trsm
 
 
@@ -107,6 +108,40 @@ def sketch_matmul(
         ap, s, seed, s_padded=s_padded, kind=kind,
         bm=bm, bn=bn, bk=bk, out_dtype=out_dtype or a.dtype,
         interpret=_interpret(), row_offset=row_offset,
+    )
+    return out[:m, :s]
+
+
+def spmm_blocks(shape: tuple[int, int], s: int, dtype) -> tuple[int, int]:
+    """(bm, bk) tile shape for the block-ELL pack feeding `spmm_sketch`:
+    the autotune cache's "spmm_sketch" entry for this (m, s, n) bucket if
+    one exists (same `"<mode>:<device-kind>"` namespace as the dense
+    kernels), else the 128-aligned heuristic.  Exposed separately because
+    the PACK happens host-side in SparseOp, before any kernel call."""
+    m, n = shape
+    bm, _, bk = _select_blocks("spmm_sketch", (m, s, n), dtype)
+    return bm, bk
+
+
+@functools.partial(jax.jit, static_argnames=("s", "kind", "m", "out_dtype"))
+def spmm_sketch(
+    data: jax.Array,
+    tilecols: jax.Array,
+    s: int,
+    seed=0,
+    kind: str = "gaussian",
+    *,
+    m: int,
+    out_dtype=None,
+):
+    """Y = A @ Omega for a block-ELL packed sparse A (`pack_block_ell`),
+    with Omega tiles generated in VMEM per occupied tile — A's zero blocks
+    are never read and Omega never exists in HBM.  ``m`` is the logical row
+    count (the pack pads to block multiples); ``seed`` is traced."""
+    sp = s + (-s) % _block(s)
+    out = _spmm.spmm_sketch_padded(
+        data, tilecols, s, seed, s_padded=sp, kind=kind,
+        out_dtype=out_dtype or data.dtype, interpret=_interpret(),
     )
     return out[:m, :s]
 

@@ -21,6 +21,7 @@ from repro.linalg.operators import (  # noqa: F401
     LowRankUpdateOp,
     ScaledOp,
     ShardedOp,
+    SparseOp,
     StackedOp,
     as_linop,
     column_means,

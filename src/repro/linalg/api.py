@@ -45,7 +45,8 @@ SVDResult = Tuple[jax.Array, jax.Array, jax.Array]
 
 
 def plan(op, spec, budget: Optional[Budget] = None,
-         overrides: Optional[RSVDConfig] = None, kind: str = "svd") -> ExecutionPlan:
+         overrides: Optional[RSVDConfig] = None, kind: str = "svd",
+         nnz: Optional[int] = None) -> ExecutionPlan:
     """See planner.plan — re-exported as part of the facade.
 
     Mirrors `decompose`'s source preparation (e.g. kind="pca" wraps in
@@ -55,7 +56,8 @@ def plan(op, spec, budget: Optional[Budget] = None,
     op = as_linop(op)
     if entry.prepare is not None:
         op = entry.prepare(op)
-    return planner_mod.plan(op, spec, budget=budget, overrides=overrides, kind=kind)
+    return planner_mod.plan(op, spec, budget=budget, overrides=overrides,
+                            kind=kind, nnz=nnz)
 
 
 # ---------------------------------------------------------------------------
@@ -205,6 +207,11 @@ def _execute_svd_plan(op: LinOp, k: int, pl: ExecutionPlan, seed) -> SVDResult:
         # the ambient scope hands them the plan's prefetch depth
         with pipeline_mod.default_depth(pl.pipeline_depth):
             return _matfree_svd(op, k, pl, seed)
+    if pl.path == "sparse":
+        # the sparse path is the operator body with SpMM products; when the
+        # plan claims a fused sketch, _matfree_svd routes through the
+        # source's `sketch` hook (SparseOp -> the Pallas SpMM kernel)
+        return _matfree_svd(op, k, pl, seed)
     raise ValueError(f"unknown execution path: {pl.path}")
 
 
@@ -233,7 +240,7 @@ def eigvals(
         from repro.core import blocked
 
         return blocked.eigvals_streamed(op.array, k, cfg, seed=seed)
-    if pl.path == "matfree":
+    if pl.path in ("matfree", "sparse"):
         with pipeline_mod.default_depth(pl.pipeline_depth):
             return _matfree_svd(op, k, pl, seed, want_uv=False)
     # batched / sharded: Sigma rides the factor solve
@@ -266,10 +273,16 @@ def _matfree_svd(op: LinOp, k: int, pl: ExecutionPlan, seed, want_uv: bool = Tru
         m, n = op.shape
         s = min(k + pl.oversample, min(m, n))
         fdtype = jnp.promote_types(op.dtype, jnp.float32)
-        omega = sketch_mod.sketch_matrix(
-            n, s, jnp.asarray(seed, jnp.uint32), pl.sketch_kind, dtype=fdtype
-        )
-        Y = op.matmat(omega)
+        sketcher = getattr(op, "sketch", None)
+        if pl.fused_sketch and sketcher is not None:
+            # source-fused sketch (SparseOp: block-ELL SpMM with Omega tiles
+            # generated in VMEM — Omega never exists in HBM)
+            Y = sketcher(s, jnp.asarray(seed, jnp.uint32), pl.sketch_kind).astype(fdtype)
+        else:
+            omega = sketch_mod.sketch_matrix(
+                n, s, jnp.asarray(seed, jnp.uint32), pl.sketch_kind, dtype=fdtype
+            )
+            Y = op.matmat(omega)
         for _ in range(pl.power_iters):
             if pl.power_scheme == "plain":
                 Y = op.matmat(op.rmatmat(Y))

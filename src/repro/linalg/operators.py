@@ -31,6 +31,12 @@ from typing import Iterator, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import sparse as jsparse
+
+try:  # scipy ships with the jax toolchain, but SparseOp must not require it
+    import scipy.sparse as _scipy_sparse
+except ImportError:  # pragma: no cover - scipy is present in the image
+    _scipy_sparse = None
 
 from repro.linalg import pipeline as pipeline_mod
 
@@ -76,8 +82,11 @@ class LinOp:
         eye_dtype = jnp.promote_types(self.dtype, jnp.float32)
         for lo in range(0, m, b):
             hi = min(lo + b, m)
-            # A[lo:hi] = (E_panelᵀ A)ᵀ through rmatmat — panel-local only.
-            e = jnp.zeros((m, hi - lo), eye_dtype).at[jnp.arange(lo, hi), jnp.arange(hi - lo)].set(1.0)
+            # A[lo:hi] = (E_panelᵀ A)ᵀ through rmatmat.  E is the sliced
+            # standard basis e_lo..e_{hi-1} — an offset-diagonal eye (iota
+            # comparison), NOT an m-sized scatter per panel; entries are
+            # exact 0/1 either way so the panel values are bit-identical.
+            e = jnp.eye(m, hi - lo, -lo, dtype=eye_dtype)
             yield self.rmatmat(e).T.astype(self.dtype)
 
     def prefetch_panels(
@@ -243,6 +252,112 @@ class ShardedOp(LinOp):
 
     def row_panels(self, block_rows: Optional[int] = None):
         yield jnp.asarray(self.array)
+
+
+class SparseOp(LinOp):
+    """Sparse 2-D source (jax BCOO; scipy CSR/CSC/COO accepted).
+
+    The recommender/graph/text workload class: the sketch Y = A @ Omega is an
+    SpMM costing O(nnz * s) instead of O(m n s), so rSVD's dominant pass
+    scales with the data that EXISTS.  `matmat`/`rmatmat` are BCOO SpMMs
+    (A is never densified); `sketch` takes the fused path — a Pallas kernel
+    (kernels/spmm_sketch.py) that streams block-ELL tiles of A and generates
+    the matching Omega tiles in VMEM from the counter RNG, so Omega never
+    touches HBM.  Off-TPU (interpret mode aside) or for structured sketch
+    kinds it falls back to a materialized-Omega SpMM.
+
+    `row_panels` inherits the basis-slice fallback — each panel is one
+    nnz-proportional `rmatmat`, so panel walks (residuals, column means)
+    stay sparse too; `block_rows` defaults bounded so those walks never
+    materialize more than a panel of the dense form."""
+
+    DEFAULT_BLOCK_ROWS = 4096
+
+    #: fused-path guard: if block-ELL zero-padding would inflate the stored
+    #: tiles past this fraction of the dense footprint, the structure is not
+    #: sparse enough for the tiled kernel to win — use the BCOO SpMM.
+    MAX_PACK_FILL = 0.5
+
+    def __init__(self, a, block_rows: Optional[int] = None):
+        if _scipy_sparse is not None and _scipy_sparse.issparse(a):
+            a = jsparse.BCOO.from_scipy_sparse(a.tocoo())
+        if isinstance(a, jsparse.JAXSparse) and not isinstance(a, jsparse.BCOO):
+            to_bcoo = getattr(a, "to_bcoo", None)
+            if to_bcoo is None:
+                raise TypeError(
+                    f"SparseOp cannot convert {type(a).__name__} to BCOO"
+                )
+            a = to_bcoo()
+        if not isinstance(a, jsparse.BCOO):
+            raise TypeError(
+                "SparseOp expects a jax BCOO or a scipy sparse matrix, got "
+                f"{type(a).__name__}"
+            )
+        if a.ndim != 2:
+            raise ValueError(f"SparseOp expects a 2-D matrix, got shape {a.shape}")
+        self.bcoo = a
+        self.block_rows = block_rows or self.DEFAULT_BLOCK_ROWS
+        self._t = None          # cached transposed BCOO for rmatmat
+        self._packed = {}       # (bm, bk) -> block-ELL pack, or None if too dense
+
+    @property
+    def shape(self):
+        return tuple(self.bcoo.shape)
+
+    @property
+    def dtype(self):
+        return self.bcoo.dtype
+
+    @property
+    def nnz(self) -> int:
+        """Stored nonzeros (the planner's traffic-model input)."""
+        return int(self.bcoo.nse)
+
+    @property
+    def density(self) -> float:
+        m, n = self.shape
+        return self.nnz / float(m * n)
+
+    def matmat(self, X):
+        return self.bcoo @ X
+
+    def rmatmat(self, Y):
+        if self._t is None:
+            self._t = self.bcoo.T
+        return self._t @ Y
+
+    def sketch(self, s: int, seed: int, kind: str = "gaussian") -> jax.Array:
+        """Y = A @ Omega without materializing Omega in HBM when possible.
+
+        The fused path packs A into block-ELL tiles once (cached per tile
+        shape) and runs the Pallas SpMM-sketch kernel; structured kinds and
+        matrices whose padded tiles would exceed `MAX_PACK_FILL` of the
+        dense footprint fall back to `matmat` on a materialized Omega —
+        same map, different summation order."""
+        from repro.core import sketch as sketch_mod
+        from repro.kernels import ops as kernel_ops
+
+        m, n = self.shape
+        omega_dtype = jnp.promote_types(self.dtype, jnp.float32)
+        packed = None
+        # kernel accumulates fp32 — f64 sources keep the materialized path
+        if kind not in sketch_mod.STRUCTURED_KINDS and self.dtype != jnp.float64:
+            packed = self._block_ell(kernel_ops.spmm_blocks(self.shape, s, self.dtype))
+        if packed is None:
+            return self.matmat(sketch_mod.sketch_matrix(n, s, seed, kind, omega_dtype))
+        data, tilecols = packed
+        return kernel_ops.spmm_sketch(data, tilecols, s, seed=seed, kind=kind, m=m)
+
+    def _block_ell(self, blocks):
+        bm, bk = blocks
+        key = (bm, bk)
+        if key not in self._packed:
+            from repro.kernels import spmm_sketch as spmm_mod
+
+            self._packed[key] = spmm_mod.pack_block_ell(
+                self.bcoo, bm, bk, max_fill=self.MAX_PACK_FILL
+            )
+        return self._packed[key]
 
 
 # ---------------------------------------------------------------------------
@@ -416,7 +531,12 @@ def prefetch_panels(
 def column_means(op: LinOp) -> jax.Array:
     """muᵀ = 1ᵀA / m, accumulated one row panel at a time (bounded default
     panel height — the fp32 per-panel cast must stay panel-sized even for
-    sources without a block_rows of their own)."""
+    sources without a block_rows of their own).
+
+    Accumulation runs in ``promote_types(panel.dtype, float32)`` — f32 at
+    minimum, and f64 for an f64-under-x64 source, where the closing
+    ``astype(op.dtype)`` is the identity (tests/test_adaptive.py pins that
+    the promoted precision survives end-to-end for CenteredOp/pca)."""
     op = as_linop(op)
     m = op.shape[0]
     b = op.block_rows or HostOp.DEFAULT_BLOCK_ROWS
@@ -431,11 +551,18 @@ def as_linop(a) -> LinOp:
     """Coerce an array (or LinOp) to an operator source.
 
     2-D device arrays -> DenseOp, 2-D host numpy -> HostOp (streamed),
-    3-D -> StackedOp.  Already-sharded arrays are NOT auto-detected — wrap
-    them in ShardedOp(mesh, axis) explicitly (the mesh axis is a caller
-    decision, not an array property the tracer can see)."""
+    3-D -> StackedOp, sparse (jax BCOO / scipy) -> SparseOp.  Already-sharded
+    arrays are NOT auto-detected — wrap them in ShardedOp(mesh, axis)
+    explicitly (the mesh axis is a caller decision, not an array property
+    the tracer can see)."""
     if isinstance(a, LinOp):
         return a
+    # sparse first: a BCOO *has* ndim == 2, and falling through would wrap
+    # it in DenseOp and densify on the first matmat
+    if isinstance(a, jsparse.JAXSparse):
+        return SparseOp(a)
+    if _scipy_sparse is not None and _scipy_sparse.issparse(a):
+        return SparseOp(a)
     ndim = getattr(a, "ndim", None)
     if ndim == 3:
         return StackedOp(a)

@@ -32,7 +32,7 @@ from repro.linalg.spec import Rank, Spec
 from repro.roofline import rsvd_model
 
 #: execution paths the planner can choose
-PATHS = ("dense", "streamed", "batched", "sharded", "matfree", "adaptive")
+PATHS = ("dense", "streamed", "batched", "sharded", "matfree", "adaptive", "sparse")
 
 
 @dataclass(frozen=True)
@@ -70,7 +70,7 @@ class ExecutionPlan:
     plus the roofline prediction, so a plan is inspectable and loggable
     (benchmarks/bench_rsvd.py persists executed plans to BENCH_rsvd.json)."""
 
-    path: str                      # dense | streamed | batched | sharded | matfree | adaptive
+    path: str                      # dense | streamed | batched | sharded | matfree | adaptive | sparse
     m: int                         # post-orientation tall dim (m >= n); adaptive
     n: int                         # plans record the EXECUTED (source) orientation
     k: int
@@ -108,6 +108,12 @@ class ExecutionPlan:
     # plans, plain HBM-bandwidth time elsewhere).
     pipeline_depth: int = 1
     predicted_walltime_s: float = 0.0
+    # sparse-source fields (PR 6): stored nonzeros and density of the solve's
+    # base operator.  Set whenever the source (possibly under a composition)
+    # is a SparseOp — the traffic prediction then prices every read of A at
+    # nnz * (value + index) bytes (rsvd_model.sparse_* functions).
+    nnz: Optional[int] = None
+    density: Optional[float] = None
 
     def to_config(self) -> RSVDConfig:
         """The thin frozen RSVDConfig view the core numerics execute."""
@@ -143,6 +149,9 @@ class ExecutionPlan:
         if self.path == "adaptive":
             bits.append(f"panel={self.panel}")
             bits.append(f"steps={len(self.rank_schedule)}")
+        if self.nnz is not None:
+            bits.append(f"nnz={self.nnz}")
+            bits.append(f"density={self.density:.4g}")
         bits.append(f"pred_hbm={self.predicted_hbm_bytes / 1e6:.1f}MB")
         return " ".join(bits)
 
@@ -169,6 +178,10 @@ def _pick_path(op: LinOp, cfg: Optional[RSVDConfig]) -> str:
         return "sharded"
     if len(op.shape) == 3:
         return "batched"
+    if isinstance(op, ops_mod.SparseOp):
+        # the sparse path IS the matfree operator body, named so the plan
+        # (and its SpMM traffic pricing) is distinguishable and loggable
+        return "sparse"
     if not isinstance(op, ops_mod.DenseOp):
         # protocol-only sources have no .array to hand the dense/streamed
         # executors — they run the generic operator body, overrides or not
@@ -256,6 +269,33 @@ def _host_rooted(op: LinOp) -> bool:
     return isinstance(getattr(op, "array", None), np.ndarray)
 
 
+def _sparse_nnz(op: LinOp) -> Optional[int]:
+    """Stored nonzeros of the solve's BASE operator, or None for dense
+    sources.  Composed / transposed operators are peeled (a CenteredOp over
+    a SparseOp still pays SpMM traffic for every read of A — the rank-one
+    correction is O(s) extra, which the byte model drops)."""
+    while isinstance(op, (ops_mod.ComposedOp, ops_mod._TransposedOp)):
+        op = op.base if isinstance(op, ops_mod.ComposedOp) else op._op
+    return op.nnz if isinstance(op, ops_mod.SparseOp) else None
+
+
+def _apply_sketch_knobs(cfg: RSVDConfig, spec: Spec, path: str) -> RSVDConfig:
+    """Resolve the sketch kind the solve will RUN: a spec-level `sketch=`
+    knob overrides the config default, and structured kinds fall back to
+    gaussian on the paths that regenerate row-offset sketch panels
+    (streamed / sharded) — SRHT's column sample and CountSketch's buckets
+    are global draws, not row-decomposable, so those bodies cannot stream
+    them.  The returned config records what actually executes."""
+    requested = getattr(spec, "sketch", None)
+    if requested:
+        cfg = dataclasses.replace(cfg, sketch_kind=requested)
+    from repro.core import sketch as sketch_mod
+
+    if cfg.sketch_kind in sketch_mod.STRUCTURED_KINDS and path in ("streamed", "sharded"):
+        cfg = dataclasses.replace(cfg, sketch_kind="gaussian")
+    return cfg
+
+
 def _pick_pipeline_depth(cfg: Optional[RSVDConfig], m: int, n: int,
                          block_rows: int, itemsize: int,
                          budget: Budget,
@@ -323,7 +363,8 @@ _QB_KINDS = ("qb", "eigh", "lu")
 
 
 def _plan_adaptive(op: LinOp, spec: Spec, kind: str, budget: Budget,
-                   overrides: Optional[RSVDConfig]) -> ExecutionPlan:
+                   overrides: Optional[RSVDConfig],
+                   nnz: Optional[int] = None) -> ExecutionPlan:
     """Fixed-precision (Tolerance/Energy) plan: the rank is unknown, so the
     plan records the GROWTH SCHEDULE — cumulative basis sizes in autotune-
     sized panels up to the max-rank cap — and the roofline bytes of each
@@ -344,6 +385,9 @@ def _plan_adaptive(op: LinOp, spec: Spec, kind: str, budget: Budget,
     rmax = min(m, n)
     f64 = _is_f64(op.dtype)
     cfg = overrides if overrides is not None else _default_config(op, "adaptive", budget)
+    cfg = _apply_sketch_knobs(cfg, spec, "adaptive")
+    if nnz is None:
+        nnz = _sparse_nnz(op)
 
     if isinstance(spec, Rank):
         # a _QB_KINDS entry at fixed rank: ONE oversampled panel, trimmed
@@ -358,10 +402,14 @@ def _plan_adaptive(op: LinOp, spec: Spec, kind: str, budget: Budget,
             panel = _select_blocks("sketch_matmul", (m, 128, n), op.dtype)[1]
         panel = max(1, min(panel, cap))
 
+    from repro.core import sketch as sketch_mod
+
     # the fused in-VMEM sketch serves device-resident dense sources only
-    # (HostOp subclasses DenseOp but streams from host — excluded by type)
+    # (HostOp subclasses DenseOp but streams from host — excluded by type);
+    # structured kinds apply by transform, so there is no RNG tile to fuse
     fused_sketch = (
         bool(cfg.fused_sketch) and not f64 and type(op) is ops_mod.DenseOp
+        and cfg.sketch_kind not in sketch_mod.STRUCTURED_KINDS
     )
     backend = "jnp" if f64 else cfg.kernel_backend
 
@@ -370,7 +418,7 @@ def _plan_adaptive(op: LinOp, spec: Spec, kind: str, budget: Budget,
     dtype_bytes = jnp.dtype(op.dtype).itemsize
     schedule_bytes = rsvd_model.adaptive_schedule_bytes(
         m, n, rank_schedule, cfg.power_iters,
-        dtype_bytes=dtype_bytes, fused_sketch=fused_sketch,
+        dtype_bytes=dtype_bytes, fused_sketch=fused_sketch, nnz=nnz,
     )
     if fused_sketch:
         bm_, bn_, bk_ = _select_blocks("sketch_matmul", (m, panel, n), op.dtype)
@@ -413,6 +461,8 @@ def _plan_adaptive(op: LinOp, spec: Spec, kind: str, budget: Budget,
         schedule_hbm_bytes=schedule_bytes,
         pipeline_depth=pipeline_depth,
         predicted_walltime_s=rsvd_model.hbm_walltime_s(sum(schedule_bytes)),
+        nnz=nnz,
+        density=None if nnz is None else nnz / float(m * n),
     )
 
 
@@ -422,6 +472,7 @@ def plan(
     budget: Optional[Budget] = None,
     overrides: Optional[RSVDConfig] = None,
     kind: str = "svd",
+    nnz: Optional[int] = None,
 ) -> ExecutionPlan:
     """Build the execution plan for a solve over `op`.
 
@@ -431,16 +482,22 @@ def plan(
     pins the numerical variant and the historical dispatch; otherwise the
     planner picks device-appropriate defaults per source kind.  `kind`
     names the decomposition-registry entry the plan targets (svd, eigh, qb,
-    lu, pca)."""
+    lu, pca).  `nnz` declares the source's stored-nonzero count for the
+    SpMM traffic pricing — it defaults from the operator itself (SparseOp,
+    possibly under a composition), and the explicit argument serves
+    shape-only planning where no data exists to count."""
     op = as_linop(op)
     budget = budget or Budget.default()
     spec = spec_mod.as_spec(spec)
     _validate(op, spec, kind)
+    if nnz is None:
+        nnz = _sparse_nnz(op)
     if not isinstance(spec, Rank) or kind in _QB_KINDS:
-        return _plan_adaptive(op, spec, kind, budget, overrides)
+        return _plan_adaptive(op, spec, kind, budget, overrides, nnz=nnz)
     k = spec.k
     path = _pick_path(op, overrides)
     cfg = overrides if overrides is not None else _default_config(op, path, budget)
+    cfg = _apply_sketch_knobs(cfg, spec, path)
 
     shape = op.shape
     batch = shape[0] if len(shape) == 3 else 1
@@ -448,11 +505,15 @@ def plan(
     m, n = (m_raw, n_raw) if m_raw >= n_raw else (n_raw, m_raw)  # tall orientation
     s = min(k + cfg.oversample, n)
 
+    from repro.core import sketch as sketch_mod
+
     fused_power = _effective_fused_power(m, n, s, op.dtype, cfg, path, budget)
     fused_sketch = (
         bool(cfg.fused_sketch)
         and not _is_f64(op.dtype)
         and path not in ("matfree", "sharded")  # shard body materializes Omega
+        # structured kinds apply by transform — no RNG tile to generate
+        and cfg.sketch_kind not in sketch_mod.STRUCTURED_KINDS
     )
     # float64 always takes the jnp primitives (qr._use_pallas vetoes the
     # fp32-accumulating kernels) — record the backend that actually runs.
@@ -471,7 +532,11 @@ def plan(
     # perform (ops.power_step uses (m, n, s); ops.sketch_matmul uses
     # (m, s, n) and clamps bn to the sketch width) so the recorded tiles
     # are the ones that will actually run.
-    if fused_power:
+    if path == "sparse" and fused_sketch:
+        # the SpMM-sketch kernel's tiling — the (bm, bk) pair also keys the
+        # block-ELL pack SparseOp caches (ops.spmm_blocks does this lookup)
+        blocks = _select_blocks("spmm_sketch", (m, s, n), op.dtype)
+    elif fused_power:
         blocks = _select_blocks("power_step", (m, n, s), op.dtype)
     elif fused_sketch:
         bm_, bn_, bk_ = _select_blocks("sketch_matmul", (m, s, n), op.dtype)
@@ -479,14 +544,25 @@ def plan(
     else:
         blocks = _select_blocks("matmul", (m, n, s), op.dtype)
 
-    predicted = rsvd_model.predicted_hbm_bytes(
-        m, n, s,
-        power_iters=cfg.power_iters,
-        fused_power=fused_power,
-        fused_sketch=fused_sketch,
-        dtype_bytes=jnp.dtype(op.dtype).itemsize,
-        batch=batch,
-    )
+    if nnz is not None and path in ("sparse", "matfree"):
+        # every read of A is an SpMM at nnz * (value + index) bytes — the
+        # solve the matfree operator body actually runs over a sparse base
+        predicted = rsvd_model.sparse_predicted_hbm_bytes(
+            m, n, s,
+            power_iters=cfg.power_iters,
+            nnz=nnz,
+            fused_sketch=fused_sketch,
+            dtype_bytes=jnp.dtype(op.dtype).itemsize,
+        )
+    else:
+        predicted = rsvd_model.predicted_hbm_bytes(
+            m, n, s,
+            power_iters=cfg.power_iters,
+            fused_power=fused_power,
+            fused_sketch=fused_sketch,
+            dtype_bytes=jnp.dtype(op.dtype).itemsize,
+            batch=batch,
+        )
 
     block_rows = None
     pipeline_depth = 1
@@ -536,4 +612,6 @@ def plan(
         rank_schedule=(k,),
         pipeline_depth=pipeline_depth,
         predicted_walltime_s=predicted_walltime,
+        nnz=nnz,
+        density=None if nnz is None else nnz / float(m * n),
     )

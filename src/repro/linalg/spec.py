@@ -18,6 +18,22 @@ core/adaptive.py), so both reduce to a threshold on the remaining energy —
 revealed spectrum to the smallest rank that still meets the spec (the
 ±panel overshoot of blocked growth is removed).
 
+Every spec also carries a ``sketch`` knob — "gaussian" (default, None),
+"rademacher", "srht", or "countsketch" — naming the test-matrix family the
+range finder draws.  The structured kinds (core/sketch.py) apply in
+O(mn log n) / O(mn) instead of the O(mns) Gaussian GEMM; the planner
+resolves the knob into the executed config (falling back to gaussian on
+paths that can't stream a structured sketch) so the plan records what runs.
+
+Rank-selection boundary semantics (pinned by tests/test_decompose.py):
+`select_rank` returns the SMALLEST rank meeting the contract, with both
+comparisons INCLUSIVE (residual <= target, captured >= p * total), clamped
+to at least 1, and falling back to every revealed value when the contract
+is unreachable.  Tolerance indexes residuals by "values kept" (resid[j] =
+remaining + tail[j], so ok[0] IS the rank); Energy indexes cumulative
+capture 0-based (rank = ok[0] + 1).  The two expressions differ but the
+semantics are identical.
+
 Specs are frozen/hashable: they ride inside `ExecutionPlan` (a jit static
 argument) and serialize through `dataclasses.asdict` into BENCH_rsvd.json.
 """
@@ -27,6 +43,17 @@ from dataclasses import dataclass
 from typing import Optional
 
 import numpy as np
+
+
+def _validate_sketch(sketch: Optional[str]) -> None:
+    if sketch is None:
+        return
+    from repro.core.sketch import SKETCH_KINDS
+
+    if sketch not in SKETCH_KINDS:
+        raise ValueError(
+            f"unknown sketch kind {sketch!r} (choose from {SKETCH_KINDS})"
+        )
 
 
 @dataclass(frozen=True)
@@ -56,13 +83,16 @@ class Rank(Spec):
     """Fixed target rank — the paper's original contract."""
 
     k: int
+    sketch: Optional[str] = None
 
     def __post_init__(self):
         if not isinstance(self.k, (int, np.integer)) or isinstance(self.k, bool):
             raise ValueError(f"Rank takes an integer k, got {self.k!r}")
+        _validate_sketch(self.sketch)
 
     def describe(self) -> str:
-        return f"rank(k={self.k})"
+        base = f"rank(k={self.k}"
+        return base + (f", sketch={self.sketch})" if self.sketch else ")")
 
     def select_rank(self, svals, remaining_sq, norm_sq) -> int:
         return min(self.k, len(svals))
@@ -88,6 +118,7 @@ class Tolerance(Spec):
     norm: str = "fro"
     max_rank: Optional[int] = None
     panel: Optional[int] = None
+    sketch: Optional[str] = None
 
     def __post_init__(self):
         if not (float(self.eps) > 0.0):
@@ -97,9 +128,11 @@ class Tolerance(Spec):
                 f"Tolerance norm={self.norm!r} not supported (only 'fro' — the"
                 " posterior energy estimator is a Frobenius identity)"
             )
+        _validate_sketch(self.sketch)
 
     def describe(self) -> str:
-        return f"tol(eps={float(self.eps):g})"
+        base = f"tol(eps={float(self.eps):g}"
+        return base + (f", sketch={self.sketch})" if self.sketch else ")")
 
     def threshold_sq(self, norm_sq: float) -> float:
         return float(self.eps) ** 2 * norm_sq
@@ -119,13 +152,16 @@ class Energy(Spec):
     p: float
     max_rank: Optional[int] = None
     panel: Optional[int] = None
+    sketch: Optional[str] = None
 
     def __post_init__(self):
         if not (0.0 < float(self.p) <= 1.0):
             raise ValueError(f"Energy fraction p must be in (0, 1], got {self.p}")
+        _validate_sketch(self.sketch)
 
     def describe(self) -> str:
-        return f"energy(p={float(self.p):g})"
+        base = f"energy(p={float(self.p):g}"
+        return base + (f", sketch={self.sketch})" if self.sketch else ")")
 
     def threshold_sq(self, norm_sq: float) -> float:
         # captured >= p * total  <=>  remaining <= (1 - p) * total

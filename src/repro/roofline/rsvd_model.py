@@ -20,6 +20,73 @@ these same numbers (schema v4).
 """
 from __future__ import annotations
 
+#: bytes per stored nonzero index in the sparse formats we price (BCOO /
+#: block-ELL tile ids are int32 either way)
+INDEX_BYTES = 4
+
+
+def sparse_read_bytes(nnz: int, dtype_bytes: int = 4, index_bytes: int = INDEX_BYTES) -> int:
+    """HBM traffic of ONE full read of a sparse A: every stored nonzero
+    ships its value plus its index — nnz * (value + index) bytes, replacing
+    the dense m * n * dtype_bytes term wherever A is touched."""
+    return nnz * (dtype_bytes + index_bytes)
+
+
+def spmm_sketch_bytes(
+    m: int, n: int, s: int, nnz: int, fused_sketch: bool, dtype_bytes: int = 4
+) -> int:
+    """HBM traffic of the sparse sketch pass Y = A @ Omega (one SpMM).
+
+    Mirrors `sketch_bytes` with the dense read of A swapped for the
+    nnz-proportional read; the fused kernel (kernels/spmm_sketch.py) still
+    generates Omega tiles in VMEM for free, the unfused path round-trips the
+    materialized n x s factor."""
+    base = sparse_read_bytes(nnz, dtype_bytes) + m * s * dtype_bytes
+    omega = 0 if fused_sketch else 2 * n * s * dtype_bytes
+    return base + omega
+
+
+def sparse_hbm_bytes_per_power_iter(
+    m: int, n: int, s: int, nnz: int, dtype_bytes: int = 4
+) -> int:
+    """HBM traffic of ONE stabilized power iteration over a sparse A.
+
+    The sparse path always runs the unfused operator body (Z = AᵀQ and
+    Y' = A·Qz are two SpMMs — A is read twice per iteration, at nnz cost);
+    the CQR2 terms are identical to the dense model."""
+    spmms = 2 * sparse_read_bytes(nnz, dtype_bytes) + (2 * m * s + 2 * n * s) * dtype_bytes
+    cqr = 6 * m * s * dtype_bytes   # CQR2 of Y
+    small = 6 * n * s * dtype_bytes  # orthonormalize(Z)
+    return spmms + cqr + small
+
+
+def sparse_projection_bytes(m: int, n: int, s: int, nnz: int, dtype_bytes: int = 4) -> int:
+    """Post-loop traffic for the sparse path: final CQR2 of Y plus
+    B = QᵀA — one more SpMM read of A."""
+    cqr = 6 * m * s * dtype_bytes
+    b = sparse_read_bytes(nnz, dtype_bytes) + (m * s + n * s) * dtype_bytes
+    return cqr + b
+
+
+def sparse_predicted_hbm_bytes(
+    m: int,
+    n: int,
+    s: int,
+    power_iters: int,
+    nnz: int,
+    fused_sketch: bool = False,
+    dtype_bytes: int = 4,
+) -> int:
+    """Whole-algorithm HBM bytes for one rank-s solve over a sparse A:
+    the dense `predicted_hbm_bytes` with every read of A priced at
+    nnz * (value + index) instead of m * n words.  Callers pass
+    post-orientation dims (m >= n); nnz is orientation-invariant."""
+    total = spmm_sketch_bytes(m, n, s, nnz, fused_sketch, dtype_bytes)
+    total += power_iters * sparse_hbm_bytes_per_power_iter(m, n, s, nnz, dtype_bytes)
+    total += sparse_projection_bytes(m, n, s, nnz, dtype_bytes)
+    total += 2 * m * s * dtype_bytes  # U = Q @ U_b
+    return total
+
 
 def hbm_bytes_per_power_iter(
     m: int, n: int, s: int, fused: bool, dtype_bytes: int = 4
@@ -81,6 +148,7 @@ def adaptive_panel_bytes(
     power_iters: int,
     dtype_bytes: int = 4,
     fused_sketch: bool = False,
+    nnz: int | None = None,
 ) -> int:
     """HBM traffic of ONE adaptive growth panel (core/adaptive.py), with an
     accumulated basis of `r_prev` columns already on device.
@@ -101,20 +169,31 @@ def adaptive_panel_bytes(
     Panel-width CQR2 on an m x b block costs ~6 m b (two Grams + two TRSMs,
     matching `hbm_bytes_per_power_iter`'s counting convention); s x s and
     b x b Grams are dropped as O(b^2).
+
+    With ``nnz`` set (a sparse source), every read of A is priced at
+    nnz * (value + index) bytes instead of m * n words — the panel touches A
+    ``2 * power_iters + 2`` times (sketch, two SpMMs per power iteration,
+    projection); every other term is unchanged.
     """
+    a_reads = 2 * power_iters + 2
+    if nnz is None:
+        a_read_bytes = m * n * dtype_bytes
+    else:
+        a_read_bytes = sparse_read_bytes(nnz, dtype_bytes)
     deflate = 2 * m * r_prev + 2 * m * b
-    sketch = m * n + m * b + (0 if fused_sketch else 2 * n * b)
+    sketch = m * b + (0 if fused_sketch else 2 * n * b)
     power = power_iters * (
         6 * m * b            # orth(Y), CQR2
-        + (m * n + m * b + n * b)  # Z = A^T Q_y
+        + (m * b + n * b)    # Z = A^T Q_y (A read counted separately)
         + 6 * n * b          # orth(Z), CQR2 on n x b
-        + (m * n + n * b + m * b)  # Y = A Q_z
+        + (n * b + m * b)    # Y = A Q_z (A read counted separately)
         + deflate
     )
     reorth = 6 * m * b + deflate + 6 * m * b
-    project = m * n + m * b + n * b
+    project = m * b + n * b
     estimate = n * b
-    return (sketch + deflate + power + reorth + project + estimate) * dtype_bytes
+    words = sketch + deflate + power + reorth + project + estimate
+    return words * dtype_bytes + a_reads * a_read_bytes
 
 
 def adaptive_schedule_bytes(
@@ -124,18 +203,20 @@ def adaptive_schedule_bytes(
     power_iters: int,
     dtype_bytes: int = 4,
     fused_sketch: bool = False,
+    nnz: int | None = None,
 ) -> tuple:
     """Per-growth-step bytes for a cumulative `rank_schedule` (r_1, r_2, ...):
     step i grows the basis from r_{i-1} to r_i.  The planner stamps this
     tuple on adaptive ExecutionPlans; summing it gives the full-schedule
-    (worst-case, tolerance never met) prediction."""
+    (worst-case, tolerance never met) prediction.  ``nnz`` switches every
+    read of A to the sparse nnz * (value + index) pricing."""
     out = []
     r_prev = 0
     for r in rank_schedule:
         out.append(
             adaptive_panel_bytes(
                 m, n, r - r_prev, r_prev, power_iters,
-                dtype_bytes=dtype_bytes, fused_sketch=fused_sketch,
+                dtype_bytes=dtype_bytes, fused_sketch=fused_sketch, nnz=nnz,
             )
         )
         r_prev = r

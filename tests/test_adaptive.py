@@ -122,6 +122,50 @@ def test_f64_certifies_below_the_f32_estimator_floor():
         assert analytic <= dec.rank <= analytic + 8, (dec.rank, analytic)
 
 
+def test_column_means_keeps_f64_precision_under_x64():
+    """column_means accumulates in promote_types(dtype, f32): an f64 source
+    under x64 must keep full f64 precision through the panel walk — a
+    silent f32 accumulator would lose ~8 digits on an offset of 1e8
+    (CenteredOp/pca centers with exactly this mean)."""
+    from repro.compat import enable_x64
+
+    with enable_x64():
+        rng = np.random.default_rng(40)
+        X_np = (1e8 + rng.standard_normal((300, 12))).astype(np.float64)
+        for src in (jnp.asarray(X_np), linalg.HostOp(X_np, block_rows=64)):
+            mu = linalg.column_means(src)
+            assert mu.dtype == jnp.float64
+            np.testing.assert_allclose(np.asarray(mu), X_np.mean(axis=0),
+                                       rtol=1e-13, atol=0.0)
+
+
+def test_column_means_promotes_f32_over_a_long_panel_walk():
+    """An f32 source still accumulates at f32-or-better per panel: the
+    blocked sum over many panels stays within a few f32 ulps of the f64
+    reference (no precision cliff from the panel loop)."""
+    rng = np.random.default_rng(41)
+    X_np = (100.0 + rng.standard_normal((2048, 8))).astype(np.float32)
+    mu = linalg.column_means(linalg.HostOp(X_np, block_rows=128))
+    ref = X_np.astype(np.float64).mean(axis=0)
+    np.testing.assert_allclose(np.asarray(mu, np.float64), ref, rtol=2e-6)
+
+
+@pytest.mark.parametrize("sketch", ["rademacher", "srht", "countsketch"])
+@pytest.mark.parametrize("spectrum_kind", ["fast", "slow"])
+def test_tolerance_met_for_every_sketch_kind(sketch, spectrum_kind):
+    """The accuracy contract is sketch-independent: decompose(A,
+    Tolerance(eps)) certifies eps for the structured kinds exactly as for
+    gaussian (gaussian itself is pinned above), on both fast and slow
+    spectral decay."""
+    eps = 2e-2
+    A, _ = make_test_matrix(192, 64, spectrum_kind, seed=17)
+    dec = linalg.decompose(A, linalg.Tolerance(eps, panel=8, sketch=sketch),
+                           seed=3)
+    assert dec.plan.sketch_kind == sketch
+    achieved = float(linalg.residual(A, dec.factors))
+    assert achieved <= eps, (sketch, spectrum_kind, achieved, dec.rank)
+
+
 def test_tolerance_streams_host_source():
     """Adaptive growth over a HostOp: only panel-sized state moves, and the
     stopping rule sees the same estimator."""

@@ -25,6 +25,18 @@ def _psd(n, kind="sharp", seed=0):
     return (V * sig[None, :]) @ V.T, sig
 
 
+def _sparse_op_1000():
+    """Deterministic 256x128 SparseOp with exactly 1000 nonzeros (explicit
+    index construction — stable nnz/density for the describe goldens)."""
+    from jax.experimental import sparse as jsparse
+
+    i = np.arange(1000)
+    idx = np.stack([i % 256, (7 * i + i // 256) % 128], axis=1)
+    bcoo = jsparse.BCOO((jnp.ones((1000,), jnp.float32), jnp.asarray(idx)),
+                        shape=(256, 128))
+    return linalg.SparseOp(bcoo)
+
+
 # ---------------------------------------------------------------------------
 # Spec objects + coercion
 # ---------------------------------------------------------------------------
@@ -45,6 +57,80 @@ def test_spec_validation():
     assert linalg.as_spec(8) == linalg.Rank(8)
     spec = linalg.Tolerance(1e-2)
     assert linalg.as_spec(spec) is spec
+
+
+def test_sketch_knob_validation_and_describe():
+    for mk in (lambda s: linalg.Rank(8, sketch=s),
+               lambda s: linalg.Tolerance(1e-2, sketch=s),
+               lambda s: linalg.Energy(0.9, sketch=s)):
+        with pytest.raises(ValueError, match="unknown sketch kind"):
+            mk("fourier")
+        for s in ("gaussian", "rademacher", "srht", "countsketch"):
+            assert f"sketch={s}" in mk(s).describe()
+    assert linalg.Rank(8).describe() == "rank(k=8)"  # None stays silent
+
+
+def test_sketch_knob_resolves_into_plan():
+    """spec.sketch lands in the executed config; paths that stream panels
+    can't apply a structured sketch and fall back to gaussian."""
+    pl = linalg.plan(linalg.DenseOp(_sds(256, 128)), linalg.Rank(8, sketch="srht"))
+    assert pl.sketch_kind == "srht"
+    host = linalg.HostOp(np.zeros((4096, 64), np.float32), block_rows=512)
+    pl_host = linalg.plan(host, linalg.Rank(8, sketch="srht"))
+    assert pl_host.path == "streamed" and pl_host.sketch_kind == "gaussian"
+    pl_rad = linalg.plan(host, linalg.Rank(8, sketch="rademacher"))
+    assert pl_rad.sketch_kind == "rademacher"  # row-decomposable: kept
+
+
+# ---------------------------------------------------------------------------
+# select_rank boundary semantics (pinned): smallest rank, INCLUSIVE
+# comparisons, >=1 clamp, full fallback.  All values dyadic-exact so the
+# comparisons sit exactly ON the boundary without fp slack.
+# ---------------------------------------------------------------------------
+
+_SIG = np.asarray([2.0, 1.0, 1.0, 1.0, 1.0])  # sum of squares = 8 exactly
+
+
+def test_tolerance_select_rank_inclusive_at_exact_tail():
+    # target = 0.25 * 8 = 2.0 == tail after keeping 3 values -> rank 3,
+    # not 4: the comparison is inclusive
+    assert linalg.Tolerance(0.5).select_rank(_SIG, 0.0, 8.0) == 3
+
+
+def test_tolerance_select_rank_clamps_to_one():
+    # eps=1 accepts rank 0 (resid[0] = 8 <= 8) but the clamp keeps >= 1
+    assert linalg.Tolerance(1.0).select_rank(_SIG, 0.0, 8.0) == 1
+
+
+def test_tolerance_select_rank_counts_remaining_energy():
+    # remaining 8 outside the basis, norm_sq 16: target = 0.75^2*16 = 9.0
+    # == remaining + tail at rank 4 (8 + 1), inclusive again
+    assert linalg.Tolerance(0.75).select_rank(_SIG, 8.0, 16.0) == 4
+
+
+def test_tolerance_select_rank_unreachable_falls_back_to_all():
+    # remaining alone (1.0) exceeds the target (0.5): keep every value
+    assert linalg.Tolerance(0.25).select_rank(_SIG, 1.0, 8.0) == 5
+
+
+def test_energy_select_rank_inclusive_at_exact_capture():
+    # cumsum [4,5,6,7,8]; p*total = 4.0 is hit exactly by the first value
+    assert linalg.Energy(0.5).select_rank(_SIG, 0.0, 8.0) == 1
+
+
+def test_energy_select_rank_full_fraction_needs_all():
+    assert linalg.Energy(1.0).select_rank(_SIG, 0.0, 8.0) == 5
+
+
+def test_energy_select_rank_unreachable_falls_back_to_all():
+    # remaining energy means the basis can never capture the fraction
+    assert linalg.Energy(1.0).select_rank(_SIG, 1.0, 9.0) == 5
+
+
+def test_select_rank_single_singular_value():
+    one = np.asarray([2.0])
+    assert linalg.Tolerance(0.5).select_rank(one, 0.0, 4.0) == 1
+    assert linalg.Energy(1.0).select_rank(one, 0.0, 4.0) == 1
 
 
 # ---------------------------------------------------------------------------
@@ -185,11 +271,27 @@ DESCRIBE_GOLDEN = [
      "path=adaptive shape=512x512 k=512 s=32 kind=eigh spec=energy(p=0.9)"
      " qr=householder backend=jnp fused_sketch=False fused_power=False"
      " pipeline_depth=1 panel=32 steps=16 pred_hbm=224.4MB"),
+    (lambda: linalg.plan(_sparse_op_1000(), 8, overrides=RSVDConfig()),
+     "path=sparse shape=256x128 k=8 s=18 kind=svd spec=rank(k=8)"
+     " qr=householder backend=jnp fused_sketch=False fused_power=False"
+     " pipeline_depth=1 nnz=1000 density=0.03052 pred_hbm=0.7MB"),
+    (lambda: linalg.plan(_sparse_op_1000(), linalg.Rank(8, sketch="srht"),
+                         overrides=RSVDConfig()),
+     "path=sparse shape=256x128 k=8 s=18 kind=svd spec=rank(k=8, sketch=srht)"
+     " qr=householder backend=jnp fused_sketch=False fused_power=False"
+     " pipeline_depth=1 nnz=1000 density=0.03052 pred_hbm=0.7MB"),
+    (lambda: linalg.plan(linalg.DenseOp(_sds(1024, 512)),
+                         linalg.Rank(32, sketch="countsketch"),
+                         overrides=RSVDConfig()),
+     "path=dense shape=1024x512 k=32 s=42 kind=svd"
+     " spec=rank(k=32, sketch=countsketch) qr=householder backend=jnp"
+     " fused_sketch=False fused_power=False pipeline_depth=1 pred_hbm=18.7MB"),
 ]
 
 
 @pytest.mark.parametrize("mk_plan,want", DESCRIBE_GOLDEN,
-                         ids=["rank", "tol", "qb", "eigh"])
+                         ids=["rank", "tol", "qb", "eigh", "sparse",
+                              "sparse-srht", "countsketch"])
 def test_describe_golden(mk_plan, want):
     assert mk_plan().describe() == want
 

@@ -76,3 +76,89 @@ def test_hash_determinism_property(seed, idx):
     # single-bit index flip decorrelates the output (avalanche, weak check)
     c = int(hash_u32(jnp.asarray([idx ^ 1], jnp.uint32), seed)[0])
     assert a != c or idx == idx ^ 1
+
+
+# ---------------------------------------------------------------------------
+# Structured sketches: SRHT and CountSketch (PR 6)
+# ---------------------------------------------------------------------------
+
+from repro.core.sketch import (  # noqa: E402
+    apply_structured,
+    countsketch_matrix,
+    fwht,
+    srht_matrix,
+)
+
+
+def test_fwht_matches_hadamard_matmul():
+    """The butterfly transform equals x @ H for the normalized Hadamard H."""
+    n = 32
+    i = np.arange(n)
+    H = ((-1.0) ** np.array([bin(r & c).count("1") for r in i for c in i])
+         ).reshape(n, n) / np.sqrt(n)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((5, n)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(fwht(x)), np.asarray(x) @ H,
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("kind", ["srht", "countsketch"])
+@pytest.mark.parametrize("n", [48, 64])  # non-pow2 exercises the padding
+def test_structured_fast_apply_matches_materialized(kind, n):
+    """apply_structured (FWHT / segment-sum) and A @ sketch_matrix compute
+    the SAME linear map (different summation order — allclose, not equal)."""
+    rng = np.random.default_rng(1)
+    A = jnp.asarray(rng.standard_normal((37, n)).astype(np.float32))
+    fast = np.asarray(apply_structured(A, 16, 5, kind))
+    mat = np.asarray(A @ sketch_matrix(n, 16, 5, kind))
+    np.testing.assert_allclose(fast, mat, rtol=1e-4, atol=1e-4)
+
+
+def test_srht_columns_orthogonal():
+    """Over the full n_pad rows, Omega's columns are orthogonal with squared
+    norm n_pad / s exactly: distinct Hadamard columns under one sign flip."""
+    Om = np.asarray(srht_matrix(64, 16, seed=3))
+    np.testing.assert_allclose(Om.T @ Om, np.eye(16) * 64 / 16,
+                               rtol=1e-4, atol=1e-4)
+    # every entry is +-1/sqrt(s)
+    np.testing.assert_allclose(np.abs(Om), 1 / np.sqrt(16), rtol=1e-5)
+
+
+def test_countsketch_structure():
+    """Each row holds exactly one +-1; the ranked bucket assignment is
+    BALANCED (no empty sketch column — a raw hash % s would leave empty
+    buckets at panel widths, handing the range finder a zero column)."""
+    Om = np.asarray(countsketch_matrix(64, 16, seed=3))
+    assert np.all(np.sum(Om != 0, axis=1) == 1)
+    assert set(np.unique(Om[Om != 0])) == {-1.0, 1.0}
+    counts = np.bincount(np.argmax(np.abs(Om), axis=1), minlength=16)
+    assert counts.min() >= 1 and counts.max() - counts.min() <= 1, counts
+
+
+@pytest.mark.parametrize("kind", ["srht", "countsketch"])
+def test_structured_deterministic_in_seed(kind):
+    a = np.asarray(sketch_matrix(40, 8, seed=7, kind=kind))
+    b = np.asarray(sketch_matrix(40, 8, seed=7, kind=kind))
+    c = np.asarray(sketch_matrix(40, 8, seed=8, kind=kind))
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+@pytest.mark.parametrize("kind", ["srht", "countsketch"])
+def test_structured_rejects_row_offset(kind):
+    """Structured draws are global (column sample / bucket assignment) —
+    row-offset panel regeneration must fail loudly, not silently diverge."""
+    with pytest.raises(ValueError, match="row-decomposable"):
+        sketch_matrix(32, 8, seed=0, kind=kind, row_offset=16)
+
+
+@pytest.mark.parametrize("kind", ["srht", "countsketch"])
+def test_structured_sketch_preserves_column_space_rank(kind):
+    """Subspace-embedding sanity: sketching a rank-r matrix with s >= 2r
+    keeps rank r (the range finder's working requirement)."""
+    rng = np.random.default_rng(2)
+    L = rng.standard_normal((60, 6)).astype(np.float32)
+    R = rng.standard_normal((6, 80)).astype(np.float32)
+    A = jnp.asarray(L @ R)                      # rank 6
+    Y = np.asarray(apply_structured(A, 16, 11, kind))
+    assert np.linalg.matrix_rank(Y, tol=1e-4) == 6

@@ -1,0 +1,314 @@
+"""SparseOp + the SpMM sketch path (PR 6): construction/coercion, SpMM
+correctness against the densified matrix, the block-ELL pack + Pallas
+kernel, planner routing/pricing against the sparse roofline model, and the
+operator-layer bugfix regressions (row_panels fallback) that ride along."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import sparse as jsparse
+
+from repro import linalg
+from repro.core import sketch as sketch_mod
+from repro.core.rsvd import RSVDConfig
+from repro.roofline import rsvd_model
+
+
+def _sparse_pair(m, n, density, seed=0, dtype=np.float32):
+    """(dense numpy M, SparseOp over its BCOO form) at a given density."""
+    rng = np.random.default_rng(seed)
+    M = (rng.standard_normal((m, n)) * (rng.random((m, n)) < density)).astype(dtype)
+    return M, linalg.SparseOp(jsparse.BCOO.fromdense(jnp.asarray(M)))
+
+
+# ---------------------------------------------------------------------------
+# Construction and coercion
+# ---------------------------------------------------------------------------
+
+def test_sparseop_construction_and_stats():
+    M, op = _sparse_pair(50, 40, 0.1)
+    assert op.shape == (50, 40)
+    assert op.dtype == jnp.float32
+    assert op.nnz == int(np.count_nonzero(M))
+    assert op.density == pytest.approx(np.count_nonzero(M) / (50 * 40))
+
+
+def test_sparseop_accepts_scipy():
+    scipy_sparse = pytest.importorskip("scipy.sparse")
+    M, _ = _sparse_pair(30, 20, 0.2)
+    for conv in (scipy_sparse.csr_matrix, scipy_sparse.csc_matrix,
+                 scipy_sparse.coo_matrix):
+        op = linalg.SparseOp(conv(M))
+        assert op.nnz == int(np.count_nonzero(M))
+        X = jnp.ones((20, 3), jnp.float32)
+        np.testing.assert_allclose(np.asarray(op.matmat(X)), M @ np.ones((20, 3)),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_as_linop_detects_sparse_before_ndim():
+    """BCOO has ndim == 2 — the coercion must not fall through to DenseOp
+    (which would densify A on the first matmat)."""
+    M, _ = _sparse_pair(16, 12, 0.3)
+    assert isinstance(linalg.as_linop(jsparse.BCOO.fromdense(jnp.asarray(M))),
+                      linalg.SparseOp)
+    scipy_sparse = pytest.importorskip("scipy.sparse")
+    assert isinstance(linalg.as_linop(scipy_sparse.csr_matrix(M)),
+                      linalg.SparseOp)
+
+
+def test_sparseop_rejects_bad_inputs():
+    with pytest.raises(TypeError, match="BCOO"):
+        linalg.SparseOp(np.zeros((4, 4)))
+    with pytest.raises(ValueError, match="2-D"):
+        linalg.SparseOp(jsparse.BCOO.fromdense(jnp.zeros((2, 3, 4))))
+
+
+# ---------------------------------------------------------------------------
+# SpMM products match the densified matrix
+# ---------------------------------------------------------------------------
+
+def test_matmat_rmatmat_match_dense():
+    M, op = _sparse_pair(64, 48, 0.08, seed=1)
+    rng = np.random.default_rng(2)
+    X = jnp.asarray(rng.standard_normal((48, 7)).astype(np.float32))
+    Y = jnp.asarray(rng.standard_normal((64, 7)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(op.matmat(X)), M @ np.asarray(X),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(op.rmatmat(Y)), M.T @ np.asarray(Y),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_row_panels_stay_sparse_and_match_dense():
+    """The inherited basis-slice fallback covers A panel-by-panel through
+    nnz-proportional rmatmats — values equal the densified rows."""
+    M, op = _sparse_pair(50, 40, 0.1, seed=3)
+    panels = [np.asarray(p) for p in op.row_panels(16)]
+    assert [p.shape[0] for p in panels] == [16, 16, 16, 2]
+    np.testing.assert_allclose(np.concatenate(panels, axis=0), M,
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Block-ELL pack + the fused SpMM sketch kernel
+# ---------------------------------------------------------------------------
+
+def test_pack_block_ell_roundtrip():
+    from repro.kernels.spmm_sketch import pack_block_ell
+
+    M, op = _sparse_pair(40, 56, 0.05, seed=4)
+    data, tilecols = pack_block_ell(op.bcoo, 16, 8)
+    data, tilecols = np.asarray(data), np.asarray(tilecols)
+    assert data.shape[0] == -(-40 // 16) and data.shape[2:] == (16, 8)
+    # unpack: scatter every tile back at its (row block, column block)
+    dense = np.zeros((data.shape[0] * 16, -(-56 // 8) * 8), np.float32)
+    occupied = 0
+    for i in range(data.shape[0]):
+        for t in range(data.shape[1]):
+            c = tilecols[i, t]
+            assert not np.any(dense[i * 16:(i + 1) * 16, c * 8:(c + 1) * 8]
+                              * data[i, t])  # slots don't collide
+            dense[i * 16:(i + 1) * 16, c * 8:(c + 1) * 8] += data[i, t]
+            occupied += np.any(data[i, t] != 0)
+    np.testing.assert_array_equal(dense[:40, :56], M)
+    assert occupied > 0
+
+
+def test_pack_block_ell_rejects_dense_structure():
+    """max_fill: a dense matrix padded into block-ELL stores >= the dense
+    footprint — the pack must bail so the BCOO fallback runs instead."""
+    from repro.kernels.spmm_sketch import pack_block_ell
+
+    M = np.ones((32, 32), np.float32)
+    bcoo = jsparse.BCOO.fromdense(jnp.asarray(M))
+    assert pack_block_ell(bcoo, 8, 8, max_fill=0.5) is None
+    assert pack_block_ell(bcoo, 8, 8, max_fill=None) is not None
+
+
+def test_spmm_sketch_kernel_matches_materialized_omega():
+    """The fused kernel (counter-RNG Omega tiles generated in VMEM) computes
+    the same map as BCOO @ sketch_matrix — the RNG streams are bit-identical,
+    the summation order is not."""
+    M, op = _sparse_pair(70, 52, 0.07, seed=5)
+    for kind in ("gaussian", "rademacher"):
+        Y = np.asarray(op.sketch(9, seed=11, kind=kind))
+        omega = np.asarray(sketch_mod.sketch_matrix(52, 9, 11, kind))
+        np.testing.assert_allclose(Y, M @ omega, rtol=1e-4, atol=1e-4)
+
+
+def test_sparseop_sketch_structured_kinds_fall_back():
+    M, op = _sparse_pair(40, 32, 0.1, seed=6)
+    for kind in ("srht", "countsketch"):
+        Y = np.asarray(op.sketch(8, seed=3, kind=kind))
+        omega = np.asarray(sketch_mod.sketch_matrix(32, 8, 3, kind))
+        np.testing.assert_allclose(Y, M @ omega, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Planner: routing, nnz recording, and the SpMM traffic pricing
+# ---------------------------------------------------------------------------
+
+def test_plan_routes_sparse_and_prices_spmm():
+    _, op = _sparse_pair(256, 128, 0.05, seed=7)
+    pl = linalg.plan(op, 8)
+    assert pl.path == "sparse"
+    assert pl.nnz == op.nnz
+    assert pl.density == pytest.approx(op.density)
+    want = rsvd_model.sparse_predicted_hbm_bytes(
+        pl.m, pl.n, pl.s, pl.power_iters, pl.nnz,
+        fused_sketch=pl.fused_sketch, dtype_bytes=4,
+    )
+    assert pl.predicted_hbm_bytes == want
+
+
+def test_sparse_sketch_priced_10x_below_dense_at_one_percent():
+    """The acceptance property: at density 0.01 the sketch pass is priced
+    at least 10x below the dense model at the same shape."""
+    m, n, s = 2048, 1024, 26
+    nnz = int(0.01 * m * n)
+    sparse = rsvd_model.spmm_sketch_bytes(m, n, s, nnz, fused_sketch=False)
+    dense = rsvd_model.sketch_bytes(m, n, s, fused_sketch=False)
+    assert dense / sparse >= 10.0, dense / sparse
+
+
+def test_plan_accepts_explicit_nnz():
+    """Shape-only planning: nnz passed by the caller when no data exists."""
+    _, op = _sparse_pair(128, 96, 0.05, seed=8)
+    pl = linalg.plan(op, 8, nnz=100)
+    assert pl.nnz == 100
+    assert pl.density == pytest.approx(100 / (128 * 96))
+
+
+def test_composed_over_sparse_keeps_spmm_pricing():
+    """A CenteredOp over a SparseOp plans matfree, but every read of A is
+    still an SpMM — the peeled nnz prices the plan."""
+    _, op = _sparse_pair(200, 100, 0.05, seed=9)
+    pl = linalg.plan(linalg.CenteredOp(op, mu=jnp.zeros((100,), jnp.float32)), 8)
+    assert pl.path == "matfree"
+    assert pl.nnz == op.nnz
+    want = rsvd_model.sparse_predicted_hbm_bytes(
+        pl.m, pl.n, pl.s, pl.power_iters, pl.nnz,
+        fused_sketch=pl.fused_sketch, dtype_bytes=4,
+    )
+    assert pl.predicted_hbm_bytes == want
+
+
+def test_adaptive_sparse_schedule_uses_nnz_pricing():
+    _, op = _sparse_pair(192, 96, 0.05, seed=10)
+    pl = linalg.plan(op, linalg.Tolerance(1e-2, panel=16))
+    assert pl.path == "adaptive" and pl.nnz == op.nnz
+    want = rsvd_model.adaptive_schedule_bytes(
+        pl.m, pl.n, pl.rank_schedule, pl.power_iters,
+        dtype_bytes=4, fused_sketch=pl.fused_sketch, nnz=pl.nnz,
+    )
+    assert pl.schedule_hbm_bytes == want
+    assert pl.predicted_hbm_bytes == sum(want)
+    # nnz pricing is strictly below the dense pricing at this density
+    dense = rsvd_model.adaptive_schedule_bytes(
+        pl.m, pl.n, pl.rank_schedule, pl.power_iters,
+        dtype_bytes=4, fused_sketch=pl.fused_sketch,
+    )
+    assert sum(want) < sum(dense)
+
+
+# ---------------------------------------------------------------------------
+# decompose() over SparseOp: every kind, never densified
+# ---------------------------------------------------------------------------
+
+def test_decompose_kinds_run_on_sparse():
+    M, op = _sparse_pair(128, 64, 0.08, seed=11)
+    for kind in ("svd", "qb", "pca"):
+        dec = linalg.decompose(op, 6, kind=kind, seed=0)
+        assert dec.rank == 6
+    psd = M.T @ M
+    psd_op = linalg.SparseOp(jsparse.BCOO.fromdense(jnp.asarray(psd)))
+    dec = linalg.decompose(psd_op, 6, kind="eigh", seed=0)
+    w, V = dec.factors
+    np.testing.assert_allclose(np.asarray(w),
+                               np.linalg.eigvalsh(psd)[::-1][:6],
+                               rtol=5e-2, atol=1e-3)
+    assert V.shape == (64, 6)
+
+
+def test_sparse_svd_matches_dense_on_densified(seed=0):
+    """The satellite contract: SparseOp results match DenseOp on the
+    densified matrix at a fixed seed for the non-fused path (both run the
+    stabilized CQR2 variant; the sparse path is the operator body)."""
+    M, op = _sparse_pair(160, 80, 0.1, seed=12)
+    cfg = RSVDConfig(power_scheme="stabilized", qr_method="cqr2")
+    Us, Ss, Vts = linalg.svd(op, 6, seed=seed)
+    Ud, Sd, Vtd = linalg.svd(linalg.DenseOp(jnp.asarray(M)), 6, seed=seed,
+                             overrides=cfg)
+    np.testing.assert_allclose(np.asarray(Ss), np.asarray(Sd), rtol=1e-4)
+    # factors agree up to per-column sign
+    for Xs, Xd, axis in ((Us, Ud, 0), (Vts.T, Vtd.T, 0)):
+        dots = np.sum(np.asarray(Xs) * np.asarray(Xd), axis=axis)
+        np.testing.assert_allclose(np.abs(dots), 1.0, atol=1e-3)
+
+
+def test_sparse_eigvals_runs_matfree():
+    _, op = _sparse_pair(96, 96, 0.1, seed=13)
+    s = linalg.eigvals(op, 4, seed=0)
+    assert s.shape == (4,) and bool(jnp.all(s >= 0))
+
+
+def test_sparse_tolerance_decompose_meets_eps():
+    """Adaptive growth over a sparse low-rank-plus-noise source certifies
+    the tolerance without ever densifying A."""
+    rng = np.random.default_rng(14)
+    L = (rng.standard_normal((200, 5)) @ rng.standard_normal((5, 100))).astype(np.float32)
+    mask = rng.random((200, 100)) < 0.05
+    M = np.where(mask, L, 0.0)
+    op = linalg.SparseOp(jsparse.BCOO.fromdense(jnp.asarray(M)))
+    dec = linalg.decompose(op, linalg.Tolerance(2e-2, panel=8), seed=1)
+    achieved = float(linalg.residual(op, dec.factors))
+    assert achieved <= 2e-2, achieved
+
+
+# ---------------------------------------------------------------------------
+# Operator-layer bugfix regression: the row_panels fallback (satellite 1)
+# ---------------------------------------------------------------------------
+
+class _ProtocolOnlyOp(linalg.LinOp):
+    """Minimal LinOp with ONLY matmat/rmatmat — exercises the default
+    row_panels fallback (no .array, no override)."""
+
+    def __init__(self, a):
+        self._a = jnp.asarray(a)
+
+    @property
+    def shape(self):
+        return tuple(self._a.shape)
+
+    @property
+    def dtype(self):
+        return self._a.dtype
+
+    def matmat(self, X):
+        return self._a @ X
+
+    def rmatmat(self, Y):
+        return self._a.T @ Y
+
+
+def test_row_panels_fallback_bit_identical_to_rows():
+    """The sliced-basis construction must reproduce A's rows EXACTLY: the
+    basis entries are exact 0/1, so each rmatmat selects rows bit-for-bit
+    (no scatter, no roundoff)."""
+    rng = np.random.default_rng(15)
+    A = jnp.asarray(rng.standard_normal((37, 24)).astype(np.float32))
+    op = _ProtocolOnlyOp(A)
+    got = [np.asarray(p) for p in op.row_panels(10)]
+    assert [p.shape for p in got] == [(10, 24), (10, 24), (10, 24), (7, 24)]
+    np.testing.assert_array_equal(np.concatenate(got, axis=0), np.asarray(A))
+
+
+def test_row_panels_fallback_avoids_scatter():
+    """The panel basis is built without gather/scatter ops — the fix
+    replaced a per-panel m-sized scatter with an offset-diagonal eye."""
+    op = _ProtocolOnlyOp(jnp.ones((64, 8), jnp.float32))
+
+    def one_panel():
+        return next(iter(op.row_panels(16)))
+
+    jaxpr = str(jax.make_jaxpr(one_panel)())
+    assert "scatter" not in jaxpr, jaxpr
