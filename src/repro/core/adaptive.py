@@ -154,6 +154,19 @@ def _deflate(Y: jax.Array, Q: Optional[jax.Array]) -> jax.Array:
     return _deflate_step(Y, Q)
 
 
+def _record_step_finite(step: int, Bp: jax.Array) -> None:
+    """Guard probe: per-growth-step finiteness of the projection panel (a
+    reduction over bytes the estimator reads anyway).  Reached through
+    sys.modules so this module still imports nothing from repro.linalg —
+    if the guard was never imported, no sink can be active."""
+    import sys
+
+    g = sys.modules.get("repro.linalg.guard")
+    sink = None if g is None else g.active_sink()
+    if sink is not None:
+        sink.record_panel(step, jnp.isfinite(Bp).all())
+
+
 def _overlap_tol(fdtype) -> float:
     """Max tolerable |Q^T Q_p| entry after re-orthogonalization.  A healthy
     CGS2 pass lands at O(eps); an entry near sqrt(eps) means the deflated
@@ -229,6 +242,7 @@ def adaptive_qb(
                     # residual for this dtype)
                     break
             Bp = op.rmatmat(Qp).T                       # b x n, no read of Q
+            _record_step_finite(step, Bp)
             if track:
                 Bpf = Bp.astype(fdtype)
                 remaining = max(0.0, remaining - float(jnp.sum(Bpf * Bpf)))

@@ -177,24 +177,36 @@ def streamed_sketch(
 # Blocked CholeskyQR2 — the panel-sum twin of the distributed Gram all-reduce
 # ---------------------------------------------------------------------------
 
-def _blocked_cholesky_qr(Y_panels: Sequence[jax.Array], G: jax.Array | None = None):
+def _blocked_gram(Y_panels: Sequence[jax.Array], G: jax.Array | None = None):
+    """The panel-summed Gram G = Σ YpᵀYp (reusing a caller-supplied one)."""
+    if G is not None:
+        return G
+    backend = qr_mod.active_kernel_backend()
+    for Yp in Y_panels:
+        G = qr_mod.gram(Yp) if G is None else _gram_accum(G, Yp, backend=backend)
+    return G
+
+
+def _blocked_cholesky_qr(Y_panels: Sequence[jax.Array], G: jax.Array | None = None,
+                         shift=0.0, record_ortho: bool = False):
     """One CholeskyQR pass over a row-panel-split Y. Returns (Q_panels, R).
 
     The per-panel Gram and the R⁻¹ application go through the active kernel
     backend (qr.kernel_backend): "pallas" routes them to the SYRK and TRSM
     kernels, exactly as the dense and distributed paths do.  ``G`` lets the
     caller pass an already-reduced Gram (the sketch_gram epilogue) so the
-    first pass skips re-reading every panel."""
+    first pass skips re-reading every panel.  ``record_ortho`` feeds the
+    accumulated Gram to the guard's orthogonality probe (set on a CQR2
+    second pass, where G *is* ||Q1ᵀQ1 - I|| + I — a free byproduct)."""
     dtype = Y_panels[0].dtype
-    if G is None:
-        backend = qr_mod.active_kernel_backend()
-        G = None
-        for Yp in Y_panels:
-            G = qr_mod.gram(Yp) if G is None else _gram_accum(G, Yp, backend=backend)
+    G = _blocked_gram(Y_panels, G)
     # Factor and solve at >= fp32 (LAPACK has no bf16 Cholesky/TRSM), then
     # cast Q back so the panel dtype — and the assembled U — is preserved.
     fdtype = jnp.promote_types(dtype, jnp.float32)
-    R = qr_mod.cholesky_r_from_gram(G.astype(fdtype))
+    Gf = G.astype(fdtype)
+    if record_ortho:
+        qr_mod.record_ortho_gram(Gf)
+    R = qr_mod.cholesky_r_from_gram(Gf, shift)
     Q_panels = [
         qr_mod.tri_solve_right(Yp.astype(fdtype), R).astype(dtype) for Yp in Y_panels
     ]
@@ -205,8 +217,35 @@ def _blocked_cholesky_qr2(Y_panels: Sequence[jax.Array], G1: jax.Array | None = 
     """CholeskyQR2 on panels: O(eps) orthogonality for kappa(Y) <~ eps^-1/2,
     touching each panel twice and reducing only s x s Grams."""
     Q1, R1 = _blocked_cholesky_qr(Y_panels, G1)
-    Q, R2 = _blocked_cholesky_qr(Q1)
+    Q, R2 = _blocked_cholesky_qr(Q1, record_ortho=True)
     return Q, R2 @ R1
+
+
+def _blocked_cholesky_qr3(Y_panels: Sequence[jax.Array], G1: jax.Array | None = None):
+    """Shifted CholeskyQR3 on panels — the streamed twin of
+    `qr.shifted_cholesky_qr3` (kappa(Y) up to ~1/eps), which the guard's
+    retry ladder escalates to when a streamed CQR2 pass breaks down.
+
+    The Fukaya et al. 2020 shift needs only ||Y||_F^2 = trace(G) — free
+    from the Gram the first pass accumulates anyway, so the shifted pass
+    still touches each panel exactly once."""
+    m = sum(int(Yp.shape[0]) for Yp in Y_panels)
+    G1 = _blocked_gram(Y_panels, G1)
+    s = G1.shape[0]
+    fdtype = jnp.promote_types(Y_panels[0].dtype, jnp.float32)
+    eps = jnp.finfo(fdtype).eps
+    shift = 11.0 * (m * s + s * (s + 1)) * eps * jnp.trace(G1.astype(fdtype))
+    Q0, R0 = _blocked_cholesky_qr(Y_panels, G1, shift=shift)
+    Q, R21 = _blocked_cholesky_qr2(Q0)
+    return Q, R21 @ R0
+
+
+def _panel_orthonormalizer(cfg: RSVDConfig):
+    """The panel-split orthonormalizer for this config: CQR2 unless the
+    plan (or the guard ladder, via a replaced plan) asks for the shifted
+    CQR3.  Householder has no row-panel-split form — the ladder skips it
+    for streamed plans and goes straight to the f64 recompute."""
+    return _blocked_cholesky_qr3 if cfg.qr_method == "cqr3" else _blocked_cholesky_qr2
 
 
 # ---------------------------------------------------------------------------
@@ -286,6 +325,7 @@ def _blocked_body(panels, k: int, s: int, cfg: RSVDConfig, seed, dtype):
     # accumulators below are donated per panel (_accum_xty): one n x s (or
     # s x n) HBM buffer carries the whole pass instead of a fresh
     # allocation per panel, and the summation order is unchanged.
+    _panel_orth = _panel_orthonormalizer(cfg)
     for _ in range(cfg.power_iters):
         if cfg.power_scheme == "plain":
             Z = None
@@ -293,7 +333,7 @@ def _blocked_body(panels, k: int, s: int, cfg: RSVDConfig, seed, dtype):
                 Z = Ap.T @ Yp if Z is None else _accum_xty(Z, Ap, Yp)
             Y = [Ap @ Z for Ap in panels()]
         else:
-            Q, _ = _blocked_cholesky_qr2(Y, G1)
+            Q, _ = _panel_orth(Y, G1)
             Z = None
             for Ap, Qp in zip(panels(), Q):
                 Z = Ap.T @ Qp if Z is None else _accum_xty(Z, Ap, Qp)
@@ -302,7 +342,7 @@ def _blocked_body(panels, k: int, s: int, cfg: RSVDConfig, seed, dtype):
         G1 = None  # Y was replaced; the sketch-pass Gram no longer matches
 
     # Step 3: orthonormal range basis, panel-split.
-    Q, _ = _blocked_cholesky_qr2(Y, G1)
+    Q, _ = _panel_orth(Y, G1)
 
     # Step 4: B = Q^T A through the s x n accumulator (donated per panel).
     B = None
@@ -333,6 +373,25 @@ def eigvals_streamed(
 def _batched_tall(A: jax.Array, seeds: jax.Array, k: int, cfg: RSVDConfig):
     with qr_mod.kernel_backend(cfg.kernel_backend):
         return jax.vmap(lambda a, sd: _rsvd_body(a, k, cfg, sd))(A, seeds)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "cfg", "fault_key"))
+def _batched_tall_probed(A: jax.Array, seeds: jax.Array, k: int,
+                         cfg: RSVDConfig, fault_key=()):
+    """Guarded twin of `_batched_tall`: same body traced under an open
+    guard sink; the per-slice probe scalars come back batched as extra jit
+    outputs and the driver max/any-reduces them (guard.absorb).  See
+    rsvd._randomized_svd_dense_probed for the fault_key cache contract."""
+    del fault_key
+    from repro.linalg import guard as guard_mod
+
+    def one(a, sd):
+        with guard_mod.collecting() as sink:
+            out = _rsvd_body(a, k, cfg, sd)
+        return out, sink.traced()
+
+    with qr_mod.kernel_backend(cfg.kernel_backend):
+        return jax.vmap(one)(A, seeds)
 
 
 def svd_batched(
@@ -368,6 +427,13 @@ def svd_batched(
         cfg = dataclasses.replace(cfg, fused_power=False, block_rows=None,
                                   pipeline_depth=None)
     seeds = jnp.uint32(seed) + jnp.arange(A.shape[0], dtype=jnp.uint32)
+    from repro.linalg import faults as faults_mod, guard as guard_mod
+
+    if guard_mod.active_sink() is not None:
+        out, probes = _batched_tall_probed(A, seeds, k, cfg,
+                                           faults_mod.fingerprint())
+        guard_mod.absorb(probes)
+        return out
     return _batched_tall(A, seeds, k, cfg)
 
 

@@ -14,13 +14,20 @@ Numerical contract (Yamamoto et al. 2015; Fukaya et al. 2020):
     shift on the first pass to keep the Gram matrix positive definite).
 
 The randomized range finder with power/subspace iteration produces Y with
-modest condition number, so CQR2 is the right default; CQR3 is the safe
-fallback selected automatically when the Cholesky factor shows loss of
-positivity.
+modest condition number, so CQR2 is the right default.  Nothing HERE falls
+back automatically: each function computes exactly the variant it names.
+Breakdown detection and escalation (cqr2 -> shifted cqr3 -> householder ->
+f64 recompute) live in the guard layer — `linalg/guard.py`, driven by the
+`GuardPolicy` on an `ExecutionPlan`.  When a guard probe sink is active,
+`cholesky_r_from_gram` records a breakdown flag (non-finite / non-positive
+Cholesky diagonal) and a condition proxy from the factor's diagonal ratio,
+and `cholesky_qr2` records ||Q1ᵀQ1 - I||_F from its second Gram — all
+byproducts the algorithm already computes.
 """
 from __future__ import annotations
 
 import contextlib
+import sys
 from typing import Literal, Tuple
 
 import jax
@@ -100,6 +107,34 @@ _gram = gram
 _tri_solve_right = tri_solve_right
 
 
+# ---------------------------------------------------------------------------
+# Guard probes.  core/ must not import repro.linalg at module load (cycle:
+# linalg imports core), so the sink is reached through sys.modules — if the
+# guard module was never imported, no sink can possibly be active and the
+# probes cost one dict lookup.
+# ---------------------------------------------------------------------------
+
+
+def _guard_sink():
+    g = sys.modules.get("repro.linalg.guard")
+    return None if g is None else g.active_sink()
+
+
+def _faults_mod():
+    return sys.modules.get("repro.linalg.faults")
+
+
+def record_ortho_gram(G: jax.Array) -> None:
+    """Record ||G - I||_F^2 of an orthonormality Gram (G = QᵀQ) into the
+    active guard sink, if any.  Called where the algorithm has ALREADY
+    computed G — CQR2's second pass here, the accumulated second-pass Gram
+    in core/blocked.py — so report mode adds reductions only, never a GEMM."""
+    sink = _guard_sink()
+    if sink is not None:
+        D = G - jnp.eye(G.shape[0], dtype=G.dtype)
+        sink.record_ortho_sq(jnp.sum(D * D))
+
+
 def cholesky_r_from_gram(G: jax.Array, shift: jax.Array | float = 0.0) -> jax.Array:
     """Upper-triangular R from an already-reduced Gram matrix G = Y^T Y.
 
@@ -116,13 +151,32 @@ def cholesky_r_from_gram(G: jax.Array, shift: jax.Array | float = 0.0) -> jax.Ar
     second CQR2 pass restores orthogonality to O(eps) regardless.  Deficient
     directions come out as tiny-norm columns that the downstream small-SVD
     sorts last — mirroring LAPACK's rank-revealing behavior.
+
+    The floor CANNOT rescue a non-finite Gram (poisoned input, f32
+    overflow), and it rescues a kappa^2 >~ 1/eps Gram only *finitely* —
+    the resulting R is garbage.  Under an active guard sink this is made
+    detectable: the factor diagonal's finiteness/positivity becomes the
+    breakdown flag and its max/min ratio (squared) the condition proxy,
+    both free byproducts of the factor itself.
     """
     s = G.shape[0]
+    sink = _guard_sink()
+    if sink is not None:
+        flt = _faults_mod()
+        if flt is not None:
+            G = flt.poison_gram(G)  # forced-breakdown fault (guarded runs only)
     eps = jnp.finfo(G.dtype).eps
     floor = (s * eps) * (jnp.trace(G) / s + eps)
     total_shift = jnp.maximum(jnp.asarray(shift, G.dtype), floor.astype(G.dtype))
     G = G + total_shift * jnp.eye(s, dtype=G.dtype)
     L = jnp.linalg.cholesky(G)  # lower
+    if sink is not None:
+        d = jnp.diagonal(L)
+        sink.record_breakdown(~(jnp.all(jnp.isfinite(d)) & jnp.all(d > 0)))
+        a = jnp.abs(d)
+        # diag(L)^2 are the pivots of G: their spread lower-bounds kappa(G)
+        # = kappa(Y)^2
+        sink.record_cond((jnp.max(a) / jnp.min(a)) ** 2)
     return L.T
 
 
@@ -136,9 +190,17 @@ def cholesky_qr(Y: jax.Array, shift: jax.Array | float = 0.0) -> Tuple[jax.Array
 
 
 def cholesky_qr2(Y: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """CholeskyQR2: two passes; R = R2 @ R1."""
+    """CholeskyQR2: two passes; R = R2 @ R1.
+
+    The second pass's Gram G2 = Q1ᵀQ1 *is* the first pass's orthogonality
+    residual (||G2 - I||_F ~ kappa(Y)^2 eps) — recorded into the guard sink
+    when one is active, at no extra GEMM.  Op-for-op identical to the
+    historical two-call form (guard off pins bit-identity)."""
     Q1, R1 = cholesky_qr(Y)
-    Q, R2 = cholesky_qr(Q1)
+    G2 = gram(Q1)
+    record_ortho_gram(G2)
+    R2 = cholesky_r_from_gram(G2)
+    Q = tri_solve_right(Q1, R2)
     return Q, R2 @ R1
 
 

@@ -194,7 +194,9 @@ def _cqr2_factor(Y: jax.Array, G1: jax.Array | None):
         G1 = qr_mod.gram(Y)
     R1 = qr_mod.cholesky_r_from_gram(G1.astype(Y.dtype))
     Q1 = qr_mod.tri_solve_right(Y, R1)
-    R2 = qr_mod.cholesky_r_from_gram(qr_mod.gram(Q1).astype(Y.dtype))
+    G2 = qr_mod.gram(Q1).astype(Y.dtype)
+    qr_mod.record_ortho_gram(G2)  # first-pass health probe, free byproduct
+    R2 = qr_mod.cholesky_r_from_gram(G2)
     return Q1, R2, R2 @ R1
 
 
@@ -295,6 +297,32 @@ def _randomized_svd_dense(
             V, S, Ut = _rsvd_body(A.T, k, cfg, seed)
             return Ut.T, S, V.T
         return _rsvd_body(A, k, cfg, seed)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "cfg", "fault_key"))
+def _randomized_svd_dense_probed(
+    A: jax.Array, seed: jax.Array, k: int, cfg: RSVDConfig, fault_key=()
+) -> Tuple[Tuple[jax.Array, jax.Array, jax.Array], dict]:
+    """Guarded compiled twin of `_randomized_svd_dense`: traces the SAME
+    body under an open guard probe sink and returns (factors, probes) —
+    the probes (breakdown / ortho / cond scalars, see linalg/guard.py) are
+    extra jit outputs the driver folds back into its own sink.
+
+    `fault_key` (= linalg.faults.fingerprint(), static) keys the compile
+    cache on the active fault set so a fault-injected trace can never
+    shadow a clean entry.  The unprobed twin keeps its own cache untouched,
+    so guard `off` stays bit-identical and re-trace-free."""
+    del fault_key
+    from repro.linalg import guard as guard_mod
+
+    with qr_mod.kernel_backend(cfg.kernel_backend), guard_mod.collecting() as sink:
+        m, n = A.shape
+        if m < n:
+            V, S, Ut = _rsvd_body(A.T, k, cfg, seed)
+            out = (Ut.T, S, V.T)
+        else:
+            out = _rsvd_body(A, k, cfg, seed)
+    return out, sink.traced()
 
 
 def _as_plannable(A):

@@ -28,7 +28,10 @@ from repro.linalg.operators import (  # noqa: F401
     deflated,
     prefetch_panels,
 )
+from repro.linalg import faults  # noqa: F401
+from repro.linalg import guard  # noqa: F401
 from repro.linalg import pipeline  # noqa: F401
+from repro.linalg.guard import GuardPolicy, HealthReport  # noqa: F401
 from repro.linalg.planner import Budget, ExecutionPlan  # noqa: F401
 from repro.linalg.registry import DecompositionKind, kinds, register  # noqa: F401
 from repro.linalg.spec import Energy, Rank, Spec, Tolerance, as_spec  # noqa: F401

@@ -34,6 +34,8 @@ import jax.numpy as jnp
 from repro.core import qr as qr_mod
 from repro.core import sketch as sketch_mod
 from repro.core.rsvd import RSVDConfig
+from repro.linalg import faults as faults_mod
+from repro.linalg import guard as guard_mod
 from repro.linalg import pipeline as pipeline_mod
 from repro.linalg import planner as planner_mod
 from repro.linalg import registry as registry_mod
@@ -46,18 +48,22 @@ SVDResult = Tuple[jax.Array, jax.Array, jax.Array]
 
 def plan(op, spec, budget: Optional[Budget] = None,
          overrides: Optional[RSVDConfig] = None, kind: str = "svd",
-         nnz: Optional[int] = None) -> ExecutionPlan:
+         nnz: Optional[int] = None, guard=None,
+         validate: bool = False) -> ExecutionPlan:
     """See planner.plan — re-exported as part of the facade.
 
     Mirrors `decompose`'s source preparation (e.g. kind="pca" wraps in
     CenteredOp) so a plan built here describes the operator that will
-    actually execute when pinned via `decompose(..., plan=pl)`."""
+    actually execute when pinned via `decompose(..., plan=pl)`.  `guard`
+    ("off" | "report" | "retry" or a GuardPolicy) and `validate` set the
+    guarded-execution fields — linalg/guard.py."""
     entry = registry_mod.get(kind)
     op = as_linop(op)
     if entry.prepare is not None:
         op = entry.prepare(op)
     return planner_mod.plan(op, spec, budget=budget, overrides=overrides,
-                            kind=kind, nnz=nnz)
+                            kind=kind, nnz=nnz, guard=guard,
+                            validate=validate)
 
 
 # ---------------------------------------------------------------------------
@@ -73,7 +79,9 @@ class Decomposition:
     for pca — and the object unpacks like that tuple.  `plan` carries the
     PLANNED rank schedule; `rank_history` is the prefix that actually ran
     (adaptive solves stop early), and `err_history` the posterior relative-
-    error estimate after each growth panel."""
+    error estimate after each growth panel.  `health` is the guard's
+    HealthReport when the plan's GuardPolicy is "report" or "retry"
+    (linalg/guard.py) and None under guard "off"."""
 
     kind: str
     spec: Spec
@@ -82,6 +90,7 @@ class Decomposition:
     factors: tuple
     rank_history: Tuple[int, ...]
     err_history: Tuple[float, ...]
+    health: Optional[guard_mod.HealthReport] = None
 
     def __iter__(self):
         return iter(self.factors)
@@ -102,13 +111,21 @@ def decompose(
     overrides: Optional[RSVDConfig] = None,
     budget: Optional[Budget] = None,
     seed: int = 0,
+    guard=None,
+    validate: Optional[bool] = None,
 ) -> Decomposition:
     """Factorize `a` to the accuracy `spec` with the registry entry `kind`.
 
     `spec` is a rank (int / `Rank`) or an adaptive accuracy contract
     (`Tolerance`, `Energy`); `kind` is one of `registry.kinds()` —
     "svd" | "eigh" | "qb" | "lu" | "pca".  Rank-spec svd is bit-identical
-    to `linalg.svd(a, k)` at fixed seed (same plan, same executors)."""
+    to `linalg.svd(a, k)` at fixed seed (same plan, same executors).
+
+    `guard` / `validate` (linalg/guard.py): explicit arguments win over a
+    pinned plan's fields; None inherits them.  Under guard "report" /
+    "retry" the result's `health` carries the probe verdict (and the
+    ladder trail for retry); `validate=True` screens non-finite input
+    before factors can silently go NaN."""
     spec = as_spec(spec)
     entry = registry_mod.get(kind)
     op = as_linop(a)
@@ -122,9 +139,24 @@ def decompose(
             "re-plan with linalg.plan(a, spec, kind=kind)"
         )
     pl = plan if plan is not None else planner_mod.plan(
-        op, spec, budget=budget, overrides=overrides, kind=kind
+        op, spec, budget=budget, overrides=overrides, kind=kind,
+        guard=guard, validate=bool(validate),
     )
-    factors, rank, rank_history, err_history = entry.execute(op, spec, pl, seed)
+    pl = _with_guard_overrides(pl, guard, validate, pinned=plan is not None)
+    with guard_mod.validated(op, pl.validate):
+        if pl.guard.mode != "off":
+            ortho = None
+            if entry.ortho_factor is not None:
+                ortho = lambda res: entry.ortho_factor(res[0])  # noqa: E731
+            result, health = guard_mod.run_guarded(
+                lambda op_, pl_, seed_: entry.execute(op_, spec, pl_, seed_),
+                op, pl, seed, ortho_factor=ortho,
+            )
+            factors, rank, rank_history, err_history = result
+        else:
+            health = None
+            factors, rank, rank_history, err_history = entry.execute(
+                op, spec, pl, seed)
     return Decomposition(
         kind=kind,
         spec=spec,
@@ -133,7 +165,27 @@ def decompose(
         factors=tuple(factors),
         rank_history=tuple(rank_history),
         err_history=tuple(err_history),
+        health=health,
     )
+
+
+def _with_guard_overrides(pl: ExecutionPlan, guard, validate,
+                          pinned: bool) -> ExecutionPlan:
+    """Apply explicit guard/validate arguments over a plan's fields.
+
+    Only meaningful for PINNED plans (a fresh plan was already built with
+    them); neither field changes a healthy solve's numerics, so replacing
+    them on a pinned plan cannot invalidate its execution decisions."""
+    if not pinned:
+        return pl
+    import dataclasses
+
+    updates = {}
+    if guard is not None:
+        updates["guard"] = guard_mod.as_guard(guard)
+    if validate is not None:
+        updates["validate"] = bool(validate)
+    return dataclasses.replace(pl, **updates) if updates else pl
 
 
 def _dense_array(op: LinOp) -> jax.Array:
@@ -150,16 +202,34 @@ def svd(
     overrides: Optional[RSVDConfig] = None,
     budget: Optional[Budget] = None,
     seed: int = 0,
+    guard=None,
+    validate: Optional[bool] = None,
 ) -> SVDResult:
     """Rank-k randomized SVD of any operator source.  Returns (U, S, Vt)
     with U: m x k, S: k, Vt: k x n (leading batch axis for StackedOp).
 
     This is the `Rank(k)`-spec thin wrapper: `decompose(a, Rank(k))` runs
-    the SAME plan and executors, bit-identical at fixed seed."""
+    the SAME plan and executors, bit-identical at fixed seed.
+
+    Guarded execution: `guard="retry"` (or a guard-carrying plan) recovers
+    breakdowns through the escalation ladder but this wrapper returns the
+    bare factor tuple — use `decompose(a, k, guard=...)` when you want the
+    HealthReport itself."""
     k = _fixed_rank(k, "svd")
     op = as_linop(a)
-    pl = plan if plan is not None else planner_mod.plan(op, k, budget=budget, overrides=overrides)
-    return _execute_svd_plan(op, k, pl, seed)
+    pl = plan if plan is not None else planner_mod.plan(
+        op, k, budget=budget, overrides=overrides, guard=guard,
+        validate=bool(validate))
+    pl = _with_guard_overrides(pl, guard, validate, pinned=plan is not None)
+    with guard_mod.validated(op, pl.validate):
+        if pl.guard.mode != "off":
+            result, _health = guard_mod.run_guarded(
+                lambda op_, pl_, seed_: _execute_svd_plan(op_, k, pl_, seed_),
+                op, pl, seed,
+                ortho_factor=lambda res: None if getattr(res[0], "ndim", 2) == 3 else res[0],
+            )
+            return result
+        return _execute_svd_plan(op, k, pl, seed)
 
 
 def _fixed_rank(k, entry: str) -> int:
@@ -186,9 +256,17 @@ def _execute_svd_plan(op: LinOp, k: int, pl: ExecutionPlan, seed) -> SVDResult:
     if pl.path == "dense":
         from repro.core import rsvd as rsvd_mod
 
-        return rsvd_mod._randomized_svd_dense(
-            _dense_array(op), jnp.asarray(seed, jnp.uint32), k, cfg
-        )
+        A = _dense_array(op)
+        seed_arr = jnp.asarray(seed, jnp.uint32)
+        if guard_mod.active_sink() is not None:
+            # guarded run: the probed compiled twin returns the health
+            # scalars as extra jit outputs (the unguarded program and its
+            # cache entry are untouched — guard "off" stays bit-identical)
+            out, probes = rsvd_mod._randomized_svd_dense_probed(
+                A, seed_arr, k, cfg, faults_mod.fingerprint())
+            guard_mod.absorb(probes)
+            return out
+        return rsvd_mod._randomized_svd_dense(A, seed_arr, k, cfg)
     if pl.path == "streamed":
         from repro.core import blocked
 

@@ -1,0 +1,166 @@
+"""Fault injection for guarded-execution testing.
+
+A context-manager registry of injectable faults, modelling the failure
+modes the guard layer (guard.py) must detect and recover from:
+
+  - ``nan_panel``          a produced source panel carries a NaN (the
+                           "poisoned upload" model) — caught by the
+                           per-panel finiteness probe / ``validate=``.
+  - ``corrupt_transfer``   a staged host->device buffer is garbled in
+                           place before the DMA (wrong bytes moved) —
+                           caught downstream by the Gram/breakdown probes.
+  - ``flaky_link``         ``jax.device_put`` on the staging path raises
+                           :class:`TransferError` — absorbed by the
+                           pipeline's bounded retry-with-backoff, which
+                           degrades to the synchronous walk when the link
+                           stays down.
+  - ``cholesky_breakdown`` the Gram matrix handed to
+                           ``qr.cholesky_r_from_gram`` gets a non-finite
+                           entry, which the floor shift cannot rescue, so
+                           the Cholesky diagonal goes NaN — this is the
+                           forced-breakdown trigger for the retry ladder.
+
+Trace-time safety contract: hooks that run *inside* jit-traced code
+(``poison_gram``) are consulted only while a guard probe sink is active,
+and the guarded compiled twins take :func:`fingerprint` as a static jit
+argument.  Unguarded jitted programs therefore never trace with a fault
+baked in, and a faulted trace can never shadow a clean cache entry.
+:func:`fingerprint` includes per-fault firing counts, so a ``times``-limited
+fault that fired at trace time forces a re-trace (without the fault) on
+the next call instead of silently replaying the poisoned program.
+
+Only stdlib + jax/numpy imports here: ``core/qr.py`` and ``pipeline.py``
+reach this module via ``sys.modules`` / lazy imports, and nothing in
+``repro.linalg`` may be imported at the top level (cycle hazard).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import jax.numpy as jnp
+
+KINDS = ("nan_panel", "corrupt_transfer", "flaky_link", "cholesky_breakdown")
+
+
+class TransferError(RuntimeError):
+    """Injected host->device transfer failure (``flaky_link``)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One active fault.
+
+    ``panel`` targets a single panel ordinal (None = every panel; ignored
+    by ``cholesky_breakdown``).  ``times`` bounds how often the fault
+    fires (None = unlimited; ``flaky_link`` defaults to 1 so the retry
+    path is exercised rather than the degrade path).
+    """
+
+    kind: str
+    panel: Optional[int] = None
+    times: Optional[int] = None
+
+
+_active: List[Fault] = []
+_fired: Dict[int, int] = {}
+
+
+@contextlib.contextmanager
+def inject(kind: str, panel: Optional[int] = None,
+           times: Optional[int] = None) -> Iterator[Fault]:
+    """Activate one fault for the duration of the ``with`` block."""
+    if kind not in KINDS:
+        raise ValueError(f"unknown fault kind {kind!r}; expected one of {KINDS}")
+    if times is None and kind == "flaky_link":
+        times = 1
+    fault = Fault(kind, panel, times)
+    _active.append(fault)
+    _fired[id(fault)] = 0
+    try:
+        yield fault
+    finally:
+        _active.remove(fault)
+        _fired.pop(id(fault), None)
+
+
+def any_active() -> bool:
+    return bool(_active)
+
+
+def fingerprint() -> Tuple:
+    """Hashable key of the active fault set, including firing counts.
+
+    Passed as a static argument to the guarded ("probed") jit twins so
+    fault state participates in the compile cache key (see module
+    docstring for why the counts matter).
+    """
+    return tuple((f.kind, f.panel, f.times, _fired[id(f)]) for f in _active)
+
+
+def _matches(fault: Fault, kind: str, idx: Optional[int] = None) -> bool:
+    if fault.kind != kind:
+        return False
+    if fault.panel is not None and idx is not None and fault.panel != idx:
+        return False
+    if fault.times is not None and _fired[id(fault)] >= fault.times:
+        return False
+    return True
+
+
+def _fire(fault: Fault) -> None:
+    _fired[id(fault)] += 1
+
+
+def poison_panel(idx: int, panel):
+    """``nan_panel``: overwrite one element of a produced panel with NaN."""
+    if not _active:
+        return panel
+    for fault in list(_active):
+        if _matches(fault, "nan_panel", idx):
+            _fire(fault)
+            panel = jnp.asarray(panel)
+            panel = panel.reshape(-1).at[0].set(jnp.nan).reshape(panel.shape)
+    return panel
+
+
+def corrupt_staged(idx: int, buf) -> None:
+    """``corrupt_transfer``: garble the staged host buffer in place.
+
+    Fills with a large finite value so an f32 Gram overflows to inf and
+    the Cholesky breakdown probe (not the finiteness probe) catches it.
+    """
+    if not _active:
+        return
+    for fault in list(_active):
+        if _matches(fault, "corrupt_transfer", idx):
+            _fire(fault)
+            if buf.dtype.kind == "f":
+                buf[...] = 1.0e30
+
+
+def maybe_fail_transfer(idx: int) -> None:
+    """``flaky_link``: raise :class:`TransferError` before a device_put."""
+    if not _active:
+        return
+    for fault in list(_active):
+        if _matches(fault, "flaky_link", idx):
+            _fire(fault)
+            raise TransferError(
+                f"injected flaky host->device link at panel {idx}")
+
+
+def poison_gram(G):
+    """``cholesky_breakdown``: non-finite Gram entry (guarded runs only).
+
+    Callers gate this on an active guard sink — see the trace-time safety
+    contract in the module docstring.
+    """
+    if not _active:
+        return G
+    for fault in list(_active):
+        if _matches(fault, "cholesky_breakdown"):
+            _fire(fault)
+            G = G.at[0, 0].set(jnp.nan)
+    return G

@@ -1,0 +1,525 @@
+"""Guarded execution: numerical-health probes + the breakdown retry ladder.
+
+The paper's speed story rests on CholeskyQR-family orthonormalization,
+which is exactly the piece that breaks on real traffic: CQR2 loses
+orthogonality past kappa(Y) ~ eps^{-1/2} (~4e3 in f32), and the floor
+shift in ``qr.cholesky_r_from_gram`` silently rescues the factorization
+with a garbage R.  This module makes that failure *observable* (report
+mode) and *recoverable* (retry mode) without touching the fast path:
+
+``GuardPolicy`` (off | report | retry) rides on ``ExecutionPlan``:
+
+- ``off``     nothing is probed; execution is bit-identical to a plan
+              without a guard (the probes literally never run — probe
+              call sites check for an active sink first).
+- ``report``  health probes are collected from byproducts already
+              resident — the CQR2 second Gram, the Cholesky factor's
+              diagonal, streamed panels already on device — so no extra
+              pass over A is made, and a ``HealthReport`` rides on the
+              ``Decomposition`` result.
+- ``retry``   on unhealthy probes, a driver-level (outside-jit)
+              escalation ladder re-executes the solve under a stronger
+              orthonormalizer, each rung recorded:
+
+                cqr2 -> shifted cqr3 -> householder -> f64 + re-seeded sketch
+
+              (streamed plans stop at cqr3 — a panel-split Y has no
+              Householder form — and go straight to the f64 recompute;
+              sharded plans hardcode their CQR2 variant in the shard body,
+              so their only rung is a re-seeded retry.)  Retry mode also
+              *verifies* each attempt explicitly (||QtQ - I||_F on the
+              k-column factor — O(m k^2) flops, zero reads of A), because
+              the probes measure the FIRST Cholesky pass, not the final
+              output.
+
+Probe semantics (see DESIGN.md §Guarded execution for the math):
+
+- ``breakdown``      any Cholesky factor diagonal non-finite or <= 0.
+                     With the floor shift this fires only for non-finite
+                     Grams (poisoned input, overflow, injected fault) —
+                     a merely ill-conditioned Gram is rescued *finitely*,
+                     which is why the next probe exists.
+- ``first_pass_ortho``  ||G2 - I||_F where G2 = Q1ᵀQ1 is CQR2's second
+                     Gram (already computed by the algorithm).  Scales
+                     like kappa(Y)^2 * eps: ~1e-3 for a healthy f32
+                     solve, ~0.1 AT the CQR2 validity edge (kappa(Y) ~
+                     eps^{-1/2}), order 1+ beyond it.  The health
+                     threshold is ``GuardPolicy.probe_tol`` (0.5 — the
+                     classical one-refinement radius ||Q1'Q1 - I|| <= 1/2
+                     inside which the second pass still restores O(eps)
+                     orthogonality), NOT the output tolerance.
+- ``cond_proxy``     max(diag R)^2 / min(diag R)^2 — a lower bound on
+                     kappa(G) = kappa(Y)^2, free from the factor already
+                     computed.  Informational, never gated.
+- ``nonfinite_panels``  streamed-source panels that failed the (device-
+                     resident, reduction-only) finiteness check.
+
+The sink is a trace-time module-global stack (same pattern as
+``qr.kernel_backend`` / ``pipeline.default_depth``): eager bodies record
+concrete device scalars; jitted bodies get "probed" compiled twins that
+open a sink inside the trace and return the probe dict as extra jit
+outputs, which the driver folds back via :func:`absorb`.  Unprobed jits
+never trace with a sink active, so guard ``off`` shares their cache
+entries untouched.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.linalg import faults as faults_mod
+
+#: seed offset of the re-seeded (f64 / sharded) recompute rung — a fresh
+#: sketch decorrelates the retry from a sketch-direction near-degeneracy
+RESEED_OFFSET = 7919
+
+_QR_ORDER = ("cqr", "cqr2", "cqr3", "householder")
+
+_DEFAULT_ORTHO_TOL = {"float64": 1.0e-10}
+_DEFAULT_ORTHO_TOL_F32 = 1.0e-5
+
+
+def _policy_mode(mode: str) -> str:
+    if mode not in ("off", "report", "retry"):
+        raise ValueError(
+            f"unknown guard mode {mode!r}; expected 'off', 'report' or 'retry'")
+    return mode
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardPolicy:
+    """How a plan's execution is guarded.  Hashable (it rides on the frozen
+    ``ExecutionPlan``, which jitted consumers take as a static argument).
+
+    ``probe_tol`` gates the FIRST-PASS orthogonality probe (||G2 - I||_F,
+    kappa^2*eps-scaled; 0.5 is the classical radius inside which CQR2's
+    second pass still restores O(eps) orthogonality — see module
+    docstring); ``ortho_tol`` gates the explicit output verification in
+    retry mode and defaults per dtype (1e-5 f32 / 1e-10 f64) when None."""
+
+    mode: str = "off"
+    max_retries: int = 3
+    ortho_tol: Optional[float] = None
+    probe_tol: float = 0.5
+
+    def __post_init__(self):
+        _policy_mode(self.mode)
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+
+    def resolve_ortho_tol(self, dtype_name: str) -> float:
+        if self.ortho_tol is not None:
+            return self.ortho_tol
+        return _DEFAULT_ORTHO_TOL.get(dtype_name, _DEFAULT_ORTHO_TOL_F32)
+
+
+def as_guard(g) -> GuardPolicy:
+    """Coerce ``None`` / a mode string / a GuardPolicy to a GuardPolicy."""
+    if g is None:
+        return GuardPolicy()
+    if isinstance(g, GuardPolicy):
+        return g
+    if isinstance(g, str):
+        return GuardPolicy(mode=g)
+    raise TypeError(f"guard must be a mode string or GuardPolicy, got {type(g).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# probe sink (trace-time module-global stack)
+
+class ProbeSink:
+    """Accumulates probe values — device scalars (or tracers, inside a
+    probed jit twin) — for one execution attempt."""
+
+    def __init__(self):
+        self.breakdown = None      # bool scalar: any Cholesky diag bad
+        self.ortho_sq = None       # max ||G2 - I||_F^2 over recorded Grams
+        self.cond = None           # max (diag-ratio)^2 condition proxy
+        self.panel_flags: List[Tuple[int, object]] = []  # (ordinal, finite?)
+        self.transfer_retries = 0  # host->device puts that needed a retry
+        self.degraded_to_sync = False  # staging gave up -> synchronous walk
+
+    def record_breakdown(self, flag) -> None:
+        self.breakdown = flag if self.breakdown is None else jnp.logical_or(self.breakdown, flag)
+
+    def record_ortho_sq(self, value) -> None:
+        self.ortho_sq = value if self.ortho_sq is None else jnp.maximum(self.ortho_sq, value)
+
+    def record_cond(self, value) -> None:
+        self.cond = value if self.cond is None else jnp.maximum(self.cond, value)
+
+    def record_panel(self, idx: int, finite) -> None:
+        self.panel_flags.append((int(idx), finite))
+
+    def traced(self) -> dict:
+        """The scalar probes as a dict of tracers — the extra jit outputs
+        of a probed compiled twin (panel/transfer probes never occur inside
+        jit; the pipeline is eager)."""
+        out = {}
+        if self.breakdown is not None:
+            out["breakdown"] = self.breakdown
+        if self.ortho_sq is not None:
+            out["ortho_sq"] = self.ortho_sq
+        if self.cond is not None:
+            out["cond"] = self.cond
+        return out
+
+
+_sinks: List[ProbeSink] = []
+
+
+def active_sink() -> Optional[ProbeSink]:
+    return _sinks[-1] if _sinks else None
+
+
+@contextlib.contextmanager
+def collecting():
+    """Open a probe sink for the duration of the block (stack discipline —
+    probed jit twins open a nested sink inside their trace)."""
+    sink = ProbeSink()
+    _sinks.append(sink)
+    try:
+        yield sink
+    finally:
+        _sinks.remove(sink)
+
+
+def absorb(probes: dict) -> None:
+    """Fold a probed jit twin's output dict into the active sink, reducing
+    possibly batched (vmapped) probe arrays to scalars."""
+    sink = active_sink()
+    if sink is None or not probes:
+        return
+    if "breakdown" in probes:
+        sink.record_breakdown(jnp.any(probes["breakdown"]))
+    if "ortho_sq" in probes:
+        sink.record_ortho_sq(jnp.max(probes["ortho_sq"]))
+    if "cond" in probes:
+        sink.record_cond(jnp.max(probes["cond"]))
+
+
+def note_transfer_retry() -> None:
+    sink = active_sink()
+    if sink is not None:
+        sink.transfer_retries += 1
+
+
+def note_transfer_degraded() -> None:
+    sink = active_sink()
+    if sink is not None:
+        sink.degraded_to_sync = True
+
+
+# ---------------------------------------------------------------------------
+# input validation (the `validate=` knob)
+
+_validation_depth = 0
+
+
+def validation_active() -> bool:
+    return _validation_depth > 0
+
+
+@contextlib.contextmanager
+def _validation_scope():
+    global _validation_depth
+    _validation_depth += 1
+    try:
+        yield
+    finally:
+        _validation_depth -= 1
+
+
+def _peel(op):
+    """Follow composed wrappers to the base source (planner._host_rooted's
+    peel, minus the host check)."""
+    seen = 0
+    while hasattr(op, "base") and seen < 32:
+        op = op.base
+        seen += 1
+    return op
+
+
+@contextlib.contextmanager
+def validated(op, enabled: bool):
+    """Screen the source for non-finite input around one solve.
+
+    Dense / device-resident sources: ONE fused ``isfinite().all()``
+    reduction up front (no extra pass beyond that single read).  Host-
+    streamed sources: zero extra passes — the validation scope makes the
+    solve's own panel walk raise a ``ValueError`` naming the first
+    offending panel (pipeline._panel_probe).  Sparse sources check the
+    stored values.  Composed sources are screened at their base."""
+    if not enabled:
+        yield
+        return
+    base = _peel(op)
+    arr = getattr(base, "array", None)
+    if arr is not None and not isinstance(arr, np.ndarray):
+        if not bool(jnp.isfinite(arr).all()):
+            raise ValueError(
+                "validate: non-finite values in input (device source, shape "
+                f"{tuple(arr.shape)}) — clean the source or drop validate=")
+        yield
+        return
+    bcoo = getattr(base, "bcoo", None)
+    if bcoo is not None:
+        if not bool(jnp.isfinite(bcoo.data).all()):
+            raise ValueError(
+                "validate: non-finite stored values in sparse input (shape "
+                f"{tuple(bcoo.shape)}, nnz={int(bcoo.nse)})")
+        yield
+        return
+    # host numpy (streamed) or protocol-only source: validate inline on the
+    # solve's own panel walk
+    with _validation_scope():
+        yield
+
+
+# ---------------------------------------------------------------------------
+# health reports
+
+@dataclasses.dataclass(frozen=True)
+class RungReport:
+    """One execution attempt (one rung of the ladder)."""
+
+    rung: str                              # as-planned qr method, or the
+                                           # escalation name (cqr3 /
+                                           # householder / f64_reseed / reseed)
+    healthy: bool
+    breakdown: bool = False
+    first_pass_ortho: Optional[float] = None   # ||G2 - I||_F (probe)
+    cond_proxy: Optional[float] = None
+    nonfinite_panels: Tuple[int, ...] = ()
+    factors_finite: bool = True
+    ortho_fro: Optional[float] = None          # verified ||QtQ - I||_F (retry)
+    transfer_retries: int = 0
+    degraded_to_sync: bool = False
+    error: Optional[str] = None                # escalation rung that raised
+
+    def describe(self) -> str:
+        bits = [f"rung={self.rung}", "ok" if self.healthy else "UNHEALTHY"]
+        if self.breakdown:
+            bits.append("breakdown")
+        if self.first_pass_ortho is not None:
+            bits.append(f"probe_ortho={self.first_pass_ortho:.3g}")
+        if self.cond_proxy is not None:
+            bits.append(f"cond_proxy={self.cond_proxy:.3g}")
+        if self.ortho_fro is not None:
+            bits.append(f"ortho={self.ortho_fro:.3g}")
+        if self.nonfinite_panels:
+            bits.append(f"nonfinite_panels={list(self.nonfinite_panels)}")
+        if not self.factors_finite:
+            bits.append("nonfinite_factors")
+        if self.transfer_retries:
+            bits.append(f"transfer_retries={self.transfer_retries}")
+        if self.degraded_to_sync:
+            bits.append("degraded_to_sync")
+        if self.error:
+            bits.append(f"error={self.error!r}")
+        return " ".join(bits)
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthReport:
+    """The guard's verdict on one solve — rides on ``Decomposition.health``."""
+
+    mode: str
+    ok: bool
+    rung_used: str                 # rung whose result was returned
+    attempts: Tuple[RungReport, ...]
+
+    @property
+    def final(self) -> RungReport:
+        return self.attempts[-1]
+
+    def describe(self) -> str:
+        head = f"guard={self.mode} {'ok' if self.ok else 'UNHEALTHY'} rung_used={self.rung_used}"
+        return "\n".join([head] + ["  " + a.describe() for a in self.attempts])
+
+    def __str__(self) -> str:
+        return self.describe()
+
+
+# ---------------------------------------------------------------------------
+# the escalation ladder (retry mode) — driver level, outside every jit
+
+def _ortho_residual(Q) -> jax.Array:
+    """||QᵀQ - I||_F in the factor's compute precision (promoted to f32)."""
+    Qf = Q.astype(jnp.promote_types(Q.dtype, jnp.float32))
+    G = Qf.T @ Qf
+    D = G - jnp.eye(G.shape[0], dtype=G.dtype)
+    return jnp.sqrt(jnp.sum(D * D))
+
+
+def _result_arrays(result):
+    return [
+        leaf for leaf in jax.tree_util.tree_leaves(result)
+        if hasattr(leaf, "dtype") and hasattr(leaf, "shape")
+        and jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.inexact)
+    ]
+
+
+def _summarize(name: str, sink: ProbeSink, result, policy: GuardPolicy,
+               dtype_name: str, ortho_factor: Optional[Callable],
+               verify: bool, ortho_gates: bool = True) -> RungReport:
+    """Concretize one attempt's sink into a RungReport (a handful of device
+    syncs — panel flags stacked into ONE).  ``ortho_gates=False`` keeps the
+    first-pass probe informational without letting it fail the attempt: the
+    adaptive engine deliberately orthonormalizes deflated panels that are
+    near cancellation noise (then discards them at the overlap floor), so
+    on that path a large G2 residual is expected behavior, not ill health —
+    breakdown/finiteness/verification still gate."""
+    breakdown = bool(sink.breakdown) if sink.breakdown is not None else False
+    ortho1 = float(jnp.sqrt(sink.ortho_sq)) if sink.ortho_sq is not None else None
+    cond = float(sink.cond) if sink.cond is not None else None
+    bad_panels: Tuple[int, ...] = ()
+    if sink.panel_flags:
+        flags = np.asarray(jnp.stack([jnp.asarray(f) for _, f in sink.panel_flags]))
+        bad_panels = tuple(sorted({
+            i for (i, _), ok in zip(sink.panel_flags, flags) if not ok}))
+    finite = all(bool(jnp.isfinite(x).all()) for x in _result_arrays(result))
+    verified = None
+    if verify and finite and ortho_factor is not None:
+        Q = ortho_factor(result)
+        if Q is not None:
+            verified = float(_ortho_residual(Q))
+    tol = policy.resolve_ortho_tol(dtype_name)
+    healthy = (
+        finite
+        and not breakdown
+        and not bad_panels
+        and (not ortho_gates or ortho1 is None or ortho1 <= policy.probe_tol)
+        and (verified is None or verified <= tol)
+    )
+    return RungReport(
+        rung=name, healthy=healthy, breakdown=breakdown,
+        first_pass_ortho=ortho1, cond_proxy=cond,
+        nonfinite_panels=bad_panels, factors_finite=finite,
+        ortho_fro=verified, transfer_retries=sink.transfer_retries,
+        degraded_to_sync=sink.degraded_to_sync,
+    )
+
+
+def _escalation_methods(pl) -> List[str]:
+    """QR methods stronger than the plan's, in ladder order."""
+    if pl.path == "sharded":
+        return []  # the shard body hardcodes its CQR2 variant
+    methods = list(_QR_ORDER)
+    if pl.path == "streamed":
+        methods.remove("householder")  # panel-split Y has no Householder form
+    if pl.qr_method in methods:
+        return methods[methods.index(pl.qr_method) + 1:]
+    return [m for m in methods if m != pl.qr_method]
+
+
+def _f64_rung_thunk(run, op, pl, seed):
+    """The last rung: recompute in float64 with a re-seeded sketch.
+
+    Serves array-rooted sources (Dense/Host/Stacked); protocol-only,
+    sparse, composed and sharded sources have no safe wholesale cast, so
+    the rung is skipped for them (None).  The cast, the re-plan and the
+    solve all run under ``compat.enable_x64()``."""
+    if pl.dtype == "float64" or pl.path == "sharded":
+        return None
+    arr = getattr(op, "array", None)
+    if arr is None:
+        return None
+
+    def thunk():
+        from repro import compat
+        from repro.linalg import operators as ops_mod
+        from repro.linalg import planner as planner_mod
+
+        with compat.enable_x64():
+            if isinstance(op, ops_mod.HostOp):
+                op64 = ops_mod.HostOp(np.asarray(arr, np.float64),
+                                      block_rows=op.block_rows,
+                                      pipeline_depth=op.pipeline_depth)
+            elif isinstance(arr, np.ndarray):
+                op64 = ops_mod.as_linop(np.asarray(arr, np.float64))
+            else:
+                op64 = ops_mod.as_linop(jnp.asarray(arr, jnp.float64))
+            spec = pl.spec if pl.spec is not None else pl.k
+            pl64 = planner_mod.plan(op64, spec, kind=pl.kind)
+            return run(op64, pl64, seed + RESEED_OFFSET)
+
+    return thunk
+
+
+def run_guarded(run, op, pl, seed: int, *,
+                ortho_factor: Optional[Callable] = None):
+    """Execute ``run(op, pl, seed)`` under ``pl.guard``.
+
+    ``run`` is the raw executor for the plan's kind; ``ortho_factor``
+    maps its result to the matrix whose columns retry mode verifies
+    (None for kinds without an orthonormal factor, e.g. lu).
+
+    Returns ``(result, HealthReport)``.  Report mode runs once and only
+    observes; retry mode climbs the ladder until an attempt is healthy or
+    ``max_retries`` escalations are spent, returning the LAST attempt's
+    result (flagged unhealthy if the ladder was exhausted)."""
+    policy = pl.guard
+    verify = policy.mode == "retry"
+    # the adaptive engine self-corrects past its conditioning edge (CGS2 +
+    # overlap floor), so its internal first-pass probes inform but don't gate
+    ortho_gates = pl.path != "adaptive"
+
+    rungs: List[Tuple[str, Callable]] = [
+        (pl.qr_method, lambda: run(op, pl, seed))]
+    if verify:
+        for method in _escalation_methods(pl):
+            pl_r = dataclasses.replace(pl, qr_method=method, fused_power=False)
+            rungs.append((method, lambda pl_r=pl_r: run(op, pl_r, seed)))
+        f64 = _f64_rung_thunk(run, op, pl, seed)
+        if f64 is not None:
+            rungs.append(("f64_reseed", f64))
+        elif pl.path == "sharded":
+            rungs.append(("reseed", lambda: run(op, pl, seed + RESEED_OFFSET)))
+
+    attempts: List[RungReport] = []
+    result = None
+    rung_used = rungs[0][0]
+    for i, (name, thunk) in enumerate(rungs):
+        try:
+            with collecting() as sink:
+                res = thunk()
+        except faults_mod.TransferError as exc:
+            # the staging pipeline already degraded and still failed —
+            # record the dead rung; first-attempt failures keep climbing
+            if not verify:
+                raise
+            attempts.append(RungReport(rung=name, healthy=False,
+                                       factors_finite=False, error=str(exc)))
+            continue
+        except Exception as exc:
+            if i == 0:
+                raise  # structural errors (validate, bad spec) are not retried
+            attempts.append(RungReport(
+                rung=name, healthy=False, factors_finite=False,
+                error=f"{type(exc).__name__}: {exc}"))
+            continue
+        report = _summarize(name, sink, res, policy, pl.dtype,
+                            ortho_factor, verify, ortho_gates=ortho_gates)
+        attempts.append(report)
+        result = res
+        rung_used = name
+        if report.healthy or not verify:
+            break
+        if len(attempts) - 1 >= policy.max_retries:
+            break
+    if result is None:
+        # every rung raised (e.g. a permanently dead host link even after
+        # the synchronous fallback) — there is no result to flag, so fail
+        health = HealthReport(mode=policy.mode, ok=False, rung_used=rung_used,
+                              attempts=tuple(attempts))
+        raise RuntimeError(f"guarded execution failed on every rung:\n{health}")
+    ok = bool(attempts) and attempts[-1].healthy
+    health = HealthReport(mode=policy.mode, ok=ok, rung_used=rung_used,
+                          attempts=tuple(attempts))
+    return result, health

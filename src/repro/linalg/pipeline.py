@@ -36,20 +36,40 @@ reaches duck-typed consumers like core/adaptive.py without threading a
 parameter through every layer); else DEFAULT_DEPTH for host-resident
 sources and 1 (no prefetch — today's behavior) for device-resident ones.
 
-Early stop is free: a consumer that abandons the iterator (adaptive QB
-meeting its tolerance mid-stream) simply drops the generator — in-flight
-transfers complete in the background against staging buffers nobody will
-read again, and no estimator state ever saw the un-consumed panels.
+Early stop is safe: a consumer that abandons the iterator (adaptive QB
+meeting its tolerance mid-stream) or raises mid-stream closes the
+generator, whose ``finally`` fences every in-flight transfer before the
+staging ring is released (`_await_in_flight`) — no DMA is ever left
+reading a buffer a later stream may rewrite, and no estimator state ever
+saw the un-consumed panels.
+
+Fault tolerance (PR 7): the host->device put of each staged panel runs
+under bounded retry-with-backoff (`TRANSFER_RETRIES`); a link that stays
+down degrades the REST of the walk to the synchronous per-panel path
+(`jnp.asarray`) instead of failing the solve — values stay bit-identical,
+only overlap is lost.  Each produced panel also passes `_panel_probe`:
+the fault-injection hooks (linalg/faults.py), the guard's per-panel
+finiteness probe, and the `validate=` screen (raising a ValueError that
+names the offending panel) all live there, and all cost nothing when
+inactive.
 """
 from __future__ import annotations
 
 import collections
 import contextlib
+import time
 from typing import Iterable, Iterator, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.linalg import faults as faults_mod
+from repro.linalg import guard as guard_mod
+
+#: bounded retry of a failed staging transfer, with exponential backoff
+TRANSFER_RETRIES = 3
+TRANSFER_BACKOFF_S = 0.02
 
 #: prefetch depth for host-resident sources when neither the caller nor the
 #: ambient scope says otherwise: classic double buffering (panel i computes
@@ -112,6 +132,63 @@ def panel_bounds(m: int, b: int) -> List[Tuple[int, int]]:
     return [(lo, min(lo + b, m)) for lo in range(0, m, b)]
 
 
+def _panel_probe(idx: int, panel, rows: Optional[Tuple[int, int]] = None):
+    """Per-produced-panel hook: fault injection, guard finiteness probe,
+    `validate=` screen.  One module-global check when everything is off —
+    the panel passes through untouched and unread."""
+    panel = faults_mod.poison_panel(idx, panel)
+    sink = guard_mod.active_sink()
+    validating = guard_mod.validation_active()
+    if sink is not None or validating:
+        # the panel is already device-resident — this is a reduction over
+        # bytes the solve was about to read anyway, not an extra pass over A
+        finite = jnp.isfinite(panel).all()
+        if sink is not None:
+            sink.record_panel(idx, finite)
+        if validating and not bool(finite):
+            where = f"rows {rows[0]}:{rows[1]}" if rows else f"ordinal {idx}"
+            raise ValueError(
+                f"validate: non-finite values in input panel {idx} ({where}) "
+                "— clean the source or drop validate=")
+    return panel
+
+
+class _StagingFailed(Exception):
+    """Internal: a staged transfer failed after TRANSFER_RETRIES retries —
+    the stream degrades to the synchronous walk from this panel on."""
+
+    def __init__(self, idx: int):
+        super().__init__(f"staging transfer failed at panel {idx}")
+        self.idx = idx
+
+
+def _await_in_flight(in_flight: List[Optional[jax.Array]]) -> None:
+    """Fence every in-flight staged transfer (slot-reuse + early-exit
+    safety: called from the stream's ``finally`` so a consumer raising or
+    abandoning mid-stream can never leave a DMA reading ring memory)."""
+    for dev in in_flight:
+        if dev is not None:
+            dev.block_until_ready()
+
+
+def _put_with_retry(buf, idx: int) -> jax.Array:
+    """`jax.device_put` with bounded retry-with-backoff on transfer errors
+    (injected `flaky_link` faults or real runtime transfer failures).
+    Raises `_StagingFailed` once the budget is spent."""
+    delay = TRANSFER_BACKOFF_S
+    for attempt in range(TRANSFER_RETRIES + 1):
+        try:
+            faults_mod.maybe_fail_transfer(idx)
+            return jax.device_put(buf)
+        except (faults_mod.TransferError, RuntimeError):
+            if attempt == TRANSFER_RETRIES:
+                raise _StagingFailed(idx) from None
+            guard_mod.note_transfer_retry()
+            time.sleep(delay)
+            delay *= 2
+    raise _StagingFailed(idx)  # unreachable
+
+
 def stream_host_panels(
     array,
     bounds: Sequence[Tuple[int, int]],
@@ -144,8 +221,8 @@ def stream_host_panels(
         return
     depth = max(1, min(int(depth), len(bounds)))
     if depth == 1:
-        for lo, hi in bounds:
-            yield jnp.asarray(array[lo:hi])
+        for i, (lo, hi) in enumerate(bounds):
+            yield _panel_probe(i, jnp.asarray(array[lo:hi]), rows=(lo, hi))
         return
     block = max(hi - lo for lo, hi in bounds)
     n = array.shape[1]
@@ -170,24 +247,44 @@ def stream_host_panels(
         buf[:rows] = array[lo:hi]
         if rows < block:
             buf[rows:] = 0  # uniform transfer shape, jit-stable
-        dev = jax.device_put(buf)
+        faults_mod.corrupt_staged(idx, buf[:rows])
+        dev = _put_with_retry(buf, idx)
         if chase_copy:
             dev = _device_copy(dev)
         in_flight[slot] = dev
-        return dev if rows == block else dev[:rows]
+        panel = dev if rows == block else dev[:rows]
+        return _panel_probe(idx, panel, rows=(lo, hi))
 
+    fallback_from: Optional[int] = None
     pending: collections.deque = collections.deque()
-    for i in range(depth):
-        pending.append(stage(i))
-    nxt = depth
-    while pending:
-        panel = pending.popleft()
-        if nxt < len(bounds):
-            # issue the NEXT transfer before handing back control, so it
-            # overlaps the consumer's compute on this panel
-            pending.append(stage(nxt))
-            nxt += 1
-        yield panel
+    try:
+        for i in range(depth):
+            try:
+                pending.append(stage(i))
+            except _StagingFailed as fail:
+                fallback_from = fail.idx
+                break
+        nxt = depth
+        while pending:
+            panel = pending.popleft()
+            if fallback_from is None and nxt < len(bounds):
+                # issue the NEXT transfer before handing back control, so it
+                # overlaps the consumer's compute on this panel
+                try:
+                    pending.append(stage(nxt))
+                except _StagingFailed as fail:
+                    fallback_from = fail.idx
+                nxt += 1
+            yield panel
+        if fallback_from is not None:
+            # the link stayed down through the retry budget: finish the walk
+            # synchronously (same values, no overlap) instead of failing
+            guard_mod.note_transfer_degraded()
+            for i in range(fallback_from, len(bounds)):
+                lo, hi = bounds[i]
+                yield _panel_probe(i, jnp.asarray(array[lo:hi]), rows=(lo, hi))
+    finally:
+        _await_in_flight(in_flight)
 
 
 def lookahead(panels: Iterable, depth: int) -> Iterator:
@@ -197,13 +294,18 @@ def lookahead(panels: Iterable, depth: int) -> Iterator:
     copied (device-resident slices, composed per-panel transforms over an
     already-prefetched base): pulling enqueues the producer's async work,
     which then overlaps the consumer's compute on earlier panels.  Depth 1
-    degrades to plain iteration — exactly the pre-pipeline behavior."""
+    degrades to plain iteration — exactly the pre-pipeline behavior.
+
+    Each pulled panel passes `_panel_probe` at production (fault hooks,
+    guard finiteness probe, `validate=` screen) — free when all three are
+    inactive."""
     if depth <= 1:
-        yield from panels
+        for i, panel in enumerate(panels):
+            yield _panel_probe(i, panel)
         return
     queue: collections.deque = collections.deque()
-    for panel in panels:
-        queue.append(panel)
+    for i, panel in enumerate(panels):
+        queue.append(_panel_probe(i, panel))
         if len(queue) >= depth:
             yield queue.popleft()
     while queue:

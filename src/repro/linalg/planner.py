@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.rsvd import RSVDConfig
+from repro.linalg import guard as guard_mod
 from repro.linalg import operators as ops_mod
 from repro.linalg import pipeline as pipeline_mod
 from repro.linalg import spec as spec_mod
@@ -114,6 +115,14 @@ class ExecutionPlan:
     # nnz * (value + index) bytes (rsvd_model.sparse_* functions).
     nnz: Optional[int] = None
     density: Optional[float] = None
+    # guarded-execution fields (PR 7): how the executor watches / recovers
+    # this solve (linalg/guard.py) and whether input is screened for
+    # non-finite values up front.  Neither changes the numerics of a
+    # healthy solve: guard "off" and validate=False are the pre-guard
+    # behavior bit-for-bit, and "report" only adds probe reductions on
+    # byproducts (no extra reads of A — predicted_hbm_bytes is unchanged).
+    guard: guard_mod.GuardPolicy = guard_mod.GuardPolicy()
+    validate: bool = False
 
     def to_config(self) -> RSVDConfig:
         """The thin frozen RSVDConfig view the core numerics execute."""
@@ -144,6 +153,10 @@ class ExecutionPlan:
             f"fused_sketch={self.fused_sketch}", f"fused_power={self.fused_power}",
             f"pipeline_depth={self.pipeline_depth}",
         ]
+        if self.guard.mode != "off":
+            bits.append(f"guard={self.guard.mode}")
+        if self.validate:
+            bits.append("validate=on")
         if self.block_rows:
             bits.append(f"block_rows={self.block_rows}")
         if self.path == "adaptive":
@@ -364,7 +377,9 @@ _QB_KINDS = ("qb", "eigh", "lu")
 
 def _plan_adaptive(op: LinOp, spec: Spec, kind: str, budget: Budget,
                    overrides: Optional[RSVDConfig],
-                   nnz: Optional[int] = None) -> ExecutionPlan:
+                   nnz: Optional[int] = None,
+                   guard: guard_mod.GuardPolicy = guard_mod.GuardPolicy(),
+                   validate: bool = False) -> ExecutionPlan:
     """Fixed-precision (Tolerance/Energy) plan: the rank is unknown, so the
     plan records the GROWTH SCHEDULE — cumulative basis sizes in autotune-
     sized panels up to the max-rank cap — and the roofline bytes of each
@@ -463,6 +478,8 @@ def _plan_adaptive(op: LinOp, spec: Spec, kind: str, budget: Budget,
         predicted_walltime_s=rsvd_model.hbm_walltime_s(sum(schedule_bytes)),
         nnz=nnz,
         density=None if nnz is None else nnz / float(m * n),
+        guard=guard,
+        validate=validate,
     )
 
 
@@ -473,6 +490,8 @@ def plan(
     overrides: Optional[RSVDConfig] = None,
     kind: str = "svd",
     nnz: Optional[int] = None,
+    guard=None,
+    validate: bool = False,
 ) -> ExecutionPlan:
     """Build the execution plan for a solve over `op`.
 
@@ -485,15 +504,20 @@ def plan(
     lu, pca).  `nnz` declares the source's stored-nonzero count for the
     SpMM traffic pricing — it defaults from the operator itself (SparseOp,
     possibly under a composition), and the explicit argument serves
-    shape-only planning where no data exists to count."""
+    shape-only planning where no data exists to count.  `guard` (a mode
+    string or GuardPolicy) and `validate` set the guarded-execution fields
+    — see linalg/guard.py; both default to the unguarded pre-guard
+    behavior."""
     op = as_linop(op)
     budget = budget or Budget.default()
     spec = spec_mod.as_spec(spec)
+    guard = guard_mod.as_guard(guard)
     _validate(op, spec, kind)
     if nnz is None:
         nnz = _sparse_nnz(op)
     if not isinstance(spec, Rank) or kind in _QB_KINDS:
-        return _plan_adaptive(op, spec, kind, budget, overrides, nnz=nnz)
+        return _plan_adaptive(op, spec, kind, budget, overrides, nnz=nnz,
+                              guard=guard, validate=validate)
     k = spec.k
     path = _pick_path(op, overrides)
     cfg = overrides if overrides is not None else _default_config(op, path, budget)
@@ -614,4 +638,6 @@ def plan(
         predicted_walltime_s=predicted_walltime,
         nnz=nnz,
         density=None if nnz is None else nnz / float(m * n),
+        guard=guard,
+        validate=validate,
     )

@@ -46,12 +46,17 @@ HandlerResult = Tuple[tuple, int, Tuple[int, ...], Tuple[float, ...]]
 class DecompositionKind:
     """One registry entry.  `execute` finishes the solve; `prepare` (optional)
     transforms the source BEFORE planning (pca wraps in CenteredOp here, so
-    the plan sees the operator that actually runs)."""
+    the plan sees the operator that actually runs).  `ortho_factor`
+    (optional) maps a handler's `factors` tuple to the matrix whose columns
+    should be orthonormal — the guard's retry ladder verifies
+    ||QᵀQ - I||_F on it (linalg/guard.py); None skips verification (lu,
+    third-party kinds without an orthonormal factor)."""
 
     name: str
     execute: Callable  # (op, spec, plan, seed) -> HandlerResult
     prepare: Optional[Callable] = None  # (op) -> op
     description: str = ""
+    ortho_factor: Optional[Callable] = None  # (factors) -> matrix | None
 
 
 _REGISTRY: Dict[str, DecompositionKind] = {}
@@ -217,18 +222,29 @@ def _execute_pca(op, spec, pl, seed) -> HandlerResult:
     return (Vt, S**2 / (n - 1), S, op.mu), keep, rank_hist, err_hist
 
 
+def _batched_safe(factor):
+    """Guard verification targets a single 2-D factor; batched (3-D)
+    factors are skipped (the probes still cover them — every vmapped slice
+    reports through the probed twin)."""
+    return None if getattr(factor, "ndim", 2) == 3 else factor
+
+
 register(DecompositionKind(
     "svd", _execute_svd,
-    description="U S Vt; Rank specs keep the historical fixed-rank paths"))
+    description="U S Vt; Rank specs keep the historical fixed-rank paths",
+    ortho_factor=lambda f: _batched_safe(f[0])))          # U: m x k
 register(DecompositionKind(
     "qb", _execute_qb,
-    description="rank-revealed orthonormal basis: A ~= Q B"))
+    description="rank-revealed orthonormal basis: A ~= Q B",
+    ortho_factor=lambda f: f[0]))                         # Q: m x r
 register(DecompositionKind(
     "eigh", _execute_eigh,
-    description="Nystrom eigendecomposition of a PSD source: A ~= V diag(w) V^T"))
+    description="Nystrom eigendecomposition of a PSD source: A ~= V diag(w) V^T",
+    ortho_factor=lambda f: f[1]))                         # V: n x r
 register(DecompositionKind(
     "lu", _execute_lu,
     description="randomized LU: A[pr][:, pc] ~= L U (Shabat et al. 2013)"))
 register(DecompositionKind(
     "pca", _execute_pca, prepare=_prepare_pca,
-    description="PCA over the centered operator; Energy(p) = explained variance"))
+    description="PCA over the centered operator; Energy(p) = explained variance",
+    ortho_factor=lambda f: f[0].T))                       # componentsᵀ: d x r

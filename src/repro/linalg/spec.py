@@ -36,6 +36,10 @@ semantics are identical.
 
 Specs are frozen/hashable: they ride inside `ExecutionPlan` (a jit static
 argument) and serialize through `dataclasses.asdict` into BENCH_rsvd.json.
+
+A spec states the ACCURACY contract only; numerical-health policy is the
+separate `GuardPolicy` knob threaded the same way (`plan(..., guard=...)`,
+linalg/guard.py) — the two compose on one plan without knowing each other.
 """
 from __future__ import annotations
 

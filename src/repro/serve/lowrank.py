@@ -86,10 +86,51 @@ def factorize_params(
     Scan-stacked leaves [U, m, n] are factorized with a vmapped RSVD so the
     per-unit slices that lax.scan extracts are already the two skinny GEMM
     factors.  Leaves whose selected rank r has min(m, n) <= 2*r stay dense
-    (no saving)."""
+    (no saving).
+
+    Faults are isolated per leaf: a weight carrying NaN/Inf (corrupt
+    checkpoint shard), a factorization that raises, or one that produces
+    non-finite factors leaves THAT leaf dense with ``report[name] = nan``
+    instead of sinking the whole tree — one bad shard should cost one
+    layer's compression, not the batch."""
     if (rank is None) == (tol is None):
         raise ValueError("factorize_params needs exactly one of rank= or tol=")
     report: Dict[str, float] = {}
+
+    def _compress(W, leaf):
+        """(A, B, reported error) or None when factorizing wins nothing."""
+        if leaf.ndim == 2:
+            if tol is not None:
+                A, B, err, r = _factorize_2d_tol(W, tol)
+                if min(leaf.shape) <= 2 * r:
+                    return None  # tolerance needs too much rank: no saving
+            else:
+                A, B, err = _factorize_2d(W, rank)
+            return A, B, float(err)
+        if tol is not None:
+            # one adaptive probe seeds the stack-wide rank; the vmapped
+            # pass then verifies the WORST slice, and if some unit's
+            # spectrum needs more than slice 0 did, THAT slice is
+            # probed adaptively and the stack re-run at its rank
+            r = linalg.decompose(W[0], linalg.Tolerance(tol), overrides=_RSVD).rank
+            while True:
+                if min(leaf.shape[-2:]) <= 2 * r:
+                    return None  # tolerance needs too much rank: no saving
+                A, B, err = _factorize_stacked(W, r)
+                worst = float(jnp.max(err))
+                if worst <= tol:
+                    break
+                i = int(jnp.argmax(err))
+                r_worst = linalg.decompose(
+                    W[i], linalg.Tolerance(tol), overrides=_RSVD).rank
+                # progress by at least the oversample margin: the probe
+                # can certify a rank the fixed-rank vmapped run (other
+                # seeds, trimmed oversampling) just misses, and +1 steps
+                # would re-factorize the whole stack O(min(m, n)) times
+                r = max(r_worst, r + _RSVD.oversample)
+            return A, B, worst
+        A, B, err = _factorize_stacked(W, rank)
+        return A, B, float(jnp.mean(err))
 
     def visit(path, leaf):
         if not _is_target(path, leaf):
@@ -98,40 +139,21 @@ def factorize_params(
             return leaf
         name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
         W = leaf.astype(jnp.float32)
-        if leaf.ndim == 2:
-            if tol is not None:
-                A, B, err, r = _factorize_2d_tol(W, tol)
-                if min(leaf.shape) <= 2 * r:
-                    return leaf  # tolerance needs too much rank: no saving
-            else:
-                A, B, err = _factorize_2d(W, rank)
-            report[name] = float(err)
-        else:
-            if tol is not None:
-                # one adaptive probe seeds the stack-wide rank; the vmapped
-                # pass then verifies the WORST slice, and if some unit's
-                # spectrum needs more than slice 0 did, THAT slice is
-                # probed adaptively and the stack re-run at its rank
-                r = linalg.decompose(W[0], linalg.Tolerance(tol), overrides=_RSVD).rank
-                while True:
-                    if min(leaf.shape[-2:]) <= 2 * r:
-                        return leaf  # tolerance needs too much rank: no saving
-                    A, B, err = _factorize_stacked(W, r)
-                    worst = float(jnp.max(err))
-                    if worst <= tol:
-                        break
-                    i = int(jnp.argmax(err))
-                    r_worst = linalg.decompose(
-                        W[i], linalg.Tolerance(tol), overrides=_RSVD).rank
-                    # progress by at least the oversample margin: the probe
-                    # can certify a rank the fixed-rank vmapped run (other
-                    # seeds, trimmed oversampling) just misses, and +1 steps
-                    # would re-factorize the whole stack O(min(m, n)) times
-                    r = max(r_worst, r + _RSVD.oversample)
-                report[name] = worst
-            else:
-                A, B, err = _factorize_stacked(W, rank)
-                report[name] = float(jnp.mean(err))
+        if not bool(jnp.isfinite(W).all()):
+            report[name] = float("nan")  # poisoned input: keep dense
+            return leaf
+        try:
+            out = _compress(W, leaf)
+        except (FloatingPointError, ValueError, RuntimeError):
+            report[name] = float("nan")  # factorization failed: keep dense
+            return leaf
+        if out is None:
+            return leaf
+        A, B, err = out
+        if not (bool(jnp.isfinite(A).all()) and bool(jnp.isfinite(B).all())):
+            report[name] = float("nan")  # non-finite factors: keep dense
+            return leaf
+        report[name] = err
         return {"lr_a": A.astype(leaf.dtype), "lr_b": B.astype(leaf.dtype)}
 
     new_params = jax.tree_util.tree_map_with_path(visit, params)

@@ -1,0 +1,199 @@
+"""Fault injection: each kind's observable effect, jit-cache safety, and
+the streaming pipeline's exception/retry discipline.
+
+The contract under test (linalg/faults.py + pipeline.py):
+
+  * every fault kind is detected by the probe that models its real-world
+    counterpart — nan_panel by the per-panel finiteness probe,
+    corrupt_transfer by the downstream Gram/breakdown probes, flaky_link
+    by the bounded transfer retry (degrading to the synchronous walk when
+    the link stays down), cholesky_breakdown by the factor-diagonal probe;
+  * faults are inert outside a guarded run where the hook runs inside
+    jit-traced code, and a fault that fired at trace time can never
+    shadow a clean compile-cache entry (the fingerprint static arg);
+  * a consumer that abandons or dies mid-stream always leaves the staging
+    ring fenced (`finally` -> `_await_in_flight`), and the next stream
+    over the same ring discipline is bit-identical.
+"""
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import linalg
+from repro.linalg import faults, guard, pipeline
+
+
+@functools.lru_cache(maxsize=None)
+def _host(m=256, n=64, seed=1):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((m, n)).astype(np.float32)
+
+
+def _stream_op():
+    return linalg.HostOp(_host(), block_rows=64, pipeline_depth=2)
+
+
+def _same(a, b):
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestRegistry:
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            with faults.inject("gamma_ray"):
+                pass
+
+    def test_scoped_activation(self):
+        assert not faults.any_active()
+        with faults.inject("nan_panel", panel=1):
+            assert faults.any_active()
+            assert faults.fingerprint() == (("nan_panel", 1, None, 0),)
+        assert not faults.any_active()
+        assert faults.fingerprint() == ()
+
+    def test_fingerprint_tracks_firing(self):
+        # a times-limited fault that fired must change the fingerprint, so
+        # a probed jit twin traced WITH the fault cannot be replayed for a
+        # later call where the budget is spent
+        with faults.inject("flaky_link", panel=0) as f:
+            before = faults.fingerprint()
+            with pytest.raises(faults.TransferError):
+                faults.maybe_fail_transfer(0)
+            assert faults.fingerprint() != before
+            faults.maybe_fail_transfer(0)  # budget spent: no raise
+
+
+class TestNanPanel:
+    def test_flagged_by_finiteness_probe(self):
+        with faults.inject("nan_panel", panel=2):
+            d = linalg.decompose(_stream_op(), 8, seed=7, guard="report")
+        assert not d.health.ok
+        assert d.health.final.nonfinite_panels == (2,)
+
+    def test_validate_catches_it_first(self):
+        with faults.inject("nan_panel", panel=2):
+            with pytest.raises(ValueError, match="panel 2"):
+                linalg.svd(_stream_op(), 8, seed=7, validate=True)
+
+
+class TestCorruptTransfer:
+    def test_caught_by_breakdown_probe(self):
+        # garbled bytes are FINITE (1e30 fill) — the finiteness probe stays
+        # green and the f32 Gram overflow trips the breakdown probe instead
+        with faults.inject("corrupt_transfer", panel=0):
+            d = linalg.decompose(_stream_op(), 8, seed=7, guard="report")
+        assert not d.health.ok
+        assert d.health.final.nonfinite_panels == ()
+        assert d.health.final.breakdown
+
+
+class TestFlakyLink:
+    def test_single_hiccup_retried_bit_identical(self):
+        base = linalg.svd(_stream_op(), 8, seed=7)
+        with faults.inject("flaky_link", panel=1):  # defaults times=1
+            d = linalg.decompose(_stream_op(), 8, seed=7, guard="report")
+        _same(base, d.factors)
+        assert d.health.ok
+        assert d.health.final.transfer_retries >= 1
+        assert not d.health.final.degraded_to_sync
+
+    def test_dead_link_degrades_to_sync_walk(self):
+        base = linalg.svd(_stream_op(), 8, seed=7)
+        with faults.inject("flaky_link", panel=1, times=10_000):
+            d = linalg.decompose(_stream_op(), 8, seed=7, guard="report")
+        _same(base, d.factors)  # same values, only overlap lost
+        assert d.health.ok
+        assert d.health.final.degraded_to_sync
+
+    def test_stream_degrade_values_identical(self):
+        A = _host()
+        bounds = pipeline.panel_bounds(A.shape[0], 64)
+        with faults.inject("flaky_link", panel=1, times=100):
+            with guard.collecting() as sink:
+                panels = list(pipeline.stream_host_panels(A, bounds, 2))
+        assert sink.transfer_retries == pipeline.TRANSFER_RETRIES
+        assert sink.degraded_to_sync
+        for p, (lo, hi) in zip(panels, bounds):
+            np.testing.assert_array_equal(np.asarray(p), A[lo:hi])
+
+
+class TestCholeskyBreakdown:
+    def test_gated_on_guard(self):
+        # the poison hook runs inside jit-traced code, so it consults the
+        # sink: with guard off the fault must be completely inert
+        A = jnp.asarray(_host(96, 64, seed=0))
+        base = linalg.svd(A, 8, seed=3)
+        with faults.inject("cholesky_breakdown"):
+            _same(base, linalg.svd(A, 8, seed=3))
+
+    def test_fires_under_report(self):
+        A = jnp.asarray(_host(96, 64, seed=0))
+        with faults.inject("cholesky_breakdown"):
+            d = linalg.decompose(A, 8, seed=3, guard="report")
+        assert not d.health.ok and d.health.final.breakdown
+
+
+class TestCacheSafety:
+    def test_clean_run_after_faulted_run(self):
+        # a faulted guarded run compiles a poisoned probed twin; the next
+        # clean guarded run must NOT replay it (fingerprint static arg)
+        A = jnp.asarray(_host(96, 64, seed=0))
+        base = linalg.svd(A, 8, seed=3)
+        with faults.inject("cholesky_breakdown", times=1):
+            df = linalg.decompose(A, 8, seed=3, guard="report")
+        assert not bool((np.asarray(df.factors[1]) == np.asarray(base[1])).all())
+        dc = linalg.decompose(A, 8, seed=3, guard="report")
+        _same(base, dc.factors)
+        assert dc.health.ok
+        _same(base, linalg.svd(A, 8, seed=3))  # unguarded cache untouched
+
+
+class TestStreamExceptionSafety:
+    """Satellite regression: a consumer abandoning or raising mid-stream
+    leaves the staging ring fenced and reusable."""
+
+    def _counting_fence(self, monkeypatch):
+        calls = []
+        orig = pipeline._await_in_flight
+
+        def fence(in_flight):
+            calls.append(1)
+            orig(in_flight)
+
+        monkeypatch.setattr(pipeline, "_await_in_flight", fence)
+        return calls
+
+    def test_close_mid_stream_fences(self, monkeypatch):
+        calls = self._counting_fence(monkeypatch)
+        A = _host()
+        bounds = pipeline.panel_bounds(A.shape[0], 64)
+        gen = pipeline.stream_host_panels(A, bounds, 2)
+        next(gen), next(gen)
+        gen.close()
+        assert calls == [1]
+
+    def test_raise_mid_consume_fences_then_reusable(self, monkeypatch):
+        calls = self._counting_fence(monkeypatch)
+        A = _host()
+        bounds = pipeline.panel_bounds(A.shape[0], 64)
+
+        with pytest.raises(RuntimeError, match="consumer died"):
+            for i, _ in enumerate(pipeline.stream_host_panels(A, bounds, 2)):
+                if i == 1:
+                    raise RuntimeError("consumer died at panel 1")
+        assert calls == [1]
+
+        monkeypatch.undo()
+        panels = list(pipeline.stream_host_panels(A, bounds, 2))
+        for p, (lo, hi) in zip(panels, bounds):
+            np.testing.assert_array_equal(np.asarray(p), A[lo:hi])
+
+    def test_exhausted_stream_fences_once(self, monkeypatch):
+        calls = self._counting_fence(monkeypatch)
+        A = _host()
+        bounds = pipeline.panel_bounds(A.shape[0], 64)
+        list(pipeline.stream_host_panels(A, bounds, 2))
+        assert calls == [1]
