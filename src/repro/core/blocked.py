@@ -48,6 +48,7 @@ bit-identical to the synchronous, undonated walk (DESIGN.md §Pipeline).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 from typing import List, Sequence, Tuple
@@ -369,10 +370,25 @@ def eigvals_streamed(
 # Batched (vmap) randomized SVD
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("k", "cfg"))
-def _batched_tall(A: jax.Array, seeds: jax.Array, k: int, cfg: RSVDConfig):
+#: trace-time tally: (shape, dtype, k, cfg) -> how many times the batched
+#: body was TRACED (not executed).  Incrementing inside the function body
+#: runs at trace time only, so a jit cache hit leaves the count untouched —
+#: the serve-layer executable cache asserts steady-state re-trace-freedom
+#: (at most one trace per distinct plan) against this.
+_TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+def _trace_key(shape, dtype, k: int, cfg: RSVDConfig):
+    return (tuple(shape), jnp.dtype(dtype).name, int(k), cfg)
+
+
+def _batched_tall_body(A: jax.Array, seeds: jax.Array, k: int, cfg: RSVDConfig):
+    _TRACE_COUNTS[_trace_key(A.shape, A.dtype, k, cfg)] += 1
     with qr_mod.kernel_backend(cfg.kernel_backend):
         return jax.vmap(lambda a, sd: _rsvd_body(a, k, cfg, sd))(A, seeds)
+
+
+_batched_tall = jax.jit(_batched_tall_body, static_argnames=("k", "cfg"))
 
 
 @functools.partial(jax.jit, static_argnames=("k", "cfg", "fault_key"))
@@ -394,6 +410,37 @@ def _batched_tall_probed(A: jax.Array, seeds: jax.Array, k: int,
         return jax.vmap(one)(A, seeds)
 
 
+def batched_cfg(cfg: RSVDConfig) -> RSVDConfig:
+    """The config the batched body actually traces with: fused power and the
+    streaming fields are normalized away (meaningless under vmap — they
+    would only fragment the jit cache key).  The serve-layer executable
+    cache applies the SAME normalization when predicting a plan's trace
+    key, so cache bookkeeping and execution can never drift apart."""
+    if cfg.fused_power or cfg.block_rows or cfg.pipeline_depth:
+        return dataclasses.replace(cfg, fused_power=False, block_rows=None,
+                                   pipeline_depth=None)
+    return cfg
+
+
+def slice_seeds(seed, B: int) -> jax.Array:
+    """Per-slice sketch seeds for a [B, m, n] batch.
+
+    A scalar keeps the historical contract — slice i sketches with
+    seed + i, a disjoint logical stream of the counter RNG.  A (B,)-shaped
+    array pins each slice's seed EXPLICITLY: the request-coalescing service
+    stacks unrelated requests into one batch, so slice seeds must follow
+    the requests they came from (permuting arrival order permutes seeds
+    with the slices, leaving every per-request result bit-identical)."""
+    if np.ndim(seed) == 0:
+        return jnp.uint32(seed) + jnp.arange(B, dtype=jnp.uint32)
+    seeds = jnp.asarray(seed, jnp.uint32)
+    if seeds.shape != (B,):
+        raise ValueError(
+            f"per-slice seeds must have shape ({B},) to match the batch, "
+            f"got {tuple(seeds.shape)}")
+    return seeds
+
+
 def svd_batched(
     A: jax.Array,
     k: int,
@@ -405,9 +452,10 @@ def svd_batched(
 
     One vmapped program instead of B kernel launches — the fleet-of-small-
     matrices workload (per-channel PCA, per-layer gradient compression).
-    Slice i sketches with seed + i: the counter RNG makes that a disjoint
-    logical stream, so batching changes nothing statistically vs. a Python
-    loop with per-matrix seeds.
+    Slice i sketches with seed + i (or with ``seed[i]`` when ``seed`` is a
+    (B,)-shaped array — see `slice_seeds`): the counter RNG makes that a
+    disjoint logical stream, so batching changes nothing statistically vs.
+    a Python loop with per-matrix seeds.
 
     The fused-sketch kernel takes its seed as a traced SMEM scalar, so the
     per-slice seeds vmap straight through it — the batched path uses the
@@ -421,12 +469,8 @@ def svd_batched(
     if m < n:
         V, S, Ut = svd_batched(jnp.swapaxes(A, -1, -2), k, cfg, seed=seed)
         return jnp.swapaxes(Ut, -1, -2), S, jnp.swapaxes(V, -1, -2)
-    if cfg.fused_power or cfg.block_rows or cfg.pipeline_depth:
-        # pipeline_depth is also normalized away: it is meaningless under
-        # vmap and would only fragment the jit cache key
-        cfg = dataclasses.replace(cfg, fused_power=False, block_rows=None,
-                                  pipeline_depth=None)
-    seeds = jnp.uint32(seed) + jnp.arange(A.shape[0], dtype=jnp.uint32)
+    cfg = batched_cfg(cfg)
+    seeds = slice_seeds(seed, A.shape[0])
     from repro.linalg import faults as faults_mod, guard as guard_mod
 
     if guard_mod.active_sink() is not None:

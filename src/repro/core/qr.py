@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import contextlib
 import sys
+import threading
 from typing import Literal, Tuple
 
 import jax
@@ -53,29 +54,30 @@ KernelBackend = Literal["jnp", "pallas"]
 # fp32, which would silently downgrade the paper's f64 faithful setting.
 # ---------------------------------------------------------------------------
 
-_active_backend: KernelBackend = "jnp"
+# Thread-local: concurrent service worker threads may trace under different
+# backends at once; a scope opened on one thread must not leak into another.
+_backend_state = threading.local()
 
 
 @contextlib.contextmanager
 def kernel_backend(name: KernelBackend):
     """Trace-time scope: route Gram/TRSM through the named backend."""
-    global _active_backend
     if name not in ("jnp", "pallas"):
         raise ValueError(f"unknown kernel backend: {name}")
-    prev = _active_backend
-    _active_backend = name
+    prev = getattr(_backend_state, "active", "jnp")
+    _backend_state.active = name
     try:
         yield
     finally:
-        _active_backend = prev
+        _backend_state.active = prev
 
 
 def active_kernel_backend() -> KernelBackend:
-    return _active_backend
+    return getattr(_backend_state, "active", "jnp")
 
 
 def _use_pallas(Y: jax.Array) -> bool:
-    return _active_backend == "pallas" and Y.dtype != jnp.float64
+    return active_kernel_backend() == "pallas" and Y.dtype != jnp.float64
 
 
 def gram(Y: jax.Array) -> jax.Array:

@@ -33,5 +33,12 @@ from repro.linalg import guard  # noqa: F401
 from repro.linalg import pipeline  # noqa: F401
 from repro.linalg.guard import GuardPolicy, HealthReport  # noqa: F401
 from repro.linalg.planner import Budget, ExecutionPlan  # noqa: F401
-from repro.linalg.registry import DecompositionKind, kinds, register  # noqa: F401
+from repro.linalg.registry import (  # noqa: F401
+    DecompositionKind,
+    cached_plan,
+    clear_plan_cache,
+    kinds,
+    plan_cache_stats,
+    register,
+)
 from repro.linalg.spec import Energy, Rank, Spec, Tolerance, as_spec  # noqa: F401

@@ -138,7 +138,7 @@ def decompose(
             f"not match the requested kind={kind!r} spec={spec.describe()} — "
             "re-plan with linalg.plan(a, spec, kind=kind)"
         )
-    pl = plan if plan is not None else planner_mod.plan(
+    pl = plan if plan is not None else registry_mod.cached_plan(
         op, spec, budget=budget, overrides=overrides, kind=kind,
         guard=guard, validate=bool(validate),
     )
@@ -217,7 +217,7 @@ def svd(
     HealthReport itself."""
     k = _fixed_rank(k, "svd")
     op = as_linop(a)
-    pl = plan if plan is not None else planner_mod.plan(
+    pl = plan if plan is not None else registry_mod.cached_plan(
         op, k, budget=budget, overrides=overrides, guard=guard,
         validate=bool(validate))
     pl = _with_guard_overrides(pl, guard, validate, pinned=plan is not None)
@@ -306,7 +306,8 @@ def eigvals(
     mode: Algorithm 1 steps 1-5, Sigma only)."""
     k = _fixed_rank(k, "eigvals")
     op = as_linop(a)
-    pl = plan if plan is not None else planner_mod.plan(op, k, budget=budget, overrides=overrides)
+    pl = plan if plan is not None else registry_mod.cached_plan(
+        op, k, budget=budget, overrides=overrides)
     cfg = pl.to_config()
     if pl.path == "dense":
         from repro.core import rsvd as rsvd_mod

@@ -54,8 +54,10 @@ Probe semantics (see DESIGN.md §Guarded execution for the math):
 - ``nonfinite_panels``  streamed-source panels that failed the (device-
                      resident, reduction-only) finiteness check.
 
-The sink is a trace-time module-global stack (same pattern as
-``qr.kernel_backend`` / ``pipeline.default_depth``): eager bodies record
+The sink is a trace-time THREAD-LOCAL stack (same pattern as
+``qr.kernel_backend`` / ``pipeline.default_depth`` — per-thread so the
+decomposition service's concurrent worker threads cannot leak probes or
+probed-twin routing into each other's solves): eager bodies record
 concrete device scalars; jitted bodies get "probed" compiled twins that
 open a sink inside the trace and return the probe dict as extra jit
 outputs, which the driver folds back via :func:`absorb`.  Unprobed jits
@@ -66,6 +68,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import threading
 from typing import Callable, List, Optional, Tuple
 
 import jax
@@ -170,11 +173,23 @@ class ProbeSink:
         return out
 
 
-_sinks: List[ProbeSink] = []
+# The sink stack is THREAD-LOCAL: the decomposition service runs solves
+# from several worker threads at once, and a guard sink opened by one
+# thread's guarded run must never capture probes (or reroute jits to their
+# probed twins) in another thread's concurrent solve.
+_sink_state = threading.local()
+
+
+def _sink_stack() -> List[ProbeSink]:
+    stack = getattr(_sink_state, "stack", None)
+    if stack is None:
+        stack = _sink_state.stack = []
+    return stack
 
 
 def active_sink() -> Optional[ProbeSink]:
-    return _sinks[-1] if _sinks else None
+    stack = getattr(_sink_state, "stack", None)
+    return stack[-1] if stack else None
 
 
 @contextlib.contextmanager
@@ -182,11 +197,12 @@ def collecting():
     """Open a probe sink for the duration of the block (stack discipline —
     probed jit twins open a nested sink inside their trace)."""
     sink = ProbeSink()
-    _sinks.append(sink)
+    stack = _sink_stack()
+    stack.append(sink)
     try:
         yield sink
     finally:
-        _sinks.remove(sink)
+        stack.remove(sink)
 
 
 def absorb(probes: dict) -> None:
@@ -218,21 +234,20 @@ def note_transfer_degraded() -> None:
 # ---------------------------------------------------------------------------
 # input validation (the `validate=` knob)
 
-_validation_depth = 0
+_validation_state = threading.local()  # per-thread, like the sink stack
 
 
 def validation_active() -> bool:
-    return _validation_depth > 0
+    return getattr(_validation_state, "depth", 0) > 0
 
 
 @contextlib.contextmanager
 def _validation_scope():
-    global _validation_depth
-    _validation_depth += 1
+    _validation_state.depth = getattr(_validation_state, "depth", 0) + 1
     try:
         yield
     finally:
-        _validation_depth -= 1
+        _validation_state.depth -= 1
 
 
 def _peel(op):

@@ -57,6 +57,7 @@ from __future__ import annotations
 
 import collections
 import contextlib
+import threading
 import time
 from typing import Iterable, Iterator, List, Optional, Sequence, Tuple
 
@@ -76,7 +77,10 @@ TRANSFER_BACKOFF_S = 0.02
 #: while panel i+1 transfers; deeper rings only help jittery links)
 DEFAULT_DEPTH = 2
 
-_depth_override: Optional[int] = None
+# Thread-local (like the guard's sink stack): the decomposition service
+# runs solves on several worker threads, and one thread's ambient depth
+# must not reach another thread's concurrent panel walk.
+_depth_state = threading.local()
 
 
 @contextlib.contextmanager
@@ -86,13 +90,36 @@ def default_depth(depth: Optional[int]):
     The planner stamps `pipeline_depth` on the ExecutionPlan; executors wrap
     the solve in this scope so duck-typed panel consumers (core/adaptive.py,
     HostOp.matmat) honor the plan without a threaded parameter."""
-    global _depth_override
-    prev = _depth_override
-    _depth_override = depth
+    prev = getattr(_depth_state, "depth", None)
+    _depth_state.depth = depth
     try:
         yield
     finally:
-        _depth_override = prev
+        _depth_state.depth = prev
+
+
+# Per-thread per-panel callback.  The serve-layer scheduler hangs its
+# cooperative yield gate here: a long out-of-core job's panel walk calls the
+# hook once per produced panel, and the gate uses those calls to hand the
+# device to waiting short requests between panel groups.  Every panel path
+# funnels through `_panel_probe`, so the hook covers the staged ring, the
+# depth-1 synchronous walk, and `lookahead` alike.  One getattr when unset.
+_hook_state = threading.local()
+
+
+@contextlib.contextmanager
+def panel_hook(fn):
+    """Ambient per-panel callback for the CURRENT thread's panel walks.
+
+    ``fn(ordinal)`` runs after each panel is produced (post fault/guard/
+    validate probes), on the consuming thread — it may block, which is
+    exactly how the scheduler's yield gate pauses a big job mid-walk."""
+    prev = getattr(_hook_state, "fn", None)
+    _hook_state.fn = fn
+    try:
+        yield
+    finally:
+        _hook_state.fn = prev
 
 
 def resolve_depth(depth: Optional[int] = None, host_resident: bool = False,
@@ -111,8 +138,9 @@ def resolve_depth(depth: Optional[int] = None, host_resident: bool = False,
     prefetch there must be an explicit opt-in (testing the machinery)."""
     if depth:
         return max(1, int(depth))
-    if _depth_override:
-        return max(1, int(_depth_override))
+    override = getattr(_depth_state, "depth", None)
+    if override:
+        return max(1, int(override))
     if source_default:
         return max(1, int(source_default))
     if host_resident and jax.default_backend() != "cpu":
@@ -150,6 +178,9 @@ def _panel_probe(idx: int, panel, rows: Optional[Tuple[int, int]] = None):
             raise ValueError(
                 f"validate: non-finite values in input panel {idx} ({where}) "
                 "— clean the source or drop validate=")
+    hook = getattr(_hook_state, "fn", None)
+    if hook is not None:
+        hook(idx)
     return panel
 
 

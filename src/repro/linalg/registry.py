@@ -28,9 +28,12 @@ against `kinds()` at plan time.
 """
 from __future__ import annotations
 
+import collections
+import threading
 from dataclasses import dataclass
 from typing import Callable, Dict, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -80,6 +83,112 @@ def get(name: str) -> DecompositionKind:
 
 def kinds() -> Tuple[str, ...]:
     return tuple(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# LRU plan cache
+#
+# Planning is pure given (source fingerprint, spec, kind, budget, overrides,
+# guard, validate, backend) — everything the planner reads off a source is
+# shape/dtype/residency metadata, never data — yet `decompose()` re-planned
+# on every call.  The fingerprints below are hashable, so identical repeat
+# calls (the serving hot path: same layer shapes, same spec, thousands of
+# requests) reuse the frozen ExecutionPlan instead of re-walking the
+# autotune tables and the roofline model.  Sources whose planning inputs
+# cannot be fingerprinted safely (sharded meshes, protocol-only operators)
+# BYPASS the cache — correctness first, the cache is an optimization.
+# ---------------------------------------------------------------------------
+
+PLAN_CACHE_SIZE = 256
+
+_plan_cache: "collections.OrderedDict" = collections.OrderedDict()
+_plan_cache_lock = threading.Lock()  # decompose() is called from service threads
+_plan_cache_stats = {"hits": 0, "misses": 0, "bypasses": 0}
+
+
+def _op_fingerprint(op):
+    """Hashable token covering every source attribute the planner reads, or
+    None when this source kind can't be fingerprinted safely.
+
+    Composed/transposed wrappers contribute their typenames (the planner
+    only dispatches on them and peels to the base); the base contributes
+    shape, dtype, residency (host numpy vs device — `_host_rooted` and the
+    dense/streamed split read it), block_rows, pipeline_depth, and nnz."""
+    from repro.linalg import operators as ops_mod
+
+    parts = []
+    depth = 0
+    while isinstance(op, (ops_mod.ComposedOp, ops_mod._TransposedOp)):
+        parts.append(type(op).__name__)
+        op = op.base if isinstance(op, ops_mod.ComposedOp) else op._op
+        depth += 1
+        if depth > 32:
+            return None
+    if op.sharding is not None:
+        return None  # mesh identity is not worth fingerprinting
+    if type(op) not in (ops_mod.DenseOp, ops_mod.HostOp, ops_mod.StackedOp,
+                        ops_mod.SparseOp):
+        return None  # protocol-only / third-party sources: bypass
+    arr = getattr(op, "array", None)
+    parts.append((
+        type(op).__name__,
+        tuple(op.shape),
+        jnp.dtype(op.dtype).name,
+        isinstance(arr, np.ndarray),          # residency drives path choice
+        op.block_rows,
+        op.pipeline_depth,
+        getattr(op, "nnz", None) if type(op) is ops_mod.SparseOp else None,
+    ))
+    return tuple(parts)
+
+
+def cached_plan(op, spec, budget=None, overrides=None, kind: str = "svd",
+                nnz=None, guard=None, validate: bool = False):
+    """`planner.plan` behind a size-bounded LRU keyed on the already-hashable
+    inputs.  Semantically transparent: a hit returns the SAME frozen
+    ExecutionPlan a fresh plan() call would build (plans carry no data), and
+    un-fingerprintable sources fall through to planner.plan untouched."""
+    from repro.linalg import guard as guard_mod
+    from repro.linalg import planner as planner_mod
+    from repro.linalg import spec as spec_mod
+
+    spec = spec_mod.as_spec(spec)
+    guard = guard_mod.as_guard(guard)
+    token = _op_fingerprint(op)
+    if token is None:
+        with _plan_cache_lock:
+            _plan_cache_stats["bypasses"] += 1
+        return planner_mod.plan(op, spec, budget=budget, overrides=overrides,
+                                kind=kind, nnz=nnz, guard=guard,
+                                validate=validate)
+    key = (token, spec, kind, budget, overrides, nnz, guard, bool(validate),
+           jax.default_backend())
+    with _plan_cache_lock:
+        pl = _plan_cache.get(key)
+        if pl is not None:
+            _plan_cache.move_to_end(key)
+            _plan_cache_stats["hits"] += 1
+            return pl
+        _plan_cache_stats["misses"] += 1
+    pl = planner_mod.plan(op, spec, budget=budget, overrides=overrides,
+                          kind=kind, nnz=nnz, guard=guard, validate=validate)
+    with _plan_cache_lock:
+        _plan_cache[key] = pl
+        while len(_plan_cache) > PLAN_CACHE_SIZE:
+            _plan_cache.popitem(last=False)
+    return pl
+
+
+def plan_cache_stats() -> Dict[str, int]:
+    with _plan_cache_lock:
+        return dict(_plan_cache_stats, size=len(_plan_cache))
+
+
+def clear_plan_cache() -> None:
+    with _plan_cache_lock:
+        _plan_cache.clear()
+        for k in _plan_cache_stats:
+            _plan_cache_stats[k] = 0
 
 
 # ---------------------------------------------------------------------------

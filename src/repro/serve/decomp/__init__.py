@@ -1,0 +1,13 @@
+# repro.serve.decomp — the decomposition service: plan-cached, coalescing,
+# walltime-aware scheduling of concurrent decompose() traffic.
+# See DESIGN.md §"Decomposition service".
+from repro.serve.decomp.cache import ExecutableCache, trace_count  # noqa: F401
+from repro.serve.decomp.coalesce import Coalescer, CoalesceKey  # noqa: F401
+from repro.serve.decomp.metrics import MetricsRecorder, RequestRecord  # noqa: F401
+from repro.serve.decomp.scheduler import DeviceGate, TwoLaneQueues  # noqa: F401
+from repro.serve.decomp.service import (  # noqa: F401
+    DecompositionService,
+    RequestError,
+    ServiceClosed,
+    ServiceOverloaded,
+)

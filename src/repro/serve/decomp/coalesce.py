@@ -1,0 +1,99 @@
+"""Request coalescing: same-shape small dense requests -> one StackedOp batch.
+
+Admission-window semantics: the FIRST request of a bucket opens a window of
+`window_s`; every compatible request arriving before it closes joins the
+bucket.  A bucket seals (becomes an executable batch) when its window
+expires or it reaches `max_batch`, whichever first.  Compatibility is exact:
+(shape, dtype, spec, kind, overrides, guard) — anything looser would change
+the executed program for some member.
+
+Because slice seeds follow their requests through the batched body
+(`blocked.slice_seeds`), membership and ORDER inside a batch are
+numerically irrelevant: each member's result is bit-identical to its own
+batch-of-1 execution (tests/test_service.py pins this, including under
+arrival-order permutation).
+
+Batch-size bucketing: sealed batches are padded up to the next power of two
+(duplicating slice 0; pad results are discarded) so the executable cache
+sees O(log max_batch) distinct batch shapes per request shape instead of
+max_batch — fewer traces, no effect on real slices (vmap slices are
+independent).  The coalescer is NOT thread-safe by itself; the service
+serializes access under its admission lock.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class CoalesceKey:
+    """Exact-compatibility bucket key (all fields frozen/hashable)."""
+
+    shape: Tuple[int, ...]
+    dtype: str
+    spec: object          # linalg Spec (frozen)
+    kind: str
+    overrides: object     # RSVDConfig | None (frozen)
+    guard: object         # GuardPolicy (frozen)
+
+
+class _Bucket:
+    def __init__(self, opened_at: float):
+        self.opened_at = opened_at
+        self.members: List[object] = []
+
+
+def pad_batch(b: int, max_batch: int) -> int:
+    """Next power of two >= b, clamped to max_batch."""
+    p = 1
+    while p < b:
+        p *= 2
+    return min(p, max_batch)
+
+
+class Coalescer:
+    """Open buckets, keyed by CoalesceKey; the service's admission loop
+    drains sealed batches."""
+
+    def __init__(self, window_s: float = 0.002, max_batch: int = 8):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.window_s = float(window_s)
+        self.max_batch = int(max_batch)
+        self._open: Dict[CoalesceKey, _Bucket] = {}
+
+    def add(self, key: CoalesceKey, req, now: float) -> Optional[List[object]]:
+        """Admit one request.  Returns the sealed member list when this
+        request FILLS its bucket (max_batch), else None (the window timer
+        will seal it)."""
+        bucket = self._open.get(key)
+        if bucket is None:
+            bucket = self._open[key] = _Bucket(opened_at=now)
+        bucket.members.append(req)
+        if len(bucket.members) >= self.max_batch:
+            del self._open[key]
+            return bucket.members
+        return None
+
+    def pop_due(self, now: float) -> List[List[object]]:
+        """Seal and return every bucket whose admission window has closed."""
+        due = [k for k, b in self._open.items()
+               if now - b.opened_at >= self.window_s]
+        return [self._open.pop(k).members for k in due]
+
+    def flush(self) -> List[List[object]]:
+        """Seal everything immediately (service close / explicit flush)."""
+        out = [b.members for b in self._open.values()]
+        self._open.clear()
+        return out
+
+    def next_deadline(self) -> Optional[float]:
+        """Earliest instant any open bucket's window closes (None: no
+        open buckets) — what the admission loop sleeps until."""
+        if not self._open:
+            return None
+        return min(b.opened_at for b in self._open.values()) + self.window_s
+
+    def open_buckets(self) -> int:
+        return len(self._open)

@@ -1,0 +1,102 @@
+"""Per-request service metrics: queue/compile/execute walltime, coalescing
+factor, cache hit rate, predicted-vs-measured walltime error.
+
+One thread-safe recorder per `DecompositionService`.  Workers append a
+`RequestRecord` as each request resolves; `export()` reduces the log to the
+flat dict the bench harness persists (benchmarks/bench_rsvd.py
+`service_rows`) — percentiles for the latency distributions, means for the
+ratios.  Records are kept raw (one dataclass per request, bounded by
+`max_records`) so tests can assert per-request facts — e.g. the scheduler's
+starvation bound: no request's `big_slices_waited` exceeds K.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestRecord:
+    """One resolved request, as the metrics layer saw it."""
+
+    kind: str                      # registry kind ("svd", "pca", ...)
+    lane: str                      # "small" | "big"
+    coalesced: int                 # real requests sharing the batch (1 = solo)
+    cache_hit: Optional[bool]      # executable-cache verdict (None: uncached path)
+    queue_s: float                 # submit -> execution start
+    execute_s: float               # solve walltime (shared by a whole batch)
+    total_s: float                 # submit -> future resolved
+    predicted_s: float             # plan.predicted_walltime_s of the executed plan
+    big_slices_waited: int         # big-job slices completed while this waited
+    failed: bool = False           # future resolved with an error
+
+    @property
+    def walltime_error(self) -> Optional[float]:
+        """|measured - predicted| / measured (None when unmeasurable)."""
+        if self.execute_s <= 0.0:
+            return None
+        return abs(self.execute_s - self.predicted_s) / self.execute_s
+
+
+def _pct(xs: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
+
+
+class MetricsRecorder:
+    """Append-only request log + counter block, exported as one flat dict."""
+
+    def __init__(self, max_records: int = 100_000):
+        self._lock = threading.Lock()
+        self._records: List[RequestRecord] = []
+        self._max = max_records
+        self._compile_s = 0.0
+        self._compiles = 0
+
+    def record(self, rec: RequestRecord) -> None:
+        with self._lock:
+            if len(self._records) < self._max:
+                self._records.append(rec)
+
+    def record_compile(self, seconds: float) -> None:
+        """First call through a fresh executable-cache entry (trace+compile
+        rides on it) — attributed here, not to any single request."""
+        with self._lock:
+            self._compile_s += float(seconds)
+            self._compiles += 1
+
+    def records(self) -> List[RequestRecord]:
+        with self._lock:
+            return list(self._records)
+
+    def export(self) -> Dict[str, float]:
+        """The flat summary dict (bench schema `service_rows`)."""
+        recs = self.records()
+        done = [r for r in recs if not r.failed]
+        queue = [r.queue_s for r in done]
+        total = [r.total_s for r in done]
+        cached = [r for r in done if r.cache_hit is not None]
+        hits = sum(1 for r in cached if r.cache_hit)
+        coalescible = [r for r in done if r.lane == "small" and r.cache_hit is not None]
+        errs = [e for e in (r.walltime_error for r in done) if e is not None]
+        with self._lock:
+            compile_s, compiles = self._compile_s, self._compiles
+        return {
+            "requests": len(recs),
+            "failed": sum(1 for r in recs if r.failed),
+            "coalescing_factor": (
+                float(np.mean([r.coalesced for r in coalescible])) if coalescible else 1.0
+            ),
+            "cache_hit_rate": hits / len(cached) if cached else 0.0,
+            "compiles": compiles,
+            "compile_s_total": compile_s,
+            "queue_s_p50": _pct(queue, 50),
+            "queue_s_p99": _pct(queue, 99),
+            "latency_s_p50": _pct(total, 50),
+            "latency_s_p99": _pct(total, 99),
+            "execute_s_p50": _pct([r.execute_s for r in done], 50),
+            "predicted_walltime_err_p50": _pct(errs, 50),
+            "max_big_slices_waited": max((r.big_slices_waited for r in recs), default=0),
+        }

@@ -1,0 +1,185 @@
+"""Two-lane walltime-aware scheduling with a starvation bound.
+
+Lanes (the Lu et al. out-of-core motivation: one 65536x4096 streamed job
+takes seconds and must not starve a thousand millisecond-scale PCA calls):
+
+  small   shortest-predicted-first priority queue ordered by the plan's
+          `predicted_walltime_s` (FIFO among ties).  Coalesced batches and
+          quick solo requests live here.
+  big     bounded FIFO (admission refuses work past `capacity` queued jobs)
+          for solves whose predicted walltime crosses the big threshold —
+          out-of-core streamed jobs foremost.
+
+`DeviceGate` arbitrates the device between the lanes cooperatively.  A big
+job holds the device, but its panel walk calls `panel_tick` once per
+produced panel (wired through `pipeline.panel_hook`, which every panel path
+funnels through); every `panel_group` panels counts one SLICE, and at each
+slice boundary the gate yields the device whenever small-lane work is
+admitted, re-acquiring only when the small lane is idle again (or, with
+`big_patience_s` set, when the big job has been parked that long — the
+anti-starvation valve for the big lane under saturating small traffic).
+
+The starvation bound: once a small request is admitted, the in-flight slice
+finishes (<= 1 slice counter increment) and then the gate parks the big job
+until the small lane drains — so no admitted request ever waits more than
+K = 1 big-job slice (2 with the admission race), independent of how many
+panels the big job still has.  `DecompositionService` snapshots
+`gate.big_slices` at submit and at execution start; the difference is the
+per-request `big_slices_waited` that tests assert against K.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+import time
+from typing import List, Optional, Tuple
+
+
+class DeviceGate:
+    """Cooperative small-lane-priority device lock with sliced big jobs."""
+
+    def __init__(self, panel_group: int = 4,
+                 big_patience_s: Optional[float] = None):
+        self._cond = threading.Condition()
+        self._holder: Optional[str] = None
+        self._small_pending = 0     # admitted small work not yet completed
+        self._panels = 0            # big-job panels seen since acquisition
+        self.panel_group = max(1, int(panel_group))
+        self.big_patience_s = big_patience_s
+        self.big_slices = 0         # completed big-job slices, ever
+
+    # -- small lane ---------------------------------------------------------
+
+    def note_small_admitted(self) -> None:
+        with self._cond:
+            self._small_pending += 1
+            self._cond.notify_all()
+
+    def note_small_done(self) -> None:
+        with self._cond:
+            self._small_pending -= 1
+            self._cond.notify_all()
+
+    def small_turn(self):
+        return _Turn(self, "small")
+
+    # -- big lane -----------------------------------------------------------
+
+    def big_turn(self):
+        return _Turn(self, "big")
+
+    def _acquire(self, who: str) -> None:
+        with self._cond:
+            if who == "small":
+                while self._holder is not None:
+                    self._cond.wait()
+            else:
+                deadline = (time.monotonic() + self.big_patience_s
+                            if self.big_patience_s is not None else None)
+                # park while a small holds the device OR small work is
+                # admitted — the strict-drain policy behind the K bound
+                while self._holder is not None or (
+                    self._small_pending > 0 and not _expired(deadline)
+                ):
+                    self._cond.wait(timeout=_remaining(deadline))
+                self._panels = 0
+            self._holder = who
+
+    def _release(self) -> None:
+        with self._cond:
+            self._holder = None
+            self._cond.notify_all()
+
+    def panel_tick(self, _ordinal: int = 0) -> None:
+        """Big-job per-panel callback (pipeline.panel_hook target).  Every
+        `panel_group` panels: count one slice, then yield the device if
+        small work is waiting."""
+        self._panels += 1
+        if self._panels % self.panel_group:
+            return
+        with self._cond:
+            self.big_slices += 1
+            if self._small_pending == 0:
+                return  # nobody waiting: keep the device, zero overhead
+        self._release()
+        self._acquire("big")
+
+
+def _expired(deadline: Optional[float]) -> bool:
+    return deadline is not None and time.monotonic() >= deadline
+
+
+def _remaining(deadline: Optional[float]) -> Optional[float]:
+    return None if deadline is None else max(0.0, deadline - time.monotonic())
+
+
+class _Turn:
+    def __init__(self, gate: DeviceGate, who: str):
+        self._gate = gate
+        self._who = who
+
+    def __enter__(self):
+        self._gate._acquire(self._who)
+        return self._gate
+
+    def __exit__(self, *exc):
+        self._gate._release()
+        return False
+
+
+class TwoLaneQueues:
+    """The lanes themselves (thread-safe): a shortest-predicted-first heap
+    and a bounded big FIFO.  Workers block on `pop_*`; `close()` wakes
+    everyone so worker loops can drain and exit."""
+
+    def __init__(self, big_capacity: int = 4):
+        self._cond = threading.Condition()
+        self._small: List[Tuple[float, int, object]] = []  # (predicted, seq, item)
+        self._big: List[object] = []
+        self._seq = itertools.count()
+        self._closed = False
+        self.big_capacity = int(big_capacity)
+
+    def push_small(self, predicted_s: float, item) -> None:
+        with self._cond:
+            heapq.heappush(self._small, (float(predicted_s), next(self._seq), item))
+            self._cond.notify_all()
+
+    def push_big(self, item) -> bool:
+        """False when the big lane is at capacity (admission refused)."""
+        with self._cond:
+            if len(self._big) >= self.big_capacity:
+                return False
+            self._big.append(item)
+            self._cond.notify_all()
+            return True
+
+    def pop_small(self) -> Optional[object]:
+        with self._cond:
+            while not self._small and not self._closed:
+                self._cond.wait()
+            if self._small:
+                return heapq.heappop(self._small)[2]
+            return None  # closed and drained
+
+    def pop_big(self) -> Optional[object]:
+        with self._cond:
+            while not self._big and not self._closed:
+                self._cond.wait()
+            if self._big:
+                return self._big.pop(0)
+            return None
+
+    def small_backlog(self) -> int:
+        with self._cond:
+            return len(self._small)
+
+    def big_backlog(self) -> int:
+        with self._cond:
+            return len(self._big)
+
+    def close(self) -> None:
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()

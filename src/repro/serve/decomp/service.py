@@ -1,0 +1,417 @@
+"""`DecompositionService`: concurrent decomposition requests behind futures.
+
+    with DecompositionService() as svc:
+        futs = [svc.submit(x, linalg.Rank(8), seed=i) for i, x in enumerate(xs)]
+        results = [f.result() for f in futs]      # linalg.Decomposition each
+
+What `submit` does with a request:
+
+1. plans it through the LRU plan cache (`linalg.cached_plan`) — repeat
+   shapes never re-plan;
+2. classifies it: COALESCIBLE small dense svd traffic joins an admission-
+   window bucket (coalesce.py) and executes as one `StackedOp` batch with
+   per-request slice seeds — every member's result bit-identical to its own
+   standalone `decompose(StackedOp(x[None]), ...)` call; everything else
+   runs solo, scheduled shortest-predicted-first on the small lane or FIFO
+   on the bounded big lane (scheduler.py) with out-of-core jobs yielding
+   the device between panel groups;
+3. resolves the future with a `linalg.Decomposition` (2-D factors for
+   coalescible traffic) or a `RequestError` carrying the guard's
+   `HealthReport` when the request's own input poisoned its solve —
+   neighbors in the same coalesced batch are unaffected (slice-level
+   finiteness screen + per-request retry fallback to uncoalesced,
+   guarded execution).
+
+Per-request `GuardPolicy` rides along: guarded requests run solo under
+`linalg.decompose(..., guard=...)` (the full report/retry machinery);
+coalesced fast-path batches are unguarded by construction (guard "off" is
+a coalescing-key field) and fall back to a guarded batch-of-1 only for the
+slice that failed its finiteness screen.
+
+`service.metrics.export()` is the bench harness surface: queue/compile/
+execute walltimes, coalescing factor, cache hit rate, predicted-vs-measured
+walltime error, and the scheduler's observed starvation bound.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import linalg
+from repro.linalg import guard as guard_mod
+from repro.linalg import pipeline as pipeline_mod
+from repro.linalg import registry as registry_mod
+from repro.linalg.api import Decomposition
+from repro.linalg.spec import Rank
+
+from repro.serve.decomp.cache import ExecutableCache, timed
+from repro.serve.decomp.coalesce import Coalescer, CoalesceKey, pad_batch
+from repro.serve.decomp.metrics import MetricsRecorder, RequestRecord
+from repro.serve.decomp.scheduler import DeviceGate, TwoLaneQueues
+
+
+class RequestError(RuntimeError):
+    """A single request's solve failed; `.health` carries the guard's
+    HealthReport from the isolated (uncoalesced, guarded) retry."""
+
+    def __init__(self, message: str, health=None):
+        super().__init__(message)
+        self.health = health
+
+
+class ServiceClosed(RuntimeError):
+    pass
+
+
+class ServiceOverloaded(RuntimeError):
+    """The bounded big-job lane is at capacity; retry later."""
+
+
+class _Request:
+    __slots__ = ("future", "op", "source", "spec", "kind", "seed", "overrides",
+                 "guard", "plan", "lane", "submitted_at", "slices_at_submit",
+                 "started_at", "slices_at_start")
+
+    def __init__(self, **kw):
+        for k, v in kw.items():
+            setattr(self, k, v)
+        self.started_at = None
+        self.slices_at_start = None
+
+
+class _Batch:
+    """A sealed coalesced bucket travelling through the small lane."""
+
+    __slots__ = ("members",)
+
+    def __init__(self, members):
+        self.members = members
+
+
+class DecompositionService:
+    """See module docstring.  All knobs are keyword-only:
+
+    window_s / max_batch      admission window and coalescing bound
+    coalesce_max_elems        m*n above which a dense request is no longer
+                              "small" (runs solo instead of batching)
+    big_threshold_s           predicted walltime that routes a request to
+                              the bounded big lane
+    big_capacity              queued big jobs beyond which submit raises
+                              ServiceOverloaded
+    panel_group               big-job panels per scheduler slice (the
+                              starvation bound's K is counted in these)
+    big_patience_s            optional anti-starvation valve for the BIG
+                              lane: longest the gate parks a big job while
+                              small traffic keeps arriving (None = park
+                              until the small lane drains)
+    """
+
+    def __init__(self, *, window_s: float = 0.002, max_batch: int = 8,
+                 coalesce_max_elems: int = 1 << 20,
+                 big_threshold_s: float = 0.05, big_capacity: int = 4,
+                 panel_group: int = 4, big_patience_s: Optional[float] = None):
+        self._admission = threading.Condition()
+        self._coalescer = Coalescer(window_s=window_s, max_batch=max_batch)
+        self._queues = TwoLaneQueues(big_capacity=big_capacity)
+        self.gate = DeviceGate(panel_group=panel_group,
+                               big_patience_s=big_patience_s)
+        self.executable_cache = ExecutableCache()
+        self.metrics = MetricsRecorder()
+        self.coalesce_max_elems = int(coalesce_max_elems)
+        self.big_threshold_s = float(big_threshold_s)
+        self._closed = False
+        self._inflight = 0          # admitted, future not yet resolved
+        self._idle = threading.Condition()
+        self._threads = [
+            threading.Thread(target=self._admit_loop, name="decomp-admit",
+                             daemon=True),
+            threading.Thread(target=self._small_loop, name="decomp-small",
+                             daemon=True),
+            threading.Thread(target=self._big_loop, name="decomp-big",
+                             daemon=True),
+        ]
+        for t in self._threads:
+            t.start()
+
+    # ------------------------------------------------------------------ API
+
+    def submit(self, source, spec, kind: str = "svd", *, seed: int = 0,
+               overrides=None, guard=None, validate: bool = False) -> Future:
+        """Admit one decomposition request; returns a Future resolving to a
+        `linalg.Decomposition` (or raising RequestError / the solve's own
+        structural error)."""
+        if self._closed:
+            raise ServiceClosed("submit() after close()")
+        op = linalg.as_linop(source)
+        spec = linalg.as_spec(spec)
+        policy = guard_mod.as_guard(guard)
+        entry = registry_mod.get(kind)
+        plan_op = entry.prepare(op) if entry.prepare is not None else op
+        pl = registry_mod.cached_plan(plan_op, spec, kind=kind,
+                                      overrides=overrides, guard=policy,
+                                      validate=validate)
+        fut: Future = Future()
+        req = _Request(future=fut, op=op, source=source, spec=spec, kind=kind,
+                       seed=seed, overrides=overrides, guard=policy, plan=pl,
+                       lane="small", submitted_at=time.perf_counter(),
+                       slices_at_submit=self.gate.big_slices)
+        with self._idle:
+            self._inflight += 1
+
+        if self._coalescible(op, spec, kind, policy, pl, validate, seed):
+            self.gate.note_small_admitted()
+            key = CoalesceKey(shape=tuple(op.shape),
+                              dtype=jnp.dtype(op.dtype).name, spec=spec,
+                              kind=kind, overrides=overrides, guard=policy)
+            with self._admission:
+                sealed = self._coalescer.add(key, req, time.perf_counter())
+                self._admission.notify_all()
+            if sealed is not None:
+                self._queues.push_small(pl.predicted_walltime_s * len(sealed),
+                                        _Batch(sealed))
+            return fut
+
+        big = (pl.predicted_walltime_s >= self.big_threshold_s
+               or pl.path == "streamed")
+        if big:
+            req.lane = "big"
+            if not self._queues.push_big(req):
+                with self._idle:
+                    self._inflight -= 1
+                raise ServiceOverloaded(
+                    f"big lane at capacity ({self._queues.big_capacity} queued)")
+        else:
+            self.gate.note_small_admitted()
+            self._queues.push_small(pl.predicted_walltime_s, req)
+        return fut
+
+    def flush(self) -> None:
+        """Seal every open admission bucket immediately (don't wait for
+        windows to expire).  Deterministic batch formation for tests."""
+        with self._admission:
+            sealed = self._coalescer.flush()
+        for members in sealed:
+            pred = members[0].plan.predicted_walltime_s * len(members)
+            self._queues.push_small(pred, _Batch(members))
+
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Block until every admitted request has resolved."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._idle:
+            while self._inflight > 0:
+                remaining = None if deadline is None else deadline - time.monotonic()
+                if remaining is not None and remaining <= 0:
+                    return False
+                self._idle.wait(timeout=remaining)
+        return True
+
+    def close(self, timeout: Optional[float] = None) -> None:
+        """Stop admitting, flush open buckets, drain in-flight work, join."""
+        if self._closed:
+            return
+        self._closed = True
+        self.flush()
+        self.drain(timeout=timeout)
+        self._queues.close()
+        with self._admission:
+            self._admission.notify_all()
+        for t in self._threads:
+            t.join(timeout=5.0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # -------------------------------------------------------------- routing
+
+    def _coalescible(self, op, spec, kind, policy, pl, validate, seed) -> bool:
+        """Small dense fixed-rank svd with guard off — the traffic class
+        whose batched execution is provably bit-identical per slice."""
+        return (
+            kind == "svd"
+            and isinstance(spec, Rank)
+            and pl.path == "dense"
+            and policy.mode == "off"
+            and not validate
+            and np.ndim(seed) == 0          # one slice seed per request
+            and getattr(op, "array", None) is not None
+            and len(op.shape) == 2
+            and pl.m * pl.n <= self.coalesce_max_elems
+        )
+
+    # -------------------------------------------------------------- workers
+
+    def _admit_loop(self):
+        """Seals buckets whose admission window expired."""
+        while True:
+            with self._admission:
+                now = time.perf_counter()
+                sealed = self._coalescer.pop_due(now)
+                if not sealed:
+                    if self._closed and self._coalescer.open_buckets() == 0:
+                        return
+                    deadline = self._coalescer.next_deadline()
+                    self._admission.wait(
+                        timeout=None if deadline is None else
+                        max(0.0, deadline - now) + 1e-4)
+                    continue
+            for members in sealed:
+                pred = members[0].plan.predicted_walltime_s * len(members)
+                self._queues.push_small(pred, _Batch(members))
+
+    def _small_loop(self):
+        while True:
+            item = self._queues.pop_small()
+            if item is None:
+                return
+            if isinstance(item, _Batch):
+                with self.gate.small_turn():
+                    self._run_batch(item.members)
+                for _ in item.members:
+                    self.gate.note_small_done()
+            else:
+                with self.gate.small_turn():
+                    self._run_solo(item)
+                self.gate.note_small_done()
+
+    def _big_loop(self):
+        while True:
+            req = self._queues.pop_big()
+            if req is None:
+                return
+            with self.gate.big_turn():
+                # the streamed panel walk yields the device between panel
+                # groups through the gate's tick (pipeline.panel_hook)
+                with pipeline_mod.panel_hook(self.gate.panel_tick):
+                    self._run_solo(req)
+
+    # ------------------------------------------------------------ execution
+
+    def _resolve(self, req: _Request, value=None, error=None,
+                 execute_s: float = 0.0, coalesced: int = 1,
+                 cache_hit: Optional[bool] = None, plan=None) -> None:
+        now = time.perf_counter()
+        pl = plan if plan is not None else req.plan
+        started = req.started_at if req.started_at is not None else now
+        # waited = big-job slices completed between SUBMIT and execution
+        # START — the per-request starvation measurement the bound covers
+        # (a big job's own slices don't count against itself)
+        at_start = (req.slices_at_start if req.slices_at_start is not None
+                    else self.gate.big_slices)
+        self.metrics.record(RequestRecord(
+            kind=req.kind, lane=req.lane, coalesced=coalesced,
+            cache_hit=cache_hit,
+            queue_s=started - req.submitted_at,
+            execute_s=execute_s,
+            total_s=now - req.submitted_at,
+            predicted_s=pl.predicted_walltime_s,
+            big_slices_waited=at_start - req.slices_at_submit,
+            failed=error is not None,
+        ))
+        if error is not None:
+            req.future.set_exception(error)
+        else:
+            req.future.set_result(value)
+        with self._idle:
+            self._inflight -= 1
+            self._idle.notify_all()
+
+    def _run_solo(self, req: _Request) -> None:
+        req.started_at = t0 = time.perf_counter()
+        req.slices_at_start = self.gate.big_slices
+        try:
+            dec = linalg.decompose(
+                req.op, req.spec, kind=req.kind, seed=req.seed,
+                overrides=req.overrides, guard=req.guard,
+                validate=req.plan.validate or None)
+            jax.block_until_ready(dec.factors)
+        except Exception as exc:  # structural errors and exhausted ladders
+            self._resolve(req, error=exc)
+            return
+        self._resolve(req, value=dec, execute_s=time.perf_counter() - t0,
+                      plan=dec.plan)
+
+    def _run_batch(self, members) -> None:
+        """Execute one sealed coalesced batch: stack, pad, solve through the
+        executable cache, screen per-slice finiteness, resolve members."""
+        started = time.perf_counter()
+        slices_now = self.gate.big_slices
+        for r in members:
+            r.started_at = started
+            r.slices_at_start = slices_now
+        r0 = members[0]
+        try:
+            arrays = [self._dense(r.op) for r in members]
+            B = len(arrays)
+            padded = pad_batch(B, self._coalescer.max_batch)
+            stack = jnp.stack(arrays + [arrays[0]] * (padded - B))
+            seeds = jnp.asarray(
+                [int(r.seed) for r in members] + [0] * (padded - B), jnp.uint32)
+            sop = linalg.StackedOp(stack)
+            pl = registry_mod.cached_plan(sop, r0.spec, kind="svd",
+                                          overrides=r0.overrides)
+            fn, hit = self.executable_cache.get(pl)
+            (U, S, Vt), dt = timed(fn, stack, seeds)
+            if not hit:
+                self.executable_cache.note_first_call(pl, dt)
+                self.metrics.record_compile(dt)
+        except Exception as exc:
+            for r in members:
+                self._resolve(r, error=exc)
+            return
+        finite = np.asarray(
+            jnp.isfinite(U).all(axis=(1, 2))
+            & jnp.isfinite(S).all(axis=1)
+            & jnp.isfinite(Vt).all(axis=(1, 2)))
+        k = r0.spec.k
+        for i, r in enumerate(members):
+            if finite[i]:
+                dec = Decomposition(
+                    kind="svd", spec=r.spec, plan=pl, rank=k,
+                    factors=(U[i], S[i], Vt[i]), rank_history=(k,),
+                    err_history=(), health=None)
+                self._resolve(r, value=dec, execute_s=dt, coalesced=B,
+                              cache_hit=hit, plan=pl)
+            else:
+                # slice-level fault isolation: retry THIS request alone,
+                # uncoalesced and guarded, so its HealthReport names what
+                # broke; its neighbors keep their (unaffected) results
+                self._retry_uncoalesced(r, coalesced=B)
+
+    def _retry_uncoalesced(self, req: _Request, coalesced: int) -> None:
+        guard = req.guard if req.guard.mode != "off" else "report"
+        t0 = time.perf_counter()
+        try:
+            dec = linalg.decompose(
+                linalg.StackedOp(self._dense(req.op)[None]), req.spec,
+                seed=req.seed, overrides=req.overrides, guard=guard)
+            jax.block_until_ready(dec.factors)
+        except Exception as exc:
+            self._resolve(req, error=exc, coalesced=coalesced)
+            return
+        dt = time.perf_counter() - t0
+        health = dec.health
+        if health is not None and not health.ok:
+            self._resolve(req, coalesced=coalesced, error=RequestError(
+                f"request solve unhealthy after uncoalesced retry:\n{health}",
+                health=health))
+            return
+        U, S, Vt = dec.factors
+        self._resolve(req, execute_s=dt, coalesced=coalesced, value=Decomposition(
+            kind=dec.kind, spec=dec.spec, plan=dec.plan, rank=dec.rank,
+            factors=(U[0], S[0], Vt[0]), rank_history=dec.rank_history,
+            err_history=dec.err_history, health=health))
+
+    @staticmethod
+    def _dense(op):
+        arr = op.array
+        return arr if isinstance(arr, jnp.ndarray) else jnp.asarray(arr)

@@ -19,6 +19,12 @@ import numpy as np
 from repro.serve import kvcache, serve_step
 
 
+class EmptyPromptError(ValueError):
+    """A generate() request carried an empty prompt.  Raised up-front (before
+    any compute): an empty prompt would otherwise left-pad to an all-zeros
+    row and decode from pad tokens as if that were the user's input."""
+
+
 @dataclass
 class Request:
     prompt: np.ndarray            # [T] int32
@@ -48,6 +54,11 @@ class Engine:
         )
 
     def generate(self, requests: List[Request], extras: Optional[Dict] = None) -> List[Completion]:
+        for i, r in enumerate(requests):
+            if len(r.prompt) == 0:
+                raise EmptyPromptError(
+                    f"request {i} has an empty prompt; every prompt must "
+                    "carry at least one token")
         out: List[Completion] = []
         for i in range(0, len(requests), self.max_batch):
             out.extend(self._generate_batch(requests[i : i + self.max_batch], extras))

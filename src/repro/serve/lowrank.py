@@ -47,6 +47,13 @@ def _factorize_2d(W: jax.Array, rank: int):
     return U * root[None, :], root[:, None] * Vt, err
 
 
+def _factors_from_svd(W: jax.Array, U, S, Vt):
+    """(A, B, err) from already-computed SVD factors (the service path)."""
+    root = jnp.sqrt(S)
+    err = linalg.residual(W, (U, S, Vt), block_rows=2048)
+    return U * root[None, :], root[:, None] * Vt, err
+
+
 def _factorize_2d_tol(W: jax.Array, tol: float):
     """Accuracy-first factorization: the adaptive QB engine grows the rank
     until ||W - A B||_F <= tol ||W||_F, so every matrix lands on its own
@@ -69,8 +76,13 @@ def _factorize_stacked(W: jax.Array, rank: int):
     return A, B, err
 
 
+def _leaf_name(path: Tuple) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
 def factorize_params(
-    params, rank: Optional[int] = None, *, tol: Optional[float] = None
+    params, rank: Optional[int] = None, *, tol: Optional[float] = None,
+    service=None,
 ) -> Tuple[Any, Dict[str, float]]:
     """Replace each target weight W with {'lr_a': A, 'lr_b': B}.
 
@@ -92,18 +104,44 @@ def factorize_params(
     checkpoint shard), a factorization that raises, or one that produces
     non-finite factors leaves THAT leaf dense with ``report[name] = nan``
     instead of sinking the whole tree — one bad shard should cost one
-    layer's compression, not the batch."""
+    layer's compression, not the batch.
+
+    `service` (a `repro.serve.decomp.DecompositionService`, rank mode only):
+    2-D target leaves are pre-submitted before the tree walk, so the
+    service's coalescer batches SAME-SHAPED layers (transformer stacks are
+    full of them) into single StackedOp solves.  Factors then come from the
+    batched executors — bit-identical to a batch-of-1 submission through
+    the same service whatever the coalescing (the service's invariant), and
+    agreeing with the serial dense path to roundoff.  A leaf whose service
+    solve fails (`RequestError`) stays dense with ``report[name] = nan`` —
+    the same per-leaf isolation as the serial path."""
     if (rank is None) == (tol is None):
         raise ValueError("factorize_params needs exactly one of rank= or tol=")
     report: Dict[str, float] = {}
 
-    def _compress(W, leaf):
+    futures: Dict[str, Any] = {}
+    if service is not None and rank is not None:
+        def presubmit(path, leaf):
+            if (_is_target(path, leaf) and leaf.ndim == 2
+                    and min(leaf.shape) > 2 * rank):
+                W = leaf.astype(jnp.float32)
+                if bool(jnp.isfinite(W).all()):
+                    futures[_leaf_name(path)] = service.submit(
+                        W, linalg.Rank(rank), overrides=_RSVD)
+            return leaf
+        jax.tree_util.tree_map_with_path(presubmit, params)
+        service.flush()  # seal part-filled buckets: every future resolvable
+
+    def _compress(W, leaf, name):
         """(A, B, reported error) or None when factorizing wins nothing."""
         if leaf.ndim == 2:
             if tol is not None:
                 A, B, err, r = _factorize_2d_tol(W, tol)
                 if min(leaf.shape) <= 2 * r:
                     return None  # tolerance needs too much rank: no saving
+            elif name in futures:
+                U, S, Vt = futures[name].result().factors
+                A, B, err = _factors_from_svd(W, U, S, Vt)
             else:
                 A, B, err = _factorize_2d(W, rank)
             return A, B, float(err)
@@ -137,14 +175,15 @@ def factorize_params(
             return leaf
         if rank is not None and min(leaf.shape[-2:]) <= 2 * rank:
             return leaf
-        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        name = _leaf_name(path)
         W = leaf.astype(jnp.float32)
         if not bool(jnp.isfinite(W).all()):
             report[name] = float("nan")  # poisoned input: keep dense
             return leaf
         try:
-            out = _compress(W, leaf)
+            out = _compress(W, leaf, name)
         except (FloatingPointError, ValueError, RuntimeError):
+            # RequestError (service path) lands here too: RuntimeError
             report[name] = float("nan")  # factorization failed: keep dense
             return leaf
         if out is None:
