@@ -25,8 +25,12 @@ for the same cores).  Schema v7 adds the DECOMPOSITION SERVICE
 service vs a serial service — throughput, p50/p99 latency, coalescing
 factor, executable-cache hit rate, with per-request bit-identity to the
 standalone solve and the hit-rate threshold asserted on every backend
-(latency ratios TPU-gated).  EXPERIMENTS.md records the history; the
-model derivations live in rsvd_model.py.
+(latency ratios TPU-gated).  Schema v8 adds the STATIC-ANALYSIS gates
+(repro/analysis): the AST lint over src/ and the jaxpr contract sweep
+over the golden dispatch table, recording findings/suppression counts and
+both walltimes, with zero findings and zero contract violations asserted
+(the report itself gates on the invariants).  EXPERIMENTS.md records the
+history; the model derivations live in rsvd_model.py.
 """
 from __future__ import annotations
 
@@ -396,9 +400,43 @@ def service_rows(n_requests=64, m=64, n=32, k=8, max_batch=8):
     return [row]
 
 
+def analysis_rows():
+    """Schema v8: the static-analysis gates as a recorded bench row.
+
+    The AST lint over src/ and the jaxpr contract sweep over the planner's
+    golden dispatch table both run to completion here; their walltimes land
+    in the report (the analyzer is part of the CI budget, so its runtime is
+    tracked like any other lane's) and their outcomes gate the report —
+    findings or contract violations fail the bench, not just the lint lane.
+    """
+    from repro.analysis import engine
+    from repro.analysis import contracts as contracts_mod
+
+    t0 = time.perf_counter()
+    lint = engine.lint_paths(["src"])
+    lint_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    sweep = contracts_mod.sweep()
+    sweep_s = time.perf_counter() - t0
+    row = dict(
+        lint_files=lint.files,
+        lint_findings=len(lint.findings),
+        lint_suppressions=len(lint.suppressed),
+        lint_walltime_s=round(lint_s, 3),
+        contract_plans=len(sweep.plans),
+        contract_checks=len(sweep.results),
+        contract_violations=len(sweep.violations),
+        contract_sweep_walltime_s=round(sweep_s, 3),
+    )
+    assert row["lint_findings"] == 0, [f.format() for f in lint.findings]
+    assert row["contract_violations"] == 0, [
+        f"{r.contract}[{r.plan_label}]: {r.detail}" for r in sweep.violations]
+    return [row]
+
+
 def build_report(smoke: bool = False) -> dict:
     report = {
-        "schema": "bench_rsvd/v7",
+        "schema": "bench_rsvd/v8",
         "backend": jax.default_backend(),
         "interpret_mode": jax.default_backend() != "tpu",
         "traffic_model_per_power_iter": traffic_rows(),
@@ -412,6 +450,7 @@ def build_report(smoke: bool = False) -> dict:
                               else (2048, 512, 32, 4096, 512))),
         "service": service_rows(*((16, 32, 16, 4, 4) if smoke
                                   else (64, 64, 32, 8, 8))),
+        "analysis": analysis_rows(),
     }
     for row in report["traffic_model_per_power_iter"]:
         assert row["saving"] >= 1.5, (

@@ -1,0 +1,29 @@
+"""repro.analysis — mechanical enforcement of the repo's invariants.
+
+Two layers (DESIGN.md §Static analysis):
+
+  * AST rule engine (`engine`, `rules`, `cli`): repo-specific lint,
+    `python -m repro.analysis src/`, suppressible per line via a
+    ``repro: noqa[RULE]: reason`` comment.
+  * Jaxpr/HLO contract checker (`contracts`): `assert_plan_contracts(plan)`
+    abstractly traces any ExecutionPlan's solve and asserts the traffic /
+    tracing / donation contracts the roofline model prices.
+
+The lint side is stdlib-only; `contracts` is imported lazily so the lint
+gate never pays (or requires) a jax import.
+"""
+from repro.analysis.engine import (  # noqa: F401
+    Finding, LintReport, lint_paths, lint_source,
+)
+from repro.analysis.rules import RULES  # noqa: F401
+
+
+def assert_plan_contracts(plan, **kwargs):
+    """Lazy forwarder to `repro.analysis.contracts.assert_plan_contracts`."""
+    from repro.analysis import contracts
+
+    return contracts.assert_plan_contracts(plan, **kwargs)
+
+
+__all__ = ["Finding", "LintReport", "lint_paths", "lint_source", "RULES",
+           "assert_plan_contracts"]

@@ -1,0 +1,87 @@
+"""Command-line front end: `python -m repro.analysis [paths] [--contracts]`.
+
+Exit codes: 0 clean, 1 lint findings or contract violations, 2 usage error.
+The lint pass is stdlib-only and runs before any jax import; `--contracts`
+pulls in jax and abstractly traces the golden dispatch table (CPU-safe —
+everything is shape-level except the tiny concrete batched re-trace probe).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import List, Optional
+
+from repro.analysis import engine, rules
+
+
+def _build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-specific AST lint + jaxpr contract sweep")
+    p.add_argument("paths", nargs="*",
+                   help="files/directories to lint (default: src)")
+    p.add_argument("--contracts", action="store_true",
+                   help="also run the jaxpr contract sweep over the planner's"
+                        " golden dispatch table")
+    p.add_argument("--no-lint", action="store_true",
+                   help="skip the AST lint (contract sweep only)")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print the rule catalog and exit")
+    p.add_argument("-v", "--verbose", action="store_true",
+                   help="also print suppressed findings and unused noqa "
+                        "comments")
+    return p
+
+
+def _run_lint(paths: List[str], verbose: bool) -> int:
+    t0 = time.perf_counter()
+    report = engine.lint_paths(paths)
+    dt = time.perf_counter() - t0
+    for finding in report.findings:
+        print(finding.format())
+    if verbose:
+        for finding, sup in report.suppressed:
+            print(f"suppressed: {finding.format()}  [reason: {sup.reason}]")
+        for path, sup in report.unused_noqa:
+            print(f"unused noqa: {path}:{sup.line} [{', '.join(sup.rules)}]")
+    status = "clean" if report.ok else f"{len(report.findings)} finding(s)"
+    print(f"repro.analysis lint: {report.files} files, {len(rules.RULES)} "
+          f"rules, {len(report.suppressed)} suppression(s) — {status} "
+          f"({dt:.2f}s)")
+    return 0 if report.ok else 1
+
+
+def _run_contracts(verbose: bool) -> int:
+    from repro.analysis import contracts  # defers the jax import
+
+    t0 = time.perf_counter()
+    report = contracts.sweep()
+    dt = time.perf_counter() - t0
+    for res in report.results:
+        if not res.ok or verbose:
+            mark = "ok" if res.ok else "VIOLATION"
+            print(f"contract {res.contract} [{res.plan_label}] {mark}: "
+                  f"{res.detail}")
+    print(f"repro.analysis contracts: {len(report.plans)} plans, "
+          f"{len(report.results)} checks, "
+          f"{len(report.violations)} violation(s) ({dt:.2f}s)")
+    return 0 if not report.violations else 1
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = _build_parser().parse_args(argv)
+    if args.list_rules:
+        for rule in rules.RULES:
+            print(f"{rule.id} [{rule.name}] — {rule.doc}")
+        return 0
+    rc = 0
+    if not args.no_lint:
+        rc = _run_lint(args.paths or ["src"], args.verbose)
+    if args.contracts:
+        rc = max(rc, _run_contracts(args.verbose))
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

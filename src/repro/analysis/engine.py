@@ -1,0 +1,263 @@
+"""AST rule engine: file walking, module model, suppression, reachability.
+
+Layer 1 of `repro.analysis` (see DESIGN.md §Static analysis).  The engine is
+deliberately stdlib-only (ast + re): the lint gate must run in CI before any
+jax import and in well under a second, so rules operate on syntax plus two
+cheap whole-program facts the engine precomputes:
+
+  * the repo-relative module name of every file (``src/repro/core/qr.py`` ->
+    ``repro.core.qr``), so rules can reason about layering;
+  * the set of modules REACHABLE from the service workers
+    (`repro.serve.decomp.service` et al.) through imports at any depth —
+    module-level AND function-level (the lazy-import convention means the
+    import graph at the top level alone would miss most of the hot path).
+
+Suppression policy: one finding, one line, one stated reason —
+
+    _table = {}  <hash> repro: noqa[RL002]: guarded by _lock (see record/lookup)
+
+(with ``<hash>`` the comment character).  A ``repro: noqa[RULE]`` comment
+without a reason does NOT suppress (the point of
+the ledger is the reasons); ``RULE`` may be the id (``RL002``), the name
+(``mutable-global``), or ``all``.  Suppressions that match no finding are
+reported by the CLI in verbose mode so dead noqa comments rot visibly.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+#: where service worker threads enter library code — the reachability roots
+#: for the shared-mutable-state rule (RL002).
+SERVICE_ROOTS: Tuple[str, ...] = (
+    "repro.serve.decomp.service",
+    "repro.serve.decomp.scheduler",
+)
+
+NOQA_RE = re.compile(
+    r"#\s*repro:\s*noqa\[(?P<rules>[A-Za-z0-9_\-, ]+)\]\s*(?::\s*(?P<reason>\S.*))?"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one line."""
+
+    rule: str      # "RL002"
+    name: str      # "mutable-global"
+    path: str
+    line: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule}[{self.name}] {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    rules: Tuple[str, ...]
+    reason: str
+    line: int
+
+    def covers(self, finding: Finding) -> bool:
+        if not self.reason.strip():
+            return False  # a noqa without a reason is not a suppression
+        toks = {t.strip() for t in self.rules}
+        return bool(toks & {finding.rule, finding.name, "all"})
+
+
+class Module:
+    """One parsed source file plus the per-line suppression table."""
+
+    def __init__(self, path: str, source: str,
+                 name: Optional[str] = None) -> None:
+        self.path = path
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self.name = name if name is not None else module_name(path)
+        self.is_package = os.path.basename(path) == "__init__.py"
+        self.suppressions: Dict[int, Suppression] = {}
+        for i, text in enumerate(self.lines, start=1):
+            m = NOQA_RE.search(text)
+            if m:
+                rules = tuple(t.strip() for t in m.group("rules").split(","))
+                self.suppressions[i] = Suppression(
+                    rules, m.group("reason") or "", i)
+
+    @property
+    def package(self) -> str:
+        """The package relative imports resolve against."""
+        if self.is_package:
+            return self.name
+        return self.name.rsplit(".", 1)[0] if "." in self.name else ""
+
+
+@dataclasses.dataclass
+class Context:
+    """Whole-program facts shared by every rule check."""
+
+    modules: List[Module]
+    reachable: Set[str]     # module names reachable from SERVICE_ROOTS
+
+    def by_name(self) -> Dict[str, Module]:
+        return {m.name: m for m in self.modules}
+
+
+def module_name(path: str) -> str:
+    """``.../src/repro/core/qr.py`` -> ``repro.core.qr`` (``__init__`` maps
+    to its package).  Files outside a ``repro`` tree keep their stem."""
+    parts = os.path.normpath(path).split(os.sep)
+    if "repro" in parts:
+        parts = parts[parts.index("repro"):]
+    else:
+        parts = parts[-1:]
+    if parts[-1].endswith(".py"):
+        parts[-1] = parts[-1][:-3]
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts) or os.path.basename(path)
+
+
+def collect_py_files(paths: Sequence[str]) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                out.append(p)
+            continue
+        for dirpath, dirnames, filenames in os.walk(p):
+            dirnames[:] = sorted(
+                d for d in dirnames
+                if not d.startswith(".") and d != "__pycache__")
+            for f in sorted(filenames):
+                if f.endswith(".py"):
+                    out.append(os.path.join(dirpath, f))
+    return out
+
+
+def load_modules(paths: Sequence[str]) -> List[Module]:
+    mods = []
+    for path in collect_py_files(paths):
+        with open(path, encoding="utf-8") as f:
+            mods.append(Module(path, f.read()))
+    return mods
+
+
+# ---------------------------------------------------------------------------
+# Import graph / service reachability
+# ---------------------------------------------------------------------------
+
+def resolve_import_from(node: ast.ImportFrom, package: str) -> str:
+    """Absolute dotted base of a ``from X import ...`` (handles relative)."""
+    if node.level == 0:
+        return node.module or ""
+    parts = package.split(".") if package else []
+    anchor = parts[:len(parts) - (node.level - 1)] if node.level - 1 else parts
+    base = ".".join(anchor)
+    if node.module:
+        base = f"{base}.{node.module}" if base else node.module
+    return base
+
+
+def module_imports(mod: Module) -> Set[str]:
+    """Every ``repro.*`` module this file imports, at ANY nesting depth
+    (the lazy in-function import convention makes depth-0-only graphs
+    blind to most of the execution path)."""
+    out: Set[str] = set()
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                out.add(alias.name)
+        elif isinstance(node, ast.ImportFrom):
+            base = resolve_import_from(node, mod.package)
+            if base:
+                out.add(base)
+                for alias in node.names:
+                    out.add(f"{base}.{alias.name}")
+    return {i for i in out if i == "repro" or i.startswith("repro.")}
+
+
+def service_reachable(modules: Iterable[Module],
+                      roots: Sequence[str] = SERVICE_ROOTS) -> Set[str]:
+    """Modules reachable from the service workers through the import graph.
+
+    Importing ``repro.a.b`` also reaches package ``repro.a`` (its
+    ``__init__`` runs), so package ancestors join the frontier."""
+    by_name = {m.name: m for m in modules}
+    seen: Set[str] = set()
+    frontier = [r for r in roots if r in by_name]
+    while frontier:
+        name = frontier.pop()
+        if name in seen:
+            continue
+        seen.add(name)
+        for imp in module_imports(by_name[name]):
+            parts = imp.split(".")
+            for i in range(1, len(parts) + 1):
+                cand = ".".join(parts[:i])
+                if cand in by_name and cand not in seen:
+                    frontier.append(cand)
+    return seen
+
+
+# ---------------------------------------------------------------------------
+# Lint drivers
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LintReport:
+    findings: List[Finding]
+    suppressed: List[Tuple[Finding, Suppression]]
+    files: int
+    unused_noqa: List[Tuple[str, Suppression]]  # (path, suppression)
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+
+def lint_modules(modules: List[Module], rules=None,
+                 roots: Sequence[str] = SERVICE_ROOTS) -> LintReport:
+    from repro.analysis import rules as rules_mod
+
+    active = tuple(rules) if rules is not None else rules_mod.RULES
+    ctx = Context(modules=modules, reachable=service_reachable(modules, roots))
+    kept: List[Finding] = []
+    suppressed: List[Tuple[Finding, Suppression]] = []
+    used: Set[Tuple[str, int]] = set()
+    for mod in modules:
+        for rule in active:
+            for finding in rule.check(mod, ctx):
+                sup = mod.suppressions.get(finding.line)
+                if sup is not None and sup.covers(finding):
+                    suppressed.append((finding, sup))
+                    used.add((mod.path, sup.line))
+                else:
+                    kept.append(finding)
+    unused = [
+        (mod.path, sup) for mod in modules
+        for line, sup in sorted(mod.suppressions.items())
+        if (mod.path, line) not in used
+    ]
+    kept.sort(key=lambda f: (f.path, f.line, f.rule))
+    return LintReport(kept, suppressed, len(modules), unused)
+
+
+def lint_paths(paths: Sequence[str], rules=None,
+               roots: Sequence[str] = SERVICE_ROOTS) -> LintReport:
+    return lint_modules(load_modules(paths), rules=rules, roots=roots)
+
+
+def lint_source(source: str, *, path: str = "<memory>",
+                name: str = "repro.virtual", rules=None,
+                reachable: bool = True) -> LintReport:
+    """Lint one in-memory source (tests' negative fixtures).  With
+    ``reachable=True`` the virtual module is treated as service-reachable so
+    RL002 applies without building an import chain."""
+    mod = Module(path, source, name=name)
+    roots: Sequence[str] = (name,) if reachable else ()
+    return lint_modules([mod], rules=rules, roots=roots)

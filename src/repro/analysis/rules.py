@@ -1,0 +1,448 @@
+"""The repo-specific lint rules (catalog in DESIGN.md §Static analysis).
+
+Each rule encodes an invariant the paper's cost model or the PR 8 threading
+model depends on, previously defended only by convention or by one
+hand-written test:
+
+  RL001 core-layering       repro.core never imports repro.linalg at module
+                            level (the sys.modules / lazy-import convention,
+                            made mechanical).
+  RL002 mutable-global      no mutated module-level dict/list/set/Counter in
+                            any module reachable from the service workers
+                            unless every mutation site is inside a ``with``
+                            on a module-level threading lock (threading.local
+                            state never triggers it; allowlist via noqa with
+                            a stated reason).
+  RL003 unfrozen-key        dataclasses that key jit caches / the executable
+                            cache / coalescing buckets must be frozen with
+                            hashable field annotations.
+  RL004 host-rng            no numpy.random / stdlib random in src/ — the
+                            counter RNG (seed-as-data) is the only sanctioned
+                            randomness, so compiled programs stay seed-sweep
+                            reusable and bit-reproducible.
+  RL005 bare-except         no ``except:`` — it swallows KeyboardInterrupt in
+                            worker loops and masks guard escalations.
+  RL006 dense-lapack        no jnp.linalg.{svd,qr,eigh} outside core/qr.py
+                            and the registered finishers — full-size LAPACK
+                            factorizations are exactly what the paper's
+                            formulation avoids; sketch-width uses must carry
+                            a noqa stating why the operand is small.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Callable, Dict, List, Optional, Set, Tuple
+
+from repro.analysis.engine import Context, Finding, Module
+
+MUTABLE_CONTAINER_CALLS = {
+    "dict", "list", "set", "Counter", "OrderedDict", "defaultdict", "deque",
+}
+LOCK_CALLS = {"Lock", "RLock", "Condition", "Semaphore", "BoundedSemaphore"}
+THREAD_LOCAL_CALLS = {"local"}
+MUTATING_METHODS = {
+    "append", "appendleft", "add", "clear", "update", "setdefault", "pop",
+    "popitem", "extend", "insert", "remove", "discard", "move_to_end",
+}
+#: dataclasses that key a cache somewhere (jit static args, the executable
+#: cache, the LRU plan cache, coalescing buckets, the autotune table, fault
+#: fingerprints) — must be frozen, with hashable field annotations.
+KEY_DATACLASSES = {
+    "ExecutionPlan", "Budget",                      # linalg/planner.py
+    "Spec", "Rank", "Tolerance", "Energy",          # linalg/spec.py
+    "GuardPolicy",                                  # linalg/guard.py
+    "RSVDConfig",                                   # core/rsvd.py
+    "CoalesceKey",                                  # serve/decomp/coalesce.py
+    "BlockSizes",                                   # kernels/autotune.py
+    "Fault",                                        # linalg/faults.py
+}
+UNHASHABLE_ANNOTATIONS = {
+    "list", "dict", "set", "List", "Dict", "Set", "MutableMapping",
+    "MutableSequence", "bytearray", "ndarray", "Array",
+}
+DENSE_LAPACK_FUNCS = {"svd", "qr", "eigh"}
+#: whole modules where dense LAPACK calls are the point.
+DENSE_LAPACK_ALLOWED_MODULES = {"repro.core.qr"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    name: str
+    doc: str
+    check: Callable[[Module, Context], List[Finding]]
+
+
+def _f(rule: "Rule", mod: Module, node: ast.AST, message: str) -> Finding:
+    return Finding(rule.id, rule.name, mod.path,
+                   getattr(node, "lineno", 1), message)
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _call_name(node: ast.expr) -> Optional[str]:
+    """Last component of the callee of a Call ('threading.Lock' -> 'Lock')."""
+    if not isinstance(node, ast.Call):
+        return None
+    d = _dotted(node.func)
+    return d.rsplit(".", 1)[-1] if d else None
+
+
+# ---------------------------------------------------------------------------
+# RL001 — core must not import linalg at module level
+# ---------------------------------------------------------------------------
+
+def _check_core_layering(mod: Module, ctx: Context) -> List[Finding]:
+    if not (mod.name == "repro.core" or mod.name.startswith("repro.core.")):
+        return []
+    findings: List[Finding] = []
+
+    def walk(node: ast.AST, in_function: bool) -> None:
+        for child in ast.iter_child_nodes(node):
+            is_fn = isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                       ast.Lambda))
+            if not in_function:
+                target = None
+                if isinstance(child, ast.Import):
+                    for alias in child.names:
+                        if alias.name.startswith("repro.linalg"):
+                            target = alias.name
+                elif isinstance(child, ast.ImportFrom):
+                    from repro.analysis.engine import resolve_import_from
+                    base = resolve_import_from(child, mod.package)
+                    if base.startswith("repro.linalg"):
+                        target = base
+                if target is not None:
+                    findings.append(_f(CORE_LAYERING, mod, child,
+                                       f"module-level import of {target!r}: "
+                                       "repro.core must reach repro.linalg "
+                                       "only lazily (sys.modules probe or "
+                                       "in-function import)"))
+            walk(child, in_function or is_fn)
+
+    walk(mod.tree, False)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RL002 — mutated module-level containers in service-reachable modules
+# ---------------------------------------------------------------------------
+
+def _module_globals(mod: Module) -> Tuple[Dict[str, int], Set[str]]:
+    """(mutable container globals -> def line, module-level lock names)."""
+    containers: Dict[str, int] = {}
+    locks: Set[str] = set()
+    for stmt in mod.tree.body:
+        target = None
+        value = None
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 and \
+                isinstance(stmt.targets[0], ast.Name):
+            target, value = stmt.targets[0].id, stmt.value
+        elif isinstance(stmt, ast.AnnAssign) and \
+                isinstance(stmt.target, ast.Name) and stmt.value is not None:
+            target, value = stmt.target.id, stmt.value
+        if target is None:
+            continue
+        callee = _call_name(value)
+        if callee in LOCK_CALLS:
+            locks.add(target)
+        elif callee in THREAD_LOCAL_CALLS:
+            continue  # threading.local() is the sanctioned per-thread state
+        elif isinstance(value, (ast.Dict, ast.List, ast.Set, ast.ListComp,
+                                ast.SetComp, ast.DictComp)) or \
+                callee in MUTABLE_CONTAINER_CALLS:
+            containers[target] = stmt.lineno
+    return containers, locks
+
+
+def _check_mutable_global(mod: Module, ctx: Context) -> List[Finding]:
+    if mod.name not in ctx.reachable:
+        return []
+    containers, locks = _module_globals(mod)
+    if not containers:
+        return []
+    # name -> list of (lineno, guarded) mutation sites inside functions
+    sites: Dict[str, List[Tuple[int, bool]]] = {n: [] for n in containers}
+
+    def is_locked_with(stmt: ast.With) -> bool:
+        for item in stmt.items:
+            expr = item.context_expr
+            name = None
+            if isinstance(expr, ast.Name):
+                name = expr.id
+            elif isinstance(expr, ast.Call):
+                d = _dotted(expr.func)
+                name = d.split(".", 1)[0] if d else None
+            if name in locks:
+                return True
+        return False
+
+    def record(name: Optional[str], node: ast.AST, lock_depth: int) -> None:
+        if name in sites:
+            sites[name].append((node.lineno, lock_depth > 0))
+
+    def sub_name(target: ast.expr) -> Optional[str]:
+        if isinstance(target, ast.Subscript) and \
+                isinstance(target.value, ast.Name):
+            return target.value.id
+        return None
+
+    def walk(node: ast.AST, in_function: bool, lock_depth: int,
+             declared_global: Set[str]) -> None:
+        for child in ast.iter_child_nodes(node):
+            fn = isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef))
+            child_globals = set() if fn else declared_global
+            child_locks = lock_depth
+            if isinstance(child, ast.With) and is_locked_with(child):
+                child_locks += 1
+            if in_function:
+                if isinstance(child, ast.Global):
+                    declared_global.update(child.names)
+                elif isinstance(child, ast.Assign):
+                    for t in child.targets:
+                        record(sub_name(t), child, lock_depth)
+                        if isinstance(t, ast.Name) and t.id in declared_global:
+                            record(t.id, child, lock_depth)
+                elif isinstance(child, ast.AugAssign):
+                    record(sub_name(child.target), child, lock_depth)
+                    if isinstance(child.target, ast.Name) and \
+                            child.target.id in declared_global:
+                        record(child.target.id, child, lock_depth)
+                elif isinstance(child, ast.Delete):
+                    for t in child.targets:
+                        record(sub_name(t), child, lock_depth)
+                elif isinstance(child, ast.Call) and \
+                        isinstance(child.func, ast.Attribute) and \
+                        child.func.attr in MUTATING_METHODS and \
+                        isinstance(child.func.value, ast.Name):
+                    record(child.func.value.id, child, lock_depth)
+            walk(child, in_function or fn, child_locks, child_globals)
+
+    walk(mod.tree, False, 0, set())
+    findings: List[Finding] = []
+    for name, def_line in sorted(containers.items(), key=lambda kv: kv[1]):
+        mutated = sites[name]
+        unguarded = [line for line, guarded in mutated if not guarded]
+        if mutated and unguarded:
+            findings.append(Finding(
+                MUTABLE_GLOBAL.id, MUTABLE_GLOBAL.name, mod.path, def_line,
+                f"module-level mutable global {name!r} in a service-reachable"
+                f" module is mutated without a module lock (line"
+                f" {unguarded[0]}); use threading.local, hold a module-level"
+                " threading lock at every mutation site, or noqa with a"
+                " reason"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RL003 — plan/cache-key dataclasses: frozen, hashable fields
+# ---------------------------------------------------------------------------
+
+def _annotation_unhashable(ann: ast.AST) -> Optional[str]:
+    for node in ast.walk(ann):
+        label = None
+        if isinstance(node, ast.Name):
+            label = node.id
+        elif isinstance(node, ast.Attribute):
+            label = node.attr
+        elif isinstance(node, ast.Constant) and isinstance(node.value, str):
+            try:  # string annotations ("jax.Array") — parse and re-check
+                label_node = ast.parse(node.value, mode="eval").body
+            except SyntaxError:
+                continue
+            inner = _annotation_unhashable(label_node)
+            if inner:
+                return inner
+        if label in UNHASHABLE_ANNOTATIONS:
+            return label
+    return None
+
+
+def _dataclass_frozen(cls: ast.ClassDef) -> Optional[bool]:
+    """True/False if decorated with @dataclass(...), None if not one."""
+    for dec in cls.decorator_list:
+        d = _dotted(dec.func if isinstance(dec, ast.Call) else dec)
+        if d and d.rsplit(".", 1)[-1] in ("dataclass",):
+            if isinstance(dec, ast.Call):
+                for kw in dec.keywords:
+                    if kw.arg == "frozen":
+                        return (isinstance(kw.value, ast.Constant)
+                                and bool(kw.value.value))
+            return False
+    return None
+
+
+def _check_frozen_keys(mod: Module, ctx: Context) -> List[Finding]:
+    findings: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.ClassDef) or \
+                node.name not in KEY_DATACLASSES:
+            continue
+        frozen = _dataclass_frozen(node)
+        if frozen is None:
+            continue  # a non-dataclass homonym is out of scope
+        if not frozen:
+            findings.append(_f(FROZEN_KEYS, mod, node,
+                               f"dataclass {node.name!r} keys a plan/jit/"
+                               "coalesce cache and must be declared "
+                               "@dataclass(frozen=True)"))
+            continue
+        for stmt in node.body:
+            if isinstance(stmt, ast.AnnAssign) and stmt.annotation is not None:
+                bad = _annotation_unhashable(stmt.annotation)
+                if bad:
+                    findings.append(_f(
+                        FROZEN_KEYS, mod, stmt,
+                        f"key dataclass {node.name!r} field annotated with "
+                        f"unhashable type {bad!r} — cache keys must hash"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RL004 — no numpy.random / stdlib random
+# ---------------------------------------------------------------------------
+
+def _numpy_aliases(mod: Module) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name in ("numpy", "numpy.random"):
+                    out.add((alias.asname or alias.name).split(".", 1)[0])
+    return out
+
+
+def _check_host_rng(mod: Module, ctx: Context) -> List[Finding]:
+    findings: List[Finding] = []
+    aliases = _numpy_aliases(mod)
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name == "random" or alias.name == "numpy.random":
+                    findings.append(_f(HOST_RNG, mod, node,
+                                       f"import of {alias.name!r}: only the "
+                                       "counter RNG (seed-as-data) is allowed"
+                                       " in src/"))
+        elif isinstance(node, ast.ImportFrom):
+            base = node.module or ""
+            if node.level == 0 and base.split(".", 1)[0] == "random":
+                findings.append(_f(HOST_RNG, mod, node,
+                                   "import from stdlib 'random': only the "
+                                   "counter RNG (seed-as-data) is allowed in "
+                                   "src/"))
+            elif node.level == 0 and base == "numpy.random":
+                findings.append(_f(HOST_RNG, mod, node,
+                                   "import from numpy.random: only the "
+                                   "counter RNG (seed-as-data) is allowed in "
+                                   "src/"))
+        elif isinstance(node, ast.Attribute) and node.attr == "random" and \
+                isinstance(node.value, ast.Name) and node.value.id in aliases:
+            findings.append(_f(HOST_RNG, mod, node,
+                               "numpy.random use: host RNG breaks seed-sweep "
+                               "program reuse and cross-device "
+                               "reproducibility (counter RNG only)"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RL005 — no bare except
+# ---------------------------------------------------------------------------
+
+def _check_bare_except(mod: Module, ctx: Context) -> List[Finding]:
+    return [
+        _f(BARE_EXCEPT, mod, node,
+           "bare 'except:' swallows KeyboardInterrupt/SystemExit in worker "
+           "loops — name the exception")
+        for node in ast.walk(mod.tree)
+        if isinstance(node, ast.ExceptHandler) and node.type is None
+    ]
+
+
+# ---------------------------------------------------------------------------
+# RL006 — dense LAPACK calls outside sanctioned sites
+# ---------------------------------------------------------------------------
+
+def _registered_finishers(mod: Module) -> Set[str]:
+    """Function names passed to DecompositionKind(...) in this module —
+    the statically-visible 'registered finisher' set."""
+    out: Set[str] = set()
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call):
+            d = _dotted(node.func)
+            if d and d.rsplit(".", 1)[-1] == "DecompositionKind":
+                for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                    if isinstance(arg, ast.Name):
+                        out.add(arg.id)
+    return out
+
+
+def _check_dense_lapack(mod: Module, ctx: Context) -> List[Finding]:
+    if mod.name in DENSE_LAPACK_ALLOWED_MODULES:
+        return []
+    finishers = _registered_finishers(mod)
+    findings: List[Finding] = []
+
+    def walk(node: ast.AST, fn_stack: Tuple[str, ...]) -> None:
+        for child in ast.iter_child_nodes(node):
+            stack = fn_stack
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                stack = fn_stack + (child.name,)
+            if isinstance(child, ast.Call):
+                d = _dotted(child.func)
+                if d:
+                    parts = d.split(".")
+                    if len(parts) >= 3 and parts[-2] == "linalg" and \
+                            parts[-1] in DENSE_LAPACK_FUNCS and \
+                            parts[0] in ("jnp", "np", "numpy", "jax", "scipy"):
+                        if not any(f in finishers for f in stack):
+                            findings.append(_f(
+                                DENSE_LAPACK, mod, child,
+                                f"{d}(...) outside core/qr.py and registered "
+                                "finishers — the BLAS-3 formulation exists to"
+                                " avoid full-size LAPACK factorizations; if "
+                                "the operand is sketch-width, say so in a "
+                                "noqa reason"))
+            walk(child, stack)
+
+    walk(mod.tree, ())
+    return findings
+
+
+CORE_LAYERING = Rule(
+    "RL001", "core-layering",
+    "repro.core must not import repro.linalg at module level",
+    _check_core_layering)
+MUTABLE_GLOBAL = Rule(
+    "RL002", "mutable-global",
+    "no unsynchronized module-level mutable state in service-reachable "
+    "modules", _check_mutable_global)
+FROZEN_KEYS = Rule(
+    "RL003", "unfrozen-key",
+    "plan/cache-key dataclasses must be frozen with hashable fields",
+    _check_frozen_keys)
+HOST_RNG = Rule(
+    "RL004", "host-rng",
+    "no numpy.random / stdlib random in src/ (counter RNG only)",
+    _check_host_rng)
+BARE_EXCEPT = Rule(
+    "RL005", "bare-except", "no bare 'except:'", _check_bare_except)
+DENSE_LAPACK = Rule(
+    "RL006", "dense-lapack",
+    "no jnp.linalg.{svd,qr,eigh} outside core/qr.py and registered "
+    "finishers", _check_dense_lapack)
+
+RULES: Tuple[Rule, ...] = (
+    CORE_LAYERING, MUTABLE_GLOBAL, FROZEN_KEYS, HOST_RNG, BARE_EXCEPT,
+    DENSE_LAPACK,
+)

@@ -51,6 +51,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import threading
 from typing import List, Sequence, Tuple
 
 import jax
@@ -374,16 +375,30 @@ def eigvals_streamed(
 #: body was TRACED (not executed).  Incrementing inside the function body
 #: runs at trace time only, so a jit cache hit leaves the count untouched —
 #: the serve-layer executable cache asserts steady-state re-trace-freedom
-#: (at most one trace per distinct plan) against this.
+#: (at most one trace per distinct plan) against this.  Service workers
+#: trace concurrently, so every touch goes through _trace_counts_lock
+#: (`_note_trace` / `trace_count`), keeping the tally exact under threads.
 _TRACE_COUNTS: collections.Counter = collections.Counter()
+_trace_counts_lock = threading.Lock()
 
 
 def _trace_key(shape, dtype, k: int, cfg: RSVDConfig):
     return (tuple(shape), jnp.dtype(dtype).name, int(k), cfg)
 
 
+def _note_trace(key) -> None:
+    with _trace_counts_lock:
+        _TRACE_COUNTS[key] += 1
+
+
+def trace_count(key) -> int:
+    """Exact number of traces recorded for a `_trace_key` (thread-safe)."""
+    with _trace_counts_lock:
+        return _TRACE_COUNTS.get(key, 0)
+
+
 def _batched_tall_body(A: jax.Array, seeds: jax.Array, k: int, cfg: RSVDConfig):
-    _TRACE_COUNTS[_trace_key(A.shape, A.dtype, k, cfg)] += 1
+    _note_trace(_trace_key(A.shape, A.dtype, k, cfg))
     with qr_mod.kernel_backend(cfg.kernel_backend):
         return jax.vmap(lambda a, sd: _rsvd_body(a, k, cfg, sd))(A, seeds)
 

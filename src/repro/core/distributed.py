@@ -82,12 +82,12 @@ def _local_rsvd_body(
     for _ in range(q):
         Q, _ = _dist_cholesky_qr2(Y, axis)
         Z = jax.lax.psum(A_loc.T @ Q, axis)       # (n, s) replicated
-        Qz, _ = jnp.linalg.qr(Z, mode="reduced")  # replicated, local compute
+        Qz, _ = jnp.linalg.qr(Z, mode="reduced")  # repro: noqa[RL006]: replicated sketch-width operand (n x s), local compute
         Y = A_loc @ Qz
 
     Q, _ = _dist_cholesky_qr2(Y, axis)            # (m_loc, s)
     B = jax.lax.psum(Q.T @ A_loc, axis)           # (s, n) replicated
-    Ub, S, Vt = jnp.linalg.svd(B, full_matrices=False)
+    Ub, S, Vt = jnp.linalg.svd(B, full_matrices=False)  # repro: noqa[RL006]: sketch-width projection (s x n) finisher
     U_loc = Q @ Ub[:, :k]
     return U_loc, S[:k], Vt[:k, :]
 

@@ -140,7 +140,7 @@ def svd_via_gram(B: jax.Array, use_jacobi: bool = True, max_sweeps: int = 30):
     if use_jacobi:
         w, U = jacobi_eigh(G, max_sweeps=max_sweeps)
     else:
-        w, U = jnp.linalg.eigh(G)
+        w, U = jnp.linalg.eigh(G)  # repro: noqa[RL006]: s x s Gram, the LAPACK ablation arm
         w, U = w[::-1], U[:, ::-1]
     w = jnp.maximum(w, 0.0)
     sv = jnp.sqrt(w)

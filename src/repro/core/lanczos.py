@@ -64,7 +64,7 @@ def lanczos_svd(
 
     # Bidiagonal B: diag(alphas) + superdiag(betas[:-1])
     B = jnp.diag(alphas) + jnp.diag(betas[:-1], k=1)
-    Ub, S, Vbt = jnp.linalg.svd(B, full_matrices=False)
+    Ub, S, Vbt = jnp.linalg.svd(B, full_matrices=False)  # repro: noqa[RL006]: bidiagonal B is rank x rank
     Uk = U @ Ub[:, :k]
     Vk = V @ Vbt[:k, :].T
     return Uk, S[:k], Vk.T

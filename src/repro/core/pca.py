@@ -72,7 +72,7 @@ def pca_exact(X: jax.Array, k: int) -> PCAResult:
     """Dense-SVD PCA (the GESVD baseline column in the paper's Fig. 1)."""
     mu = jnp.mean(X, axis=0)
     Xc = X - mu[None, :]
-    _, S, Vt = jnp.linalg.svd(Xc, full_matrices=False)
+    _, S, Vt = jnp.linalg.svd(Xc, full_matrices=False)  # repro: noqa[RL006]: pca_exact IS the paper's dense GESVD baseline
     n = X.shape[0]
     return PCAResult(Vt[:k], S[:k] ** 2 / (n - 1), S[:k], mu)
 

@@ -120,7 +120,7 @@ class RSVDConfig:
 
 def _small_svd(B: jax.Array, method: SmallSVD):
     if method == "lapack":
-        return jnp.linalg.svd(B, full_matrices=False)
+        return jnp.linalg.svd(B, full_matrices=False)  # repro: noqa[RL006]: B is sketch-width (s x n), Algorithm 1 step 5
     if method == "gram":
         return svd_via_gram(B, use_jacobi=False)
     if method == "gram_jacobi":
@@ -404,7 +404,7 @@ def _randomized_eigvals_dense(
         Q = qr_mod.orthonormalize(Y, cfg.qr_method)
         B = Q.T @ A
         if cfg.small_svd == "lapack":
-            S = jnp.linalg.svd(B, compute_uv=False)
+            S = jnp.linalg.svd(B, compute_uv=False)  # repro: noqa[RL006]: B is sketch-width (s x n), sigma-only finisher
         else:
             G = B @ B.T
             if cfg.small_svd == "gram_jacobi":

@@ -34,7 +34,7 @@ def spectrum(n: int, kind: DecayKind, beta: float = 50.0, dtype=jnp.float32) -> 
 def random_orthogonal(n: int, cols: int, seed: int, dtype=jnp.float32) -> jax.Array:
     """n x cols matrix with orthonormal columns (QR of a Gaussian)."""
     G = sketch_matrix(n, cols, seed, dtype=dtype)
-    Q, R = jnp.linalg.qr(G, mode="reduced")
+    Q, R = jnp.linalg.qr(G, mode="reduced")  # repro: noqa[RL006]: test-matrix synthesis, not a solve path
     # Fix signs for determinism across backends.
     return Q * jnp.sign(jnp.diag(R))[None, :]
 

@@ -85,6 +85,6 @@ def block_power_method(
 
     Q = jax.lax.fori_loop(0, iters, body, Q)
     T = Q.T @ (A @ Q)  # Rayleigh quotient (k x k)
-    w, U = jnp.linalg.eigh(T)
+    w, U = jnp.linalg.eigh(T)  # repro: noqa[RL006]: Rayleigh quotient T is k x k
     order = jnp.argsort(-w)
     return w[order], Q @ U[:, order]

@@ -35,7 +35,7 @@ def eigh_solver(Xc: jax.Array, q: int) -> jax.Array:
     """Dense baseline ('CPU' row of paper Table 1): full eigendecomposition
     of the D x D scatter matrix."""
     C = Xc.T @ Xc
-    _, V = jnp.linalg.eigh(C)
+    _, V = jnp.linalg.eigh(C)  # repro: noqa[RL006]: the paper's dense baseline (D x D scatter), benchmarked against
     return V[:, ::-1][:, :q]  # top-q columns
 
 
@@ -113,7 +113,7 @@ def _sumc_single(
     max_iters: int,
     seed: int,
 ) -> SuMCResult:
-    rng = np.random.default_rng(seed)
+    rng = np.random.default_rng(seed)  # repro: noqa[RL004]: host-side k-means-style label init, not a solve path
     n, D = X.shape
     dims = (
         [subspace_dims] * n_clusters if isinstance(subspace_dims, int) else list(subspace_dims)
@@ -164,10 +164,10 @@ def synthetic_subspace_data(
     Paper 'first' dataset: sizes=[500,1000,2000], dims=[30,50,70], ambient=1000.
     Paper 'second':        sizes=[5000,10000,20000], same dims.
     """
-    rng = np.random.default_rng(seed)
+    rng = np.random.default_rng(seed)  # repro: noqa[RL004]: synthetic-dataset generation (paper's SuMC data)
     xs, ys = [], []
     for c, (sz, d) in enumerate(zip(sizes, dims)):
-        basis, _ = np.linalg.qr(rng.standard_normal((ambient, d)))
+        basis, _ = np.linalg.qr(rng.standard_normal((ambient, d)))  # repro: noqa[RL006]: synthetic subspace basis, host-side data gen
         coeff = rng.uniform(0, 1, size=(sz, d))
         pts = coeff @ basis.T
         if noise:

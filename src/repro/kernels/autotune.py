@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import json
 import os
+import threading
 import time
 from dataclasses import dataclass
 from typing import Callable, Iterable, Sequence
@@ -36,8 +37,12 @@ from typing import Callable, Iterable, Sequence
 _ENV_VAR = "REPRO_AUTOTUNE_CACHE"
 
 # In-memory table: {backend: {kernel: {bucket_key: {"bm":..,"bn":..,"bk":..}}}}
+# Guarded by _lock: lookups happen at jit TRACE time, and the service traces
+# from multiple worker threads concurrently (RLock because save() loads
+# under the same lock).
 _table: dict = {}
 _loaded_from: str | None = None
+_lock = threading.RLock()
 
 
 @dataclass(frozen=True)
@@ -72,20 +77,22 @@ def cache_path() -> str | None:
 def _ensure_loaded(path: str | None = None) -> None:
     global _loaded_from
     path = path or cache_path()
-    if path is None or _loaded_from == path:
-        return
-    if os.path.exists(path):
-        with open(path) as f:
-            loaded = json.load(f)
-        for backend, kernels in loaded.items():
-            dst = _table.setdefault(backend, {})
-            for kernel, entries in kernels.items():
-                bucket = dst.setdefault(kernel, {})
-                for key, entry in entries.items():
-                    # In-memory entries win: anything recorded this process
-                    # (a fresh autotune sweep) is newer than the file.
-                    bucket.setdefault(key, entry)
-    _loaded_from = path
+    with _lock:
+        if path is None or _loaded_from == path:
+            return
+        if os.path.exists(path):
+            with open(path) as f:
+                loaded = json.load(f)
+            for backend, kernels in loaded.items():
+                dst = _table.setdefault(backend, {})
+                for kernel, entries in kernels.items():
+                    bucket = dst.setdefault(kernel, {})
+                    for key, entry in entries.items():
+                        # In-memory entries win: anything recorded this
+                        # process (a fresh autotune sweep) is newer than
+                        # the file.
+                        bucket.setdefault(key, entry)
+        _loaded_from = path
 
 
 def save(path: str | None = None) -> str | None:
@@ -97,18 +104,20 @@ def save(path: str | None = None) -> str | None:
     path = path or cache_path()
     if path is None:
         return None
-    _ensure_loaded(path)
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    with open(path, "w") as f:
-        json.dump(_table, f, indent=1, sort_keys=True)
+    with _lock:
+        _ensure_loaded(path)
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(_table, f, indent=1, sort_keys=True)
     return path
 
 
 def clear() -> None:
     """Drop the in-memory table (tests; does not delete any JSON file)."""
     global _loaded_from
-    _table.clear()
-    _loaded_from = None
+    with _lock:
+        _table.clear()
+        _loaded_from = None
 
 
 def record(
@@ -122,9 +131,10 @@ def record(
     entry = {"bm": blocks.bm, "bn": blocks.bn, "bk": blocks.bk}
     if us is not None:
         entry["us"] = us
-    _table.setdefault(backend, {}).setdefault(kernel, {})[
-        _bucket_key(shape, dtype)
-    ] = entry
+    with _lock:
+        _table.setdefault(backend, {}).setdefault(kernel, {})[
+            _bucket_key(shape, dtype)
+        ] = entry
 
 
 def lookup(
@@ -132,9 +142,11 @@ def lookup(
 ) -> BlockSizes | None:
     """Tuned block sizes for (kernel, shape-bucket, dtype, backend), or None."""
     _ensure_loaded()
-    entry = (
-        _table.get(backend, {}).get(kernel, {}).get(_bucket_key(shape, dtype))
-    )
+    with _lock:
+        entry = (
+            _table.get(backend, {}).get(kernel, {})
+            .get(_bucket_key(shape, dtype))
+        )
     if entry is None:
         return None
     return BlockSizes(entry["bm"], entry["bn"], entry["bk"])

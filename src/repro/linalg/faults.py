@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import threading
 from typing import Dict, Iterator, List, Optional, Tuple
 
 import jax.numpy as jnp
@@ -63,6 +64,10 @@ class Fault:
     times: Optional[int] = None
 
 
+# The fault registry is process-global (a fault injected on the test thread
+# must be visible to service workers streaming panels), so registration and
+# firing-count updates hold _registry_mu; jnp-path readers take snapshots.
+_registry_mu = threading.Lock()
 _active: List[Fault] = []
 _fired: Dict[int, int] = {}
 
@@ -76,13 +81,15 @@ def inject(kind: str, panel: Optional[int] = None,
     if times is None and kind == "flaky_link":
         times = 1
     fault = Fault(kind, panel, times)
-    _active.append(fault)
-    _fired[id(fault)] = 0
+    with _registry_mu:
+        _active.append(fault)
+        _fired[id(fault)] = 0
     try:
         yield fault
     finally:
-        _active.remove(fault)
-        _fired.pop(id(fault), None)
+        with _registry_mu:
+            _active.remove(fault)
+            _fired.pop(id(fault), None)
 
 
 def any_active() -> bool:
@@ -110,7 +117,8 @@ def _matches(fault: Fault, kind: str, idx: Optional[int] = None) -> bool:
 
 
 def _fire(fault: Fault) -> None:
-    _fired[id(fault)] += 1
+    with _registry_mu:
+        _fired[id(fault)] += 1
 
 
 def poison_panel(idx: int, panel):

@@ -62,12 +62,18 @@ class DecompositionKind:
     ortho_factor: Optional[Callable] = None  # (factors) -> matrix | None
 
 
+# Mutated by register() only (import time + third-party extensions), but
+# extensions may register while service workers read — hence the lock.
 _REGISTRY: Dict[str, DecompositionKind] = {}
+_registry_write_lock = threading.Lock()
 
 
 def register(entry: DecompositionKind) -> DecompositionKind:
-    """Add (or replace) a decomposition kind."""
-    _REGISTRY[entry.name] = entry
+    """Add (or replace) a decomposition kind.  Thread-safe: a service worker
+    resolving kinds mid-`register` sees either the old or the new entry,
+    never a torn table."""
+    with _registry_write_lock:
+        _REGISTRY[entry.name] = entry
     return entry
 
 

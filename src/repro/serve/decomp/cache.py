@@ -37,7 +37,7 @@ def _trace_key_for(pl: ExecutionPlan):
 
 def trace_count(pl: ExecutionPlan) -> int:
     """How many times this plan's batched body has been traced (process-wide)."""
-    return blocked._TRACE_COUNTS.get(_trace_key_for(pl), 0)
+    return blocked.trace_count(_trace_key_for(pl))
 
 
 class ExecutableCache:

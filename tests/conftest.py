@@ -1,0 +1,20 @@
+"""Shared fixtures.
+
+`assert_plan_contracts` surfaces the jaxpr contract checker
+(repro.analysis.contracts) to any test that builds an ExecutionPlan:
+
+    def test_my_path(assert_plan_contracts):
+        pl = linalg.plan(op, k)
+        assert_plan_contracts(pl)   # raises ContractViolation on breach
+
+The import is deferred so the fixture costs nothing for the (majority of)
+tests that never request it.
+"""
+import pytest
+
+
+@pytest.fixture
+def assert_plan_contracts():
+    from repro.analysis.contracts import assert_plan_contracts as check
+
+    return check

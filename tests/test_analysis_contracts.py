@@ -1,0 +1,178 @@
+"""Jaxpr contract checker: the golden dispatch-table sweep plus one
+negative test per contract (a checker that can't fail proves nothing)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import linalg
+from repro.analysis import contracts as C
+
+pytestmark = pytest.mark.analysis
+
+
+def _sds(m, n, dt=jnp.float32):
+    return jax.ShapeDtypeStruct((m, n), dt)
+
+
+# ---------------------------------------------------------------------------
+# Positive: every golden-table plan satisfies every applicable contract
+# ---------------------------------------------------------------------------
+
+def test_golden_table_covers_every_path_and_guard():
+    entries = C.golden_plan_table()
+    paths = {pl.path for _, pl, _ in entries}
+    assert paths == {"dense", "streamed", "batched", "sharded", "matfree",
+                     "sparse", "adaptive"}
+    guards = {pl.guard.mode for _, pl, _ in entries}
+    assert guards == {"off", "report"}
+
+
+def test_golden_sweep_clean():
+    report = C.sweep()
+    assert report.ok, "\n".join(
+        f"{r.contract}[{r.plan_label}]: {r.detail}" for r in report.violations)
+    # every contract is exercised at least once across the table
+    exercised = {r.contract for r in report.results}
+    assert exercised == {"C1-peak-intermediate", "C2-donation",
+                         "C3-row-panel-fallback", "C4-reads-of-a",
+                         "C5-trace-accounting"}
+
+
+def test_fixture_raises_on_breach(assert_plan_contracts, monkeypatch):
+    pl = linalg.plan(linalg.DenseOp(_sds(96, 48)), 8)
+    assert_plan_contracts(pl)  # sanity: the real plan passes
+    # Tighten the C1 bound to an impossible value: the checker must raise.
+    monkeypatch.setattr(C, "intermediate_bound_bytes", lambda _pl: 1)
+    with pytest.raises(C.ContractViolation) as err:
+        assert_plan_contracts(pl)
+    assert any(r.contract == "C1-peak-intermediate" and not r.ok
+               for r in err.value.results)
+
+
+# ---------------------------------------------------------------------------
+# C1 negative: a materialized m x n intermediate must be seen and priced
+# ---------------------------------------------------------------------------
+
+def test_peak_catches_materialized_dense_copy():
+    m, n, k = 64, 32, 4
+
+    def materializing(A, X):
+        dense = A + 0.0          # a real m x n copy, not a view
+        return dense @ X
+
+    facts = C.trace_facts(
+        materializing, (_sds(m, n), _sds(n, k)), {0: "A"})
+    ok, detail = C.verify_peak(facts, m * n * 4 - 1)
+    assert not ok, detail
+    assert facts.peak_intermediate_bytes >= m * n * 4
+
+
+def test_transposed_view_is_not_an_intermediate():
+    facts = C.trace_facts(lambda A, X: A.T @ X, (_sds(64, 32), _sds(64, 4)),
+                          {0: "A"})
+    # A.T folds into dot_general dimension numbers — only the (32, 4)
+    # result materializes.
+    assert facts.peak_intermediate_bytes == 32 * 4 * 4
+
+
+# ---------------------------------------------------------------------------
+# C2 negative: an un-donated accumulator update aliases nothing
+# ---------------------------------------------------------------------------
+
+def test_donation_catches_missing_donate_argnums():
+    undonated = jax.jit(lambda acc, x: acc + x)
+    acc = jax.ShapeDtypeStruct((16, 8), jnp.float32)
+    ok, detail = C.verify_donation(undonated, (acc, acc), 16 * 8 * 4)
+    assert not ok, detail
+
+
+# ---------------------------------------------------------------------------
+# C3 negative: a gather-based panel walk must be flagged
+# ---------------------------------------------------------------------------
+
+def test_panel_check_catches_gather():
+    def gather_panel(X):
+        return X[jnp.array([0, 2, 4])]
+
+    ok, detail = C.verify_no_gather_scatter(gather_panel, (_sds(8, 4),))
+    assert not ok
+    assert "gather" in detail
+
+
+def test_panel_check_catches_scatter():
+    def scatter_panel(X):
+        return X.at[jnp.array([0, 2])].set(0.0)
+
+    ok, detail = C.verify_no_gather_scatter(scatter_panel, (_sds(8, 4),))
+    assert not ok
+
+
+# ---------------------------------------------------------------------------
+# C4 negative: extra passes over A must be counted
+# ---------------------------------------------------------------------------
+
+def test_reads_catches_double_pass():
+    def double_read(A, X):
+        return (A @ X + A @ X) * 0.5
+
+    facts = C.trace_facts(double_read, (_sds(64, 32), _sds(32, 4)), {0: "A"})
+    ok, detail = C.verify_reads(facts, 1)
+    assert not ok, detail
+    assert facts.reads["A"] == 2
+
+
+def test_reads_survive_padding_to_tile_quantum():
+    # pad is layout staging: a kernel consuming the padded copy still reads A.
+    def padded_read(A, X):
+        Ap = jnp.pad(A, ((0, 2), (0, 0)))
+        return Ap @ X
+
+    facts = C.trace_facts(padded_read, (_sds(62, 32), _sds(32, 4)), {0: "A"})
+    assert facts.reads.get("A", 0) == 1
+
+
+# ---------------------------------------------------------------------------
+# C5 negative: a body that re-traces per call must fail the accounting
+# ---------------------------------------------------------------------------
+
+def test_retrace_check_catches_trace_per_call():
+    traces = []
+    ok, detail = C.verify_no_retrace(lambda: traces.append(1),
+                                     lambda: len(traces))
+    assert not ok, detail
+
+
+def test_retrace_check_accepts_trace_once():
+    traces = []
+
+    def solve():
+        if not traces:
+            traces.append(1)
+
+    ok, detail = C.verify_no_retrace(solve, lambda: len(traces))
+    assert ok, detail
+
+
+# ---------------------------------------------------------------------------
+# Model helpers
+# ---------------------------------------------------------------------------
+
+def test_expected_reads_match_rsvd_model():
+    from repro.roofline import rsvd_model
+
+    pl = linalg.plan(linalg.DenseOp(_sds(96, 48)), 8)
+    if not pl.fused_power:
+        assert C.expected_reads_of_a(pl) == \
+            rsvd_model.streamed_pass_count(pl.power_iters)
+
+
+def test_streamed_working_set_beats_dense_residency():
+    from repro.core.rsvd import RSVDConfig
+
+    pl = linalg.plan(linalg.DenseOp(_sds(65536, 4096)), 32,
+                     overrides=RSVDConfig.streaming(4096))
+    assert pl.path == "streamed"
+    ws = C.streamed_working_set_bytes(pl)
+    assert ws < 65536 * 4096 * 4

@@ -1,0 +1,303 @@
+"""AST rule engine: one negative fixture per rule, suppression semantics,
+and the repo-wide zero-findings gate (the CI analysis lane's lint half)."""
+import textwrap
+
+import pytest
+
+from repro.analysis import engine
+
+pytestmark = pytest.mark.analysis
+
+
+def _lint(src, name="repro.core.fake", **kw):
+    return engine.lint_source(textwrap.dedent(src), name=name, **kw)
+
+
+def _rules_hit(report):
+    return {f.rule for f in report.findings}
+
+
+# ---------------------------------------------------------------------------
+# RL001 core-layering
+# ---------------------------------------------------------------------------
+
+def test_core_importing_linalg_flagged():
+    rep = _lint("import repro.linalg\n", name="repro.core.fake")
+    assert "RL001" in _rules_hit(rep)
+
+
+def test_core_relative_parent_import_flagged():
+    rep = _lint("from ..linalg import api\n", name="repro.core.fake")
+    assert "RL001" in _rules_hit(rep)
+
+
+def test_core_lazy_in_function_import_allowed():
+    rep = _lint(
+        """
+        def f():
+            from repro.linalg import api
+            return api
+        """,
+        name="repro.core.fake",
+    )
+    assert "RL001" not in _rules_hit(rep)
+
+
+def test_linalg_importing_core_allowed():
+    rep = _lint("from repro.core import rsvd\n", name="repro.linalg.fake")
+    assert "RL001" not in _rules_hit(rep)
+
+
+# ---------------------------------------------------------------------------
+# RL002 mutable-global (service-reachable modules)
+# ---------------------------------------------------------------------------
+
+UNGUARDED = """
+_cache = {}
+
+def put(k, v):
+    _cache[k] = v
+"""
+
+LOCKED = """
+import threading
+
+_lock = threading.Lock()
+_cache = {}
+
+def put(k, v):
+    with _lock:
+        _cache[k] = v
+"""
+
+
+def test_unguarded_mutable_global_flagged():
+    rep = _lint(UNGUARDED, reachable=True)
+    assert "RL002" in _rules_hit(rep)
+
+
+def test_lock_guarded_mutable_global_clean():
+    rep = _lint(LOCKED, reachable=True)
+    assert "RL002" not in _rules_hit(rep)
+
+
+def test_threading_local_clean():
+    rep = _lint(
+        """
+        import threading
+
+        _state = threading.local()
+
+        def put(v):
+            _state.v = v
+        """,
+        reachable=True,
+    )
+    assert "RL002" not in _rules_hit(rep)
+
+
+def test_unreachable_module_not_flagged():
+    rep = _lint(UNGUARDED, reachable=False)
+    assert "RL002" not in _rules_hit(rep)
+
+
+def test_constant_by_convention_clean():
+    # A module-level dict that no function ever mutates is configuration,
+    # not shared state.
+    rep = _lint("_DEFAULTS = {'a': 1}\n", reachable=True)
+    assert "RL002" not in _rules_hit(rep)
+
+
+# ---------------------------------------------------------------------------
+# RL003 unfrozen-key
+# ---------------------------------------------------------------------------
+
+def test_unfrozen_plan_dataclass_flagged():
+    rep = _lint(
+        """
+        import dataclasses
+
+        @dataclasses.dataclass
+        class ExecutionPlan:
+            path: str
+        """
+    )
+    assert "RL003" in _rules_hit(rep)
+
+
+def test_frozen_plan_with_list_field_flagged():
+    rep = _lint(
+        """
+        import dataclasses
+        from typing import List
+
+        @dataclasses.dataclass(frozen=True)
+        class ExecutionPlan:
+            panels: List[int]
+        """
+    )
+    assert "RL003" in _rules_hit(rep)
+
+
+def test_frozen_hashable_plan_clean():
+    rep = _lint(
+        """
+        import dataclasses
+        from typing import Tuple
+
+        @dataclasses.dataclass(frozen=True)
+        class ExecutionPlan:
+            path: str
+            dims: Tuple[int, ...]
+        """
+    )
+    assert "RL003" not in _rules_hit(rep)
+
+
+# ---------------------------------------------------------------------------
+# RL004 host-rng
+# ---------------------------------------------------------------------------
+
+def test_stdlib_random_flagged():
+    rep = _lint("import random\n")
+    assert "RL004" in _rules_hit(rep)
+
+
+def test_numpy_random_flagged():
+    rep = _lint(
+        """
+        import numpy as np
+
+        def noise(n):
+            return np.random.rand(n)
+        """
+    )
+    assert "RL004" in _rules_hit(rep)
+
+
+def test_jax_counter_rng_clean():
+    rep = _lint(
+        """
+        import jax
+
+        def omega(seed, shape):
+            return jax.random.normal(jax.random.PRNGKey(seed), shape)
+        """
+    )
+    assert "RL004" not in _rules_hit(rep)
+
+
+# ---------------------------------------------------------------------------
+# RL005 bare-except
+# ---------------------------------------------------------------------------
+
+def test_bare_except_flagged():
+    rep = _lint(
+        """
+        def f():
+            try:
+                return 1
+            except:
+                return 0
+        """
+    )
+    assert "RL005" in _rules_hit(rep)
+
+
+def test_typed_except_clean():
+    rep = _lint(
+        """
+        def f():
+            try:
+                return 1
+            except ValueError:
+                return 0
+        """
+    )
+    assert "RL005" not in _rules_hit(rep)
+
+
+# ---------------------------------------------------------------------------
+# RL006 dense-lapack
+# ---------------------------------------------------------------------------
+
+def test_dense_svd_outside_finisher_flagged():
+    rep = _lint(
+        """
+        import jax.numpy as jnp
+
+        def solve(a):
+            return jnp.linalg.svd(a)
+        """
+    )
+    assert "RL006" in _rules_hit(rep)
+
+
+def test_dense_svd_in_core_qr_allowed():
+    rep = _lint(
+        """
+        import jax.numpy as jnp
+
+        def householder(a):
+            return jnp.linalg.qr(a)
+        """,
+        name="repro.core.qr",
+    )
+    assert "RL006" not in _rules_hit(rep)
+
+
+def test_registered_finisher_allowed():
+    rep = _lint(
+        """
+        import jax.numpy as jnp
+
+        def _execute_svd(op, spec, pl, seed):
+            return jnp.linalg.svd(op)
+
+        register(DecompositionKind("svd", _execute_svd))
+        """
+    )
+    assert "RL006" not in _rules_hit(rep)
+
+
+# ---------------------------------------------------------------------------
+# Suppression semantics
+# ---------------------------------------------------------------------------
+
+def test_noqa_with_reason_suppresses():
+    rep = _lint(
+        "import random  # repro: noqa[RL004]: synthetic host-side ids only\n"
+    )
+    assert "RL004" not in _rules_hit(rep)
+    assert any(f.rule == "RL004" for f, _ in rep.suppressed)
+
+
+def test_noqa_without_reason_does_not_suppress():
+    rep = _lint("import random  # repro: noqa[RL004]\n")
+    assert "RL004" in _rules_hit(rep)
+
+
+def test_noqa_by_rule_name_suppresses():
+    rep = _lint(
+        "import random  # repro: noqa[host-rng]: deterministic demo ids\n"
+    )
+    assert "RL004" not in _rules_hit(rep)
+
+
+def test_noqa_wrong_rule_does_not_suppress():
+    rep = _lint("import random  # repro: noqa[RL005]: wrong rule\n")
+    assert "RL004" in _rules_hit(rep)
+
+
+def test_unused_noqa_reported():
+    rep = _lint("x = 1  # repro: noqa[RL004]: nothing to suppress\n")
+    assert rep.unused_noqa
+
+
+# ---------------------------------------------------------------------------
+# The repo-wide gate: `python -m repro.analysis src/` must stay clean
+# ---------------------------------------------------------------------------
+
+def test_repo_lint_is_clean():
+    report = engine.lint_paths(["src"])
+    assert report.ok, "\n".join(f.format() for f in report.findings)
