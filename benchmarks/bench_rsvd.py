@@ -29,8 +29,17 @@ standalone solve and the hit-rate threshold asserted on every backend
 (repro/analysis): the AST lint over src/ and the jaxpr contract sweep
 over the golden dispatch table, recording findings/suppression counts and
 both walltimes, with zero findings and zero contract violations asserted
-(the report itself gates on the invariants).  EXPERIMENTS.md records the
-history; the model derivations live in rsvd_model.py.
+(the report itself gates on the invariants).  Schema v9 adds RESUMABLE
+EXECUTION (linalg/snapshot.py): the streamed and adaptive solves run
+checkpoint-off, checkpoint-on (panel-granular snapshots every boundary),
+and interrupted-then-resumed — the checkpoint overhead ratio and
+host-side snapshot walltime are recorded, and resumed factors are
+asserted BIT-identical to the uninterrupted run on EVERY backend
+(snapshot writes are host-side only, so they add zero HBM traffic by
+construction); the service row surfaces the resilience counters
+(cancelled / deadline_exceeded / restarts / resumed_jobs / checkpoint
+overhead).  EXPERIMENTS.md records the history; the model derivations
+live in rsvd_model.py.
 """
 from __future__ import annotations
 
@@ -393,11 +402,139 @@ def service_rows(n_requests=64, m=64, n=32, k=8, max_batch=8):
             metrics["predicted_walltime_err_p50"], 4),
         backend=jax.default_backend(),
     )
+    # schema v9: the resilience counters ride the service row (all zero in
+    # this fault-free traffic run — the resume_rows lane exercises them)
+    row.update(
+        cancelled=metrics["cancelled"],
+        deadline_exceeded=metrics["deadline_exceeded"],
+        restarts=metrics["restarts"],
+        resumed_jobs=metrics["resumed_jobs"],
+        checkpoint_overhead_s=round(metrics["checkpoint_overhead_s"], 5),
+    )
     assert row["coalescing_factor"] > 1.0, row  # batching actually happened
     if jax.default_backend() == "tpu":
         # where the batched executors own the device, coalescing must win
         assert row["latency_ratio_vs_serial"] <= 1.0, row
     return [row]
+
+
+def resume_rows(m=4096, n=512, k=32, block_rows=512,
+                am=512, an=256, interrupt_at=5):
+    """Schema v9: what panel-granular checkpointing costs, and proof that
+    an interrupted solve resumes bit-identically.
+
+    Both resumable engines run three ways: checkpoint-off (the baseline),
+    checkpoint-on every boundary (uninterrupted — the overhead ratio), and
+    interrupted by an injected transient fault at a panel-group boundary,
+    then resumed from the surviving snapshots.  Bit-identity of the
+    checkpointed AND the resumed factors against the off baseline is
+    asserted on EVERY backend: snapshots capture host-side state between
+    panels, they never touch the arithmetic or re-read A (the plan's
+    predicted HBM bytes are checkpoint-blind by construction).  The
+    overhead ratio is recorded, never gated — it is fsync-bound, not
+    device-bound.
+    """
+    import shutil
+    import tempfile
+
+    import numpy as np
+
+    from repro import linalg
+    from repro.core.blocked import svd_streamed
+    from repro.core.rsvd import RSVDConfig
+    from repro.core.spectra import make_test_matrix
+    from repro.linalg import faults
+    from repro.linalg import snapshot as snap
+
+    rows = []
+    workdir = tempfile.mkdtemp(prefix="bench_resume_")
+    try:
+        # ---- streamed ----------------------------------------------------
+        A = np.asarray(make_test_matrix(m, n, "fast", seed=0)[0])
+        cfg = RSVDConfig(qr_method="cqr2", power_iters=2,
+                         block_rows=block_rows)
+        ref = svd_streamed(A, k, cfg, seed=0)
+        t_off = _time(lambda a: svd_streamed(a, k, cfg, seed=0), A)
+
+        def _ck_streamed(a):
+            ck = snap.Checkpointer(tempfile.mkdtemp(dir=workdir), every=1)
+            with snap.scope(snap.RunControl(checkpointer=ck)):
+                return svd_streamed(a, k, cfg, seed=0), ck
+        out_ck, _ = _ck_streamed(A)
+        for x, y in zip(ref, out_ck):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), (
+                "checkpointing changed bits")
+        t_on = _time(lambda a: _ck_streamed(a)[0], A)
+
+        ckdir = tempfile.mkdtemp(dir=workdir)
+        ck = snap.Checkpointer(ckdir, every=1)
+        try:
+            with faults.inject("preempt", panel=interrupt_at):
+                with snap.scope(snap.RunControl(checkpointer=ck)):
+                    svd_streamed(A, k, cfg, seed=0)
+            raise AssertionError("injected preemption never fired")
+        except faults.PreemptionError:
+            pass
+        t0 = time.perf_counter()
+        with snap.scope(snap.RunControl(
+                checkpointer=snap.Checkpointer(ckdir))):
+            resumed = svd_streamed(A, k, cfg, seed=0)
+        t_resume = time.perf_counter() - t0
+        for x, y in zip(ref, resumed):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), (
+                "resume changed bits")
+        rows.append(dict(
+            path="streamed", m=m, n=n, k=k, block_rows=block_rows,
+            wall_s_off=round(t_off, 4),
+            wall_s_checkpointed=round(t_on, 4),
+            checkpoint_overhead_ratio=round(t_on / t_off, 3),
+            snapshot_saves=ck.saves,
+            snapshot_overhead_s=round(ck.overhead_s, 4),
+            interrupted_at=interrupt_at,
+            wall_s_resumed=round(t_resume, 4),
+            resume_bit_identical=True,
+            backend=jax.default_backend(),
+        ))
+
+        # ---- adaptive ----------------------------------------------------
+        A2 = jnp.asarray(make_test_matrix(am, an, "sharp", seed=0)[0])
+        spec = linalg.Tolerance(1e-2, panel=16)
+        dref = linalg.decompose(A2, spec, seed=0)
+        t_off = _time(lambda a: linalg.decompose(a, spec, seed=0).factors, A2)
+        t_on = _time(lambda a: linalg.decompose(
+            a, spec, seed=0,
+            checkpoint=tempfile.mkdtemp(dir=workdir)).factors, A2)
+
+        ckdir = tempfile.mkdtemp(dir=workdir)
+        try:
+            with faults.inject("device_lost", panel=2):
+                linalg.decompose(A2, spec, seed=0, checkpoint=ckdir)
+            raise AssertionError("injected device loss never fired")
+        except faults.DeviceLostError:
+            pass
+        ck = snap.Checkpointer(ckdir)
+        t0 = time.perf_counter()
+        dres = linalg.decompose(A2, spec, seed=0, checkpoint=ck)
+        t_resume = time.perf_counter() - t0
+        for x, y in zip(dref.factors, dres.factors):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), (
+                "adaptive resume changed bits")
+        assert dres.rank_history == dref.rank_history
+        rows.append(dict(
+            path="adaptive", m=am, n=an, eps=1e-2, panel=16, rank=dres.rank,
+            wall_s_off=round(t_off, 4),
+            wall_s_checkpointed=round(t_on, 4),
+            checkpoint_overhead_ratio=round(t_on / t_off, 3),
+            snapshot_saves=ck.saves,
+            snapshot_overhead_s=round(ck.overhead_s, 4),
+            interrupted_at=2,
+            wall_s_resumed=round(t_resume, 4),
+            resume_bit_identical=True,
+            backend=jax.default_backend(),
+        ))
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+    return rows
 
 
 def analysis_rows():
@@ -436,7 +573,7 @@ def analysis_rows():
 
 def build_report(smoke: bool = False) -> dict:
     report = {
-        "schema": "bench_rsvd/v8",
+        "schema": "bench_rsvd/v9",
         "backend": jax.default_backend(),
         "interpret_mode": jax.default_backend() != "tpu",
         "traffic_model_per_power_iter": traffic_rows(),
@@ -450,6 +587,8 @@ def build_report(smoke: bool = False) -> dict:
                               else (2048, 512, 32, 4096, 512))),
         "service": service_rows(*((16, 32, 16, 4, 4) if smoke
                                   else (64, 64, 32, 8, 8))),
+        "resume": resume_rows(*((1024, 256, 8, 256, 192, 96, 5) if smoke
+                                else (4096, 512, 32, 512, 512, 256, 5))),
         "analysis": analysis_rows(),
     }
     for row in report["traffic_model_per_power_iter"]:
@@ -498,6 +637,16 @@ def build_report(smoke: bool = False) -> dict:
         if jax.default_backend() == "tpu":
             # the walltime bar holds only where SpMM runs as a real kernel
             assert row["walltime_ratio"] <= 0.5, row
+    for row in report["resume"]:
+        # resumability is a durability upgrade, never a numerics change —
+        # bit-identity holds on every backend, and snapshots were written
+        assert row["resume_bit_identical"] is True, row
+        assert row["snapshot_saves"] > 0, row
+        assert row["checkpoint_overhead_ratio"] > 0, row
+    for row in report["service"]:
+        # fault-free traffic: the resilience counters must all stay zero
+        assert row["cancelled"] == 0 and row["deadline_exceeded"] == 0, row
+        assert row["restarts"] == 0 and row["resumed_jobs"] == 0, row
     return report
 
 
@@ -539,6 +688,12 @@ def main(out_path: str = "BENCH_rsvd.json", smoke: bool = False) -> None:
               f"coalesce{row['coalescing_factor']}x;"
               f"hit{row['cache_hit_rate']};"
               f"p99_{row['latency_s_p99'] * 1e6:.0f}us")
+    for row in report["resume"]:
+        print(f"rsvd_resume_{row['path']},"
+              f"{row['wall_s_resumed'] * 1e6:.0f},"
+              f"ckpt{row['checkpoint_overhead_ratio']}x;"
+              f"saves{row['snapshot_saves']};"
+              f"interrupt@{row['interrupted_at']}")
     print(f"# wrote {out_path}")
 
 

@@ -56,6 +56,8 @@ KEY_DATACLASSES = {
     "CoalesceKey",                                  # serve/decomp/coalesce.py
     "BlockSizes",                                   # kernels/autotune.py
     "Fault",                                        # linalg/faults.py
+    "SnapshotRef",                                  # linalg/snapshot.py
+    "JobRecord",                                    # serve/decomp/jobstore.py
 }
 UNHASHABLE_ANNOTATIONS = {
     "list", "dict", "set", "List", "Dict", "Set", "MutableMapping",

@@ -34,6 +34,21 @@ import numpy as np
 Params = Any
 
 
+def _fsync_dir(path) -> None:
+    """fsync a directory (durability of renames published inside it).
+    No-op on platforms that refuse to open directories."""
+    try:
+        fd = os.open(str(path), os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 def _fingerprint(tree) -> str:
     """Structure+shape+dtype fingerprint to reject incompatible restores."""
     parts = []
@@ -79,7 +94,10 @@ class CheckpointManager:
         tmp.mkdir(parents=True)
 
         leaves, treedef = jax.tree.flatten(host_tree)
-        np.savez(tmp / "shard_0.npz", **{f"leaf_{i}": l for i, l in enumerate(leaves)})
+        with open(tmp / "shard_0.npz", "wb") as f:
+            np.savez(f, **{f"leaf_{i}": l for i, l in enumerate(leaves)})
+            f.flush()
+            os.fsync(f.fileno())
         manifest = {
             "step": step,
             "n_leaves": len(leaves),
@@ -94,6 +112,10 @@ class CheckpointManager:
         if final.exists():
             shutil.rmtree(final)
         os.rename(tmp, final)  # atomic publish
+        # the rename lives in the PARENT directory's metadata: without a
+        # directory fsync a power failure can roll the publish itself back
+        # even though both payload files were synced
+        _fsync_dir(self.dir)
         self._gc()
 
     def _gc(self):

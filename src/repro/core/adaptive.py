@@ -59,6 +59,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import qr as qr_mod
 from repro.core import sketch as sketch_mod
@@ -167,6 +168,44 @@ def _record_step_finite(step: int, Bp: jax.Array) -> None:
         sink.record_panel(step, jnp.isfinite(Bp).all())
 
 
+def _growth_token(m, n, panel, max_rank, threshold_sq, seed, power_iters,
+                  qr_method, sketch_kind, fused_sketch, kernel_backend,
+                  fdtype, norm_sq_arg) -> str:
+    """Fingerprint of everything the growth numerics depend on — a snapshot
+    resumes only a run that would replay the identical panel sequence
+    (repr() keeps float thresholds exact; counter-RNG offsets are implied
+    by ``seed`` + the saved step index)."""
+    return "|".join(str(x) for x in (
+        "adaptive", m, n, panel, max_rank, repr(threshold_sq), int(seed),
+        power_iters, qr_method, sketch_kind, bool(fused_sketch),
+        kernel_backend, jnp.dtype(fdtype).name, repr(norm_sq_arg)))
+
+
+def _growth_boundary(step: int, capture) -> None:
+    """Panel-group boundary of the growth loop: fault/cancel/deadline checks
+    plus the due-snapshot save, through ``sys.modules`` (this module imports
+    nothing from repro.linalg — the `_record_step_finite` pattern; with the
+    snapshot module never imported this is one dict probe)."""
+    import sys
+
+    snap = sys.modules.get("repro.linalg.snapshot")
+    if snap is not None:
+        snap.boundary(step, capture)
+
+
+def _growth_resume(token: str):
+    import sys
+
+    snap = sys.modules.get("repro.linalg.snapshot")
+    if snap is None:
+        return None
+    found = snap.resume(token)
+    if found is None:
+        return None
+    _ref, arrays, meta = found
+    return arrays, meta
+
+
 def _overlap_tol(fdtype) -> float:
     """Max tolerable |Q^T Q_p| entry after re-orthogonalization.  A healthy
     CGS2 pass lands at O(eps); an entry near sqrt(eps) means the deflated
@@ -209,16 +248,53 @@ def adaptive_qb(
     max_rank = min(max_rank, m, n)
     fdtype = jnp.promote_types(op.dtype, jnp.float32)
 
+    token = _growth_token(m, n, panel, max_rank, threshold_sq, seed,
+                          power_iters, qr_method, sketch_kind, fused_sketch,
+                          kernel_backend, fdtype, norm_sq)
+
     with qr_mod.kernel_backend(kernel_backend):
-        if norm_sq is None and threshold_sq is not None:
-            norm_sq = fro_norm_sq(op)
-        track = norm_sq is not None
-        remaining = float(norm_sq) if track else 0.0
-        Q: Optional[jax.Array] = None
-        B_panels = []
-        rank_hist: list[int] = []
-        err_hist: list[float] = []
-        r, step = 0, 0
+        saved = _growth_resume(token)
+        if saved is not None:
+            # Resume: rehydrate the exact saved bytes; norm_sq / remaining
+            # round-trip exactly through the JSON manifest (repr-based float
+            # serialization), so the estimator continues bit-identically and
+            # the ||A||_F^2 pass is NOT re-run.
+            arrays, saved_meta = saved
+            norm_sq = saved_meta["norm_sq"]
+            track = saved_meta["track"]
+            remaining = float(saved_meta["remaining"])
+            Q = jnp.asarray(arrays["Q"]) if "Q" in arrays else None
+            B_panels = [jnp.asarray(arrays[f"B{i:04d}"])
+                        for i in range(int(saved_meta["n_b"]))]
+            rank_hist = [int(x) for x in saved_meta["rank_hist"]]
+            err_hist = [float(x) for x in saved_meta["err_hist"]]
+            r, step = int(saved_meta["r"]), int(saved_meta["step"])
+        else:
+            if norm_sq is None and threshold_sq is not None:
+                norm_sq = fro_norm_sq(op)
+            track = norm_sq is not None
+            remaining = float(norm_sq) if track else 0.0
+            Q = None
+            B_panels = []
+            rank_hist = []
+            err_hist = []
+            r, step = 0, 0
+
+        def _capture():
+            """Live growth state as (arrays, meta) — reads the loop's locals
+            at save time (closure), exact host bytes."""
+            arrays = {f"B{i:04d}": np.asarray(bp)
+                      for i, bp in enumerate(B_panels)}
+            if Q is not None:
+                arrays["Q"] = np.asarray(Q)
+            meta = {"token": token, "engine": "adaptive",
+                    "remaining": remaining,
+                    "norm_sq": float(norm_sq) if track else None,
+                    "track": track, "r": r, "step": step,
+                    "n_b": len(B_panels), "rank_hist": list(rank_hist),
+                    "err_hist": list(err_hist)}
+            return arrays, meta
+
         while r < max_rank:
             b = min(panel, max_rank - r)
             seed_p = jnp.asarray(seed, jnp.uint32) + jnp.uint32(step)
@@ -257,6 +333,10 @@ def adaptive_qb(
                 )
             if threshold_sq is not None and remaining <= threshold_sq:
                 break
+            # boundary AFTER the stop check: a snapshot is only ever taken
+            # of a run that will compute at least one more panel, so a
+            # resumed run can never overshoot the tolerance
+            _growth_boundary(step, _capture)
         B = B_panels[0] if len(B_panels) == 1 else jnp.concatenate(B_panels, axis=0)
         return QBResult(
             Q=Q,

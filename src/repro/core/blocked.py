@@ -84,14 +84,19 @@ def _panel_stream(A, bounds, depth):
     of panel i+1 is issued while panel i computes (linalg/pipeline.py) —
     host numpy sources take the staged ring, device arrays degrade to the
     plain lazy-slice walk.  Values and order are bit-identical to the
-    synchronous walk either way."""
+    synchronous walk either way.
+
+    ``start`` begins the pass at panel ordinal ``start`` (a resumed solve
+    re-walks only the panels its restored cursor has not consumed; probe /
+    hook ordinals restart at 0 for the shortened pass)."""
     from repro.linalg import pipeline as pipe  # lazy: core stays cycle-free
 
     host = isinstance(A, np.ndarray)
     d = pipe.resolve_depth(depth, host_resident=host)
     if host and d > 1:
-        return lambda: pipe.stream_host_panels(A, bounds, d)
-    return lambda: pipe.lookahead((_device(A[lo:hi]) for lo, hi in bounds), d)
+        return lambda start=0: pipe.stream_host_panels(A, bounds[start:], d)
+    return lambda start=0: pipe.lookahead(
+        (_device(A[lo:hi]) for lo, hi in bounds[start:]), d)
 
 
 # ---------------------------------------------------------------------------
@@ -292,12 +297,121 @@ def svd_streamed(
     depth = pipeline_depth if pipeline_depth is not None else cfg.pipeline_depth
     panels = _panel_stream(A, bounds, depth)
 
+    dtype = _device(A[:1, :1]).dtype
+    token = _stream_token(m, n, k, s, cfg, seed, dtype, nb=len(bounds))
+
     with qr_mod.kernel_backend(cfg.kernel_backend):
-        return _blocked_body(panels, k, s, cfg, seed, _device(A[:1, :1]).dtype)
+        return _blocked_body(panels, k, s, cfg, seed, dtype, token=token)
 
 
-def _blocked_body(panels, k: int, s: int, cfg: RSVDConfig, seed, dtype):
-    """Steps 1-6 over the panel generator, under the active kernel backend."""
+# ---------------------------------------------------------------------------
+# The streamed solve as a resumable stage machine.  Stages walk A's panels
+# with an explicit cursor and call `_stream_boundary` after each consumed
+# panel, so linalg/snapshot.py can capture the accumulated state (Y panels,
+# Gram, Z/B accumulators, cursor) at any panel-group boundary and a restored
+# run continues the walk from `bounds[cursor:]`.  Everything NOT saved (the
+# CholeskyQR bases Q/Qz, Omega slabs) is recomputed on restore from saved
+# bytes through the same ops — resumed factors are bit-identical to the
+# uninterrupted run.  With no snapshot scope active each boundary is one
+# sys.modules probe; the arithmetic and its order are EXACTLY the
+# pre-machine body's (tests/test_blocked.py pins fixed-seed bytes).
+# ---------------------------------------------------------------------------
+
+class _StreamState:
+    """Mutable stage-machine state of one streamed solve.
+
+    ``stage`` walks sketch -> (power_z -> power_y) x power_iters -> project;
+    ``cursor`` counts panels consumed in the CURRENT pass, ``ticks`` counts
+    boundaries ever crossed (monotonic across restarts — the snapshot step
+    key), ``piter`` the current power iteration.  ``Y`` holds the current
+    pass's basis panels (the NEW panels while power_y rebuilds them)."""
+
+    __slots__ = ("stage", "piter", "cursor", "ticks", "Y", "G1", "Z", "B",
+                 "token")
+
+    def __init__(self, token: str):
+        self.stage = "sketch"
+        self.piter = 0
+        self.cursor = 0
+        self.ticks = 0
+        self.Y = []
+        self.G1 = None
+        self.Z = None
+        self.B = None
+        self.token = token
+
+    def capture(self):
+        """(arrays, meta) for snapshot.Checkpointer — exact host bytes."""
+        arrays = {f"Y{i:04d}": np.asarray(y) for i, y in enumerate(self.Y)}
+        for name in ("G1", "Z", "B"):
+            v = getattr(self, name)
+            if v is not None:
+                arrays[name] = np.asarray(v)
+        meta = {"token": self.token, "engine": "streamed", "stage": self.stage,
+                "piter": self.piter, "cursor": self.cursor,
+                "ticks": self.ticks, "n_y": len(self.Y)}
+        return arrays, meta
+
+    @classmethod
+    def restore(cls, snap, token: str) -> "_StreamState":
+        _ref, arrays, meta = snap
+        st = cls(token)
+        st.stage = meta["stage"]
+        st.piter = int(meta["piter"])
+        st.cursor = int(meta["cursor"])
+        st.ticks = int(meta["ticks"])
+        st.Y = [jnp.asarray(arrays[f"Y{i:04d}"]) for i in range(meta["n_y"])]
+        for name in ("G1", "Z", "B"):
+            if name in arrays:
+                setattr(st, name, jnp.asarray(arrays[name]))
+        return st
+
+
+def _stream_token(m: int, n: int, k: int, s: int, cfg: RSVDConfig, seed,
+                  dtype, nb: int) -> str:
+    """Fingerprint of everything the streamed numerics depend on: a snapshot
+    resumes only a solve that would replay the identical op sequence."""
+    return "|".join(str(x) for x in (
+        "streamed", m, n, k, s, int(seed), jnp.dtype(dtype).name, nb,
+        cfg.power_iters, cfg.power_scheme, cfg.qr_method, cfg.sketch_kind,
+        bool(cfg.fused_sketch), cfg.block_cols, cfg.kernel_backend,
+        cfg.small_svd, cfg.oversample))
+
+
+def _stream_boundary(st: _StreamState) -> None:
+    """Advance one panel and cross a snapshot boundary.  sys.modules probe:
+    core stays import-cycle-free (the `_record_step_finite` pattern); the
+    snapshot module is in sys.modules whenever repro.linalg is."""
+    import sys
+
+    st.cursor += 1
+    st.ticks += 1
+    snap = sys.modules.get("repro.linalg.snapshot")
+    if snap is not None:
+        snap.boundary(st.ticks, st.capture)
+
+
+def _stream_resume(token: str) -> "_StreamState | None":
+    import sys
+
+    snap = sys.modules.get("repro.linalg.snapshot")
+    if snap is None:
+        return None
+    found = snap.resume(token)
+    return None if found is None else _StreamState.restore(found, token)
+
+
+def _blocked_body(panels, k: int, s: int, cfg: RSVDConfig, seed, dtype,
+                  token: "str | None" = None):
+    """Steps 1-6 over the panel generator, under the active kernel backend.
+
+    ``token`` (from `_stream_token`) enables snapshot/resume; None (direct
+    callers, tests of the raw body) runs the fresh stage machine with
+    boundaries still crossed — identical arithmetic either way."""
+    st = (_stream_resume(token) if token is not None else None) \
+        or _StreamState(token or "")
+    _panel_orth = _panel_orthonormalizer(cfg)
+
     # Step 1-2a: per-panel sketch.  Omega is n x s regenerated per panel from
     # the counter RNG — identical for every panel, no broadcast state.  The
     # fused whole-panel sketch rides the Gram epilogue: each panel's
@@ -306,53 +420,65 @@ def _blocked_body(panels, k: int, s: int, cfg: RSVDConfig, seed, dtype):
     # accumulate Y_p across block_cols calls, so no per-call Gram exists;
     # f64 — the faithful enable_x64 setting — stays on the jnp sketch, like
     # the dense path's guard.)
-    G1 = None
-    if cfg.fused_sketch and not cfg.block_cols and dtype != jnp.float64:
-        from repro.kernels.ops import sketch_gram
+    if st.stage == "sketch":
+        if cfg.fused_sketch and not cfg.block_cols and dtype != jnp.float64:
+            from repro.kernels.ops import sketch_gram
 
-        pairs = [sketch_gram(Ap, s, seed, kind=cfg.sketch_kind) for Ap in panels()]
-        Y = [y for y, _ in pairs]
-        G1 = _accum_panels(g for _, g in pairs)
-    else:
-        Y = [
-            streamed_sketch(
-                Ap, s, seed, cfg.sketch_kind,
-                block_cols=cfg.block_cols,
-                fused=cfg.fused_sketch and dtype != jnp.float64,
-            )
-            for Ap in panels()
-        ]
+            for Ap in panels(st.cursor):
+                y, g = sketch_gram(Ap, s, seed, kind=cfg.sketch_kind)
+                st.Y.append(y)
+                st.G1 = g if st.G1 is None else _add_donated(st.G1, g)
+                _stream_boundary(st)
+        else:
+            for Ap in panels(st.cursor):
+                st.Y.append(streamed_sketch(
+                    Ap, s, seed, cfg.sketch_kind,
+                    block_cols=cfg.block_cols,
+                    fused=cfg.fused_sketch and dtype != jnp.float64,
+                ))
+                _stream_boundary(st)
+        st.stage = "power_z" if cfg.power_iters else "project"
+        st.cursor = 0
 
     # Step 2: power iteration through the n x s accumulator Z.  The Z / B
     # accumulators below are donated per panel (_accum_xty): one n x s (or
     # s x n) HBM buffer carries the whole pass instead of a fresh
     # allocation per panel, and the summation order is unchanged.
-    _panel_orth = _panel_orthonormalizer(cfg)
-    for _ in range(cfg.power_iters):
-        if cfg.power_scheme == "plain":
-            Z = None
-            for Ap, Yp in zip(panels(), Y):
-                Z = Ap.T @ Yp if Z is None else _accum_xty(Z, Ap, Yp)
-            Y = [Ap @ Z for Ap in panels()]
-        else:
-            Q, _ = _panel_orth(Y, G1)
-            Z = None
-            for Ap, Qp in zip(panels(), Q):
-                Z = Ap.T @ Qp if Z is None else _accum_xty(Z, Ap, Qp)
-            Qz = qr_mod.orthonormalize(Z, cfg.qr_method)  # n x s, fits
-            Y = [Ap @ Qz for Ap in panels()]
-        G1 = None  # Y was replaced; the sketch-pass Gram no longer matches
+    while st.stage in ("power_z", "power_y"):
+        if st.stage == "power_z":
+            if cfg.power_scheme == "plain":
+                src = st.Y
+            else:
+                # recomputed (not snapshotted) on resume: a deterministic
+                # function of the saved Y panels + Gram, same ops
+                src, _ = _panel_orth(st.Y, st.G1)
+            for Ap, Xp in zip(panels(st.cursor), src[st.cursor:]):
+                st.Z = Ap.T @ Xp if st.Z is None else _accum_xty(st.Z, Ap, Xp)
+                _stream_boundary(st)
+            st.stage, st.cursor, st.Y = "power_y", 0, []
+        else:  # power_y: rebuild Y from the completed Z accumulator
+            if cfg.power_scheme == "plain":
+                mult = st.Z
+            else:
+                mult = qr_mod.orthonormalize(st.Z, cfg.qr_method)  # n x s, fits
+            for Ap in panels(st.cursor):
+                st.Y.append(Ap @ mult)
+                _stream_boundary(st)
+            st.G1 = None  # Y was replaced; the sketch-pass Gram is stale
+            st.Z = None
+            st.piter += 1
+            st.stage = "power_z" if st.piter < cfg.power_iters else "project"
+            st.cursor = 0
 
-    # Step 3: orthonormal range basis, panel-split.
-    Q, _ = _panel_orth(Y, G1)
-
-    # Step 4: B = Q^T A through the s x n accumulator (donated per panel).
-    B = None
-    for Ap, Qp in zip(panels(), Q):
-        B = Qp.T @ Ap if B is None else _accum_xty(B, Qp, Ap)
+    # Steps 3-4: orthonormal range basis (panel-split; recomputed from the
+    # saved Y/G1 on resume), then B = Q^T A through the s x n accumulator.
+    Q, _ = _panel_orth(st.Y, st.G1)
+    for Ap, Qp in zip(panels(st.cursor), Q[st.cursor:]):
+        st.B = Qp.T @ Ap if st.B is None else _accum_xty(st.B, Qp, Ap)
+        _stream_boundary(st)
 
     # Steps 5-6: small SVD (s x n, in-memory) and per-panel U assembly.
-    U_b, S, Vt = _small_svd(B, cfg.small_svd)
+    U_b, S, Vt = _small_svd(st.B, cfg.small_svd)
     U = jnp.concatenate([Qp @ U_b[:, :k] for Qp in Q], axis=0)
     return U, S[:k], Vt[:k, :]
 

@@ -31,7 +31,14 @@ from repro.linalg.operators import (  # noqa: F401
 from repro.linalg import faults  # noqa: F401
 from repro.linalg import guard  # noqa: F401
 from repro.linalg import pipeline  # noqa: F401
+from repro.linalg import snapshot  # noqa: F401
 from repro.linalg.guard import GuardPolicy, HealthReport  # noqa: F401
+from repro.linalg.snapshot import (  # noqa: F401
+    Cancelled,
+    Checkpointer,
+    DeadlineExceeded,
+    RunControl,
+)
 from repro.linalg.planner import Budget, ExecutionPlan  # noqa: F401
 from repro.linalg.registry import (  # noqa: F401
     DecompositionKind,

@@ -39,6 +39,7 @@ from repro.linalg import guard as guard_mod
 from repro.linalg import pipeline as pipeline_mod
 from repro.linalg import planner as planner_mod
 from repro.linalg import registry as registry_mod
+from repro.linalg import snapshot as snapshot_mod
 from repro.linalg.operators import LinOp, ShardedOp, as_linop, prefetch_panels
 from repro.linalg.planner import Budget, ExecutionPlan
 from repro.linalg.spec import Rank, Spec, as_spec
@@ -113,6 +114,7 @@ def decompose(
     seed: int = 0,
     guard=None,
     validate: Optional[bool] = None,
+    checkpoint=None,
 ) -> Decomposition:
     """Factorize `a` to the accuracy `spec` with the registry entry `kind`.
 
@@ -125,7 +127,14 @@ def decompose(
     pinned plan's fields; None inherits them.  Under guard "report" /
     "retry" the result's `health` carries the probe verdict (and the
     ladder trail for retry); `validate=True` screens non-finite input
-    before factors can silently go NaN."""
+    before factors can silently go NaN.
+
+    `checkpoint` (linalg/snapshot.py) makes a streamed/adaptive solve
+    resumable: a directory path (or `Checkpointer` / `RunControl`) where
+    engine state is persisted at panel-group boundaries.  An interrupted
+    call re-issued with the same arguments and checkpoint directory
+    resumes from the last snapshot, bit-identical to an uninterrupted run;
+    `None` (default) adds zero work and zero HBM traffic."""
     spec = as_spec(spec)
     entry = registry_mod.get(kind)
     op = as_linop(a)
@@ -143,7 +152,8 @@ def decompose(
         guard=guard, validate=bool(validate),
     )
     pl = _with_guard_overrides(pl, guard, validate, pinned=plan is not None)
-    with guard_mod.validated(op, pl.validate):
+    with snapshot_mod.maybe_scope(checkpoint), \
+            guard_mod.validated(op, pl.validate):
         if pl.guard.mode != "off":
             ortho = None
             if entry.ortho_factor is not None:

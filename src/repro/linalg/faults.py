@@ -19,6 +19,17 @@ modes the guard layer (guard.py) must detect and recover from:
                            entry, which the floor shift cannot rescue, so
                            the Cholesky diagonal goes NaN — this is the
                            forced-breakdown trigger for the retry ladder.
+  - ``preempt``            the worker is preempted at a panel-group
+                           boundary (:class:`PreemptionError`, raised from
+                           ``snapshot.boundary``) — the transient-
+                           interruption model behind the guard's
+                           ``max_restarts`` restart policy and the
+                           checkpoint/resume tests.
+  - ``device_lost``        the accelerator disappears at a panel-group
+                           boundary (:class:`DeviceLostError`) — same
+                           firing site and restart semantics as
+                           ``preempt``, modelling a device reset rather
+                           than a scheduler eviction.
 
 Trace-time safety contract: hooks that run *inside* jit-traced code
 (``poison_gram``) are consulted only while a guard probe sink is active,
@@ -42,11 +53,26 @@ from typing import Dict, Iterator, List, Optional, Tuple
 
 import jax.numpy as jnp
 
-KINDS = ("nan_panel", "corrupt_transfer", "flaky_link", "cholesky_breakdown")
+KINDS = ("nan_panel", "corrupt_transfer", "flaky_link", "cholesky_breakdown",
+         "preempt", "device_lost")
 
 
 class TransferError(RuntimeError):
     """Injected host->device transfer failure (``flaky_link``)."""
+
+
+class PreemptionError(RuntimeError):
+    """Injected worker preemption at a panel-group boundary (``preempt``)."""
+
+
+class DeviceLostError(RuntimeError):
+    """Injected device loss at a panel-group boundary (``device_lost``)."""
+
+
+#: the transient-interruption class the guard's restart policy absorbs
+#: (same rung, progress preserved through the ambient checkpointer) —
+#: distinct from numerical breakdowns, which escalate the ladder instead
+TRANSIENT_ERRORS = (PreemptionError, DeviceLostError)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,7 +104,9 @@ def inject(kind: str, panel: Optional[int] = None,
     """Activate one fault for the duration of the ``with`` block."""
     if kind not in KINDS:
         raise ValueError(f"unknown fault kind {kind!r}; expected one of {KINDS}")
-    if times is None and kind == "flaky_link":
+    if times is None and kind in ("flaky_link", "preempt", "device_lost"):
+        # one firing by default: a single interruption exercises the
+        # retry/restart path rather than a permanently dead environment
         times = 1
     fault = Fault(kind, panel, times)
     with _registry_mu:
@@ -157,6 +185,23 @@ def maybe_fail_transfer(idx: int) -> None:
             _fire(fault)
             raise TransferError(
                 f"injected flaky host->device link at panel {idx}")
+
+
+def maybe_interrupt(idx: int) -> None:
+    """``preempt`` / ``device_lost``: raise at panel-group boundary ``idx``
+    (the `snapshot.boundary` funnel — panel-targeted and count-limited like
+    ``nan_panel``, so tests can interrupt one specific boundary once)."""
+    if not _active:
+        return
+    for fault in list(_active):
+        if _matches(fault, "preempt", idx):
+            _fire(fault)
+            raise PreemptionError(
+                f"injected preemption at panel-group boundary {idx}")
+        if _matches(fault, "device_lost", idx):
+            _fire(fault)
+            raise DeviceLostError(
+                f"injected device loss at panel-group boundary {idx}")
 
 
 def poison_gram(G):

@@ -69,6 +69,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import threading
+import time
 from typing import Callable, List, Optional, Tuple
 
 import jax
@@ -76,6 +77,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.linalg import faults as faults_mod
+from repro.linalg import snapshot as snapshot_mod
 
 #: seed offset of the re-seeded (f64 / sharded) recompute rung — a fresh
 #: sketch decorrelates the retry from a sketch-direction near-degeneracy
@@ -103,17 +105,33 @@ class GuardPolicy:
     kappa^2*eps-scaled; 0.5 is the classical radius inside which CQR2's
     second pass still restores O(eps) orthogonality — see module
     docstring); ``ortho_tol`` gates the explicit output verification in
-    retry mode and defaults per dtype (1e-5 f32 / 1e-10 f64) when None."""
+    retry mode and defaults per dtype (1e-5 f32 / 1e-10 f64) when None.
+
+    ``max_restarts`` / ``restart_backoff_s`` govern TRANSIENT interruptions
+    (preemption, device loss — `faults.TRANSIENT_ERRORS`), which are not
+    numerical breakdowns: the same rung is restarted in place, up to
+    ``max_restarts`` times per rung with exponential backoff, and an
+    ambient snapshot scope (linalg/snapshot.py) lets the restart resume
+    from the last panel-group boundary instead of panel 0.  Only when a
+    rung's restarts are exhausted does the ladder treat the interruption
+    like any other failed attempt and escalate (applies in every mode —
+    restarts are environment recovery, not numerical-health policy)."""
 
     mode: str = "off"
     max_retries: int = 3
     ortho_tol: Optional[float] = None
     probe_tol: float = 0.5
+    max_restarts: int = 2
+    restart_backoff_s: float = 0.0
 
     def __post_init__(self):
         _policy_mode(self.mode)
         if self.max_retries < 0:
             raise ValueError("max_retries must be >= 0")
+        if self.max_restarts < 0:
+            raise ValueError("max_restarts must be >= 0")
+        if self.restart_backoff_s < 0:
+            raise ValueError("restart_backoff_s must be >= 0")
 
     def resolve_ortho_tol(self, dtype_name: str) -> float:
         if self.ortho_tol is not None:
@@ -315,6 +333,7 @@ class RungReport:
     ortho_fro: Optional[float] = None          # verified ||QtQ - I||_F (retry)
     transfer_retries: int = 0
     degraded_to_sync: bool = False
+    restarts: int = 0                          # transient-interruption restarts
     error: Optional[str] = None                # escalation rung that raised
 
     def describe(self) -> str:
@@ -335,6 +354,8 @@ class RungReport:
             bits.append(f"transfer_retries={self.transfer_retries}")
         if self.degraded_to_sync:
             bits.append("degraded_to_sync")
+        if self.restarts:
+            bits.append(f"restarts={self.restarts}")
         if self.error:
             bits.append(f"error={self.error!r}")
         return " ".join(bits)
@@ -501,9 +522,37 @@ def run_guarded(run, op, pl, seed: int, *,
     result = None
     rung_used = rungs[0][0]
     for i, (name, thunk) in enumerate(rungs):
+        restarts = 0
         try:
-            with collecting() as sink:
-                res = thunk()
+            while True:
+                try:
+                    with collecting() as sink:
+                        res = thunk()
+                    break
+                except faults_mod.TRANSIENT_ERRORS:
+                    # preemption / device loss: restart the SAME rung — with
+                    # an ambient snapshot scope the re-run resumes from the
+                    # last panel-group boundary, so progress is preserved
+                    if restarts >= policy.max_restarts:
+                        raise
+                    if policy.restart_backoff_s:
+                        time.sleep(policy.restart_backoff_s * (2 ** restarts))
+                    restarts += 1
+        except (snapshot_mod.Cancelled, snapshot_mod.DeadlineExceeded):
+            # cooperative cancellation / deadline are caller verdicts on the
+            # whole request, not rung failures — never absorbed by the ladder
+            raise
+        except faults_mod.TRANSIENT_ERRORS as exc:
+            # restarts exhausted: the environment keeps interrupting this
+            # rung — record it and (retry mode) climb; a stronger rung may
+            # be cheap enough to finish between interruptions
+            if not verify:
+                raise
+            attempts.append(RungReport(
+                rung=name, healthy=False, factors_finite=False,
+                restarts=restarts,
+                error=f"{type(exc).__name__}: {exc}"))
+            continue
         except faults_mod.TransferError as exc:
             # the staging pipeline already degraded and still failed —
             # record the dead rung; first-attempt failures keep climbing
@@ -521,6 +570,8 @@ def run_guarded(run, op, pl, seed: int, *,
             continue
         report = _summarize(name, sink, res, policy, pl.dtype,
                             ortho_factor, verify, ortho_gates=ortho_gates)
+        if restarts:
+            report = dataclasses.replace(report, restarts=restarts)
         attempts.append(report)
         result = res
         rung_used = name

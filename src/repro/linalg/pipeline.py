@@ -113,7 +113,15 @@ def panel_hook(fn):
 
     ``fn(ordinal)`` runs after each panel is produced (post fault/guard/
     validate probes), on the consuming thread — it may block, which is
-    exactly how the scheduler's yield gate pauses a big job mid-walk."""
+    exactly how the scheduler's yield gate pauses a big job mid-walk.
+
+    Relationship to `snapshot.boundary` (PR 10): this hook fires on panel
+    PRODUCTION (the staging/prefetch side — device-sharing granularity),
+    while the engines call the snapshot boundary on panel CONSUMPTION,
+    after the panel's contribution is folded into their accumulators —
+    the only point where captured state is consistent.  The two funnels
+    are deliberately separate: a job parked by the gate holds no snapshot
+    lock, and a snapshot save never blocks the gate."""
     prev = getattr(_hook_state, "fn", None)
     _hook_state.fn = fn
     try:

@@ -124,6 +124,21 @@ class ExecutionPlan:
     guard: guard_mod.GuardPolicy = guard_mod.GuardPolicy()
     validate: bool = False
 
+    def fingerprint(self) -> str:
+        """Stable string identity of the numerics this plan executes — the
+        fields that determine the op sequence at fixed seed (prediction
+        fields and guard/validate knobs excluded: they never change a
+        healthy solve's bytes).  Job-store manifests persist this so a
+        restored service only resumes a job whose re-planned execution is
+        the one the snapshot came from."""
+        return "|".join(str(x) for x in (
+            self.path, self.m, self.n, self.k, self.s, self.batch,
+            self.dtype, self.oversample, self.power_iters, self.power_scheme,
+            self.qr_method, self.small_svd, self.sketch_kind,
+            self.fused_sketch, self.fused_power, self.kernel_backend,
+            self.block_rows, self.block_cols, self.kind, self.panel,
+            self.pipeline_depth, self.nnz))
+
     def to_config(self) -> RSVDConfig:
         """The thin frozen RSVDConfig view the core numerics execute."""
         return RSVDConfig(

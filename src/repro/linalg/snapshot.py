@@ -1,0 +1,321 @@
+"""Panel-granular snapshot/resume for the streamed and adaptive engines.
+
+A long out-of-core solve (Lu et al.: A far beyond device memory, minutes of
+panel streaming) is all-or-nothing without this module: any preemption,
+worker crash or persistent fault re-runs the whole solve from panel 0.
+Here every streamed path can persist its engine state at panel-group
+boundaries and be restored into a solve **bit-identical to the
+uninterrupted run**:
+
+  capture    the engines (core/blocked.py stage machine, core/adaptive.py
+             growth loop) expose their accumulated state — basis panels,
+             B blocks, Gram/estimator accumulators, the panel cursor, the
+             per-panel counter-RNG offsets (a step index: Omega slabs are
+             regenerated from ``seed + step``, never stored) — as a flat
+             dict of host arrays plus a JSON-able meta dict.
+  persist    `Checkpointer` writes each snapshot with the atomic publish
+             pattern of repro.checkpoint: write to ``snap_<N>.tmp``, fsync
+             the payload and manifest, ``os.rename``, then fsync the
+             PARENT directory (the rename itself is durable).  A crash
+             mid-save can never corrupt the previous snapshot, and
+             ``latest()`` skips ``.tmp`` debris.
+  restore    the engines probe `resume(token)` at solve start; a snapshot
+             whose ``token`` (the engine's own fingerprint of shapes,
+             seed, config and panel schedule) matches is rehydrated and
+             the solve continues from the saved cursor.  Everything the
+             engines recompute on restore (CholeskyQR bases from saved
+             Y/Gram panels, Omega slabs from counter-RNG offsets) is a
+             deterministic function of saved bytes, so resumed factors
+             are bit-identical to the uninterrupted run at fixed seed.
+
+`boundary(step, capture)` is the single per-boundary funnel the engines
+call (through ``sys.modules`` — repro.core never imports repro.linalg at
+module level).  In order it:
+
+  1. fires the ``preempt`` / ``device_lost`` injected faults
+     (linalg/faults.py) — the transient-interruption model that drives the
+     guard's restart policy and the resume tests;
+  2. checks the ambient `RunControl` for cooperative cancellation and the
+     request deadline, saving a final snapshot and raising `Cancelled` /
+     `DeadlineExceeded` (each carrying the snapshot path) when tripped;
+  3. saves a snapshot when one is due (``Checkpointer.every``).
+
+With no control in scope and no faults active the whole call is two
+dictionary probes — checkpoint-off execution stays byte-identical in
+predicted HBM traffic (snapshot writes are host-side only; nothing here
+ever reads A or touches device memory).
+
+The control scope is THREAD-LOCAL (the `qr.kernel_backend` /
+`pipeline.default_depth` pattern): the decomposition service runs solves
+on concurrent worker threads, and one request's deadline or checkpoint
+directory must never leak into another's solve.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import os
+import pathlib
+import shutil
+import threading
+import time
+from typing import Callable, Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+from repro.linalg import faults as faults_mod
+
+
+class Cancelled(RuntimeError):
+    """Cooperative cancellation observed at a panel-group boundary.
+
+    ``snapshot_path`` is the final snapshot saved before raising (None when
+    the run had no checkpointer) — resubmitting with the same checkpoint
+    directory resumes from exactly this point."""
+
+    def __init__(self, message: str, snapshot_path: Optional[str] = None):
+        super().__init__(message)
+        self.snapshot_path = snapshot_path
+
+
+class DeadlineExceeded(TimeoutError):
+    """The request deadline passed; checked at panel-group boundaries.
+    Carries ``snapshot_path`` like `Cancelled` — the partial solve is not
+    lost, it is parked."""
+
+    def __init__(self, message: str, snapshot_path: Optional[str] = None):
+        super().__init__(message)
+        self.snapshot_path = snapshot_path
+
+
+@dataclasses.dataclass(frozen=True)
+class SnapshotRef:
+    """Identity of one persisted snapshot — frozen/hashable (it rides in
+    exceptions and job-store manifests as a key, linted by RL003)."""
+
+    token: str
+    step: int
+    path: str
+
+
+class Checkpointer:
+    """Atomic snapshot persistence for one solve (or one resumable job).
+
+    Layout:  <dir>/snap_<step:08d>/
+               manifest.json   — token, step, meta (engine state scalars)
+               state.npz       — the engine's array state, exact bytes
+
+    ``every`` saves one snapshot per ``every`` boundaries (the panel-group
+    granularity); `save_now` ignores the cadence (the cancel/deadline final
+    snapshot).  All methods are called from the solving thread only; the
+    instance keeps a lock anyway so a service can read `overhead_s` while
+    a solve runs."""
+
+    def __init__(self, directory, every: int = 1, keep_last: int = 2):
+        if every < 1:
+            raise ValueError(f"checkpoint cadence must be >= 1, got {every}")
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.every = int(every)
+        self.keep_last = max(1, int(keep_last))
+        self._mu = threading.Lock()
+        self._boundaries = 0
+        self._saves = 0
+        self._overhead_s = 0.0
+
+    # ---------------- save -------------------------------------------------
+
+    def maybe_save(self, step: int, capture: Callable) -> Optional[str]:
+        """Save when a snapshot is due at this boundary (every-th call)."""
+        self._boundaries += 1
+        if self._boundaries % self.every:
+            return None
+        return self.save_now(step, capture)
+
+    def save_now(self, step: int, capture: Callable) -> str:
+        """Capture and persist unconditionally (atomic publish)."""
+        t0 = time.perf_counter()
+        arrays, meta = capture()
+        tmp = self.dir / f"snap_{step:08d}.tmp"
+        final = self.dir / f"snap_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        with open(tmp / "state.npz", "wb") as f:
+            np.savez(f, **{k: np.asarray(v) for k, v in arrays.items()})
+            f.flush()
+            os.fsync(f.fileno())
+        with open(tmp / "manifest.json", "w") as f:
+            json.dump({"step": int(step), **meta}, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        fsync_dir(self.dir)  # make the rename itself durable
+        self._gc()
+        with self._mu:
+            self._saves += 1
+            self._overhead_s += time.perf_counter() - t0
+        return str(final)
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[: -self.keep_last]:
+            shutil.rmtree(self.dir / f"snap_{s:08d}", ignore_errors=True)
+
+    # ---------------- restore ----------------------------------------------
+
+    def steps(self) -> list:
+        out = []
+        for p in self.dir.glob("snap_*"):
+            if p.suffix == ".tmp" or not (p / "manifest.json").exists():
+                continue  # crash-mid-save debris is never picked up
+            out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest(self, token: str):
+        """Newest snapshot whose token matches, or None (a stale snapshot
+        from a different plan/seed/shape silently yields a fresh run).
+        Returns ``(SnapshotRef, arrays, meta)``."""
+        for s in reversed(self.steps()):
+            d = self.dir / f"snap_{s:08d}"
+            meta = json.loads((d / "manifest.json").read_text())
+            if meta.get("token") != token:
+                continue
+            with np.load(d / "state.npz") as data:
+                arrays = {k: np.asarray(data[k]) for k in data.files}
+            return SnapshotRef(token=token, step=s, path=str(d)), arrays, meta
+        return None
+
+    # ---------------- accounting -------------------------------------------
+
+    @property
+    def overhead_s(self) -> float:
+        """Walltime spent capturing + persisting (host-side only)."""
+        with self._mu:
+            return self._overhead_s
+
+    @property
+    def saves(self) -> int:
+        with self._mu:
+            return self._saves
+
+
+def fsync_dir(path) -> None:
+    """fsync a DIRECTORY: after `os.rename(tmp, final)` the rename lives in
+    the parent directory's metadata, which a power failure can still lose
+    unless the directory itself is synced.  No-op on platforms that refuse
+    to open directories."""
+    try:
+        fd = os.open(str(path), os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+# ---------------------------------------------------------------------------
+# the ambient run control (thread-local scope)
+# ---------------------------------------------------------------------------
+
+class RunControl:
+    """Everything a resumable run needs at its boundaries: the checkpointer
+    (None = no persistence), the absolute monotonic deadline (None = no
+    deadline) and the cooperative cancel event (None = not cancellable)."""
+
+    def __init__(self, checkpointer: Optional[Checkpointer] = None,
+                 deadline_t: Optional[float] = None,
+                 cancel_event: Optional[threading.Event] = None):
+        self.checkpointer = checkpointer
+        self.deadline_t = deadline_t
+        self.cancel_event = cancel_event
+
+
+_control_state = threading.local()
+
+
+@contextlib.contextmanager
+def scope(control: RunControl) -> Iterator[RunControl]:
+    """Make ``control`` ambient for the current thread's solves (stack
+    discipline, like guard.collecting)."""
+    prev = getattr(_control_state, "control", None)
+    _control_state.control = control
+    try:
+        yield control
+    finally:
+        _control_state.control = prev
+
+
+def active() -> Optional[RunControl]:
+    return getattr(_control_state, "control", None)
+
+
+def as_control(checkpoint) -> Optional[RunControl]:
+    """Coerce the facade's ``checkpoint=`` argument: a directory path or a
+    `Checkpointer` becomes a checkpoint-only control; a `RunControl` passes
+    through (the service builds those, adding deadline/cancel); None is
+    None."""
+    if checkpoint is None:
+        return None
+    if isinstance(checkpoint, RunControl):
+        return checkpoint
+    if isinstance(checkpoint, Checkpointer):
+        return RunControl(checkpointer=checkpoint)
+    return RunControl(checkpointer=Checkpointer(checkpoint))
+
+
+@contextlib.contextmanager
+def maybe_scope(checkpoint) -> Iterator[Optional[RunControl]]:
+    """`scope` that is a no-op for ``checkpoint=None`` (an outer control —
+    e.g. the service's — stays visible instead of being shadowed)."""
+    ctl = as_control(checkpoint)
+    if ctl is None:
+        yield None
+        return
+    with scope(ctl):
+        yield ctl
+
+
+# ---------------------------------------------------------------------------
+# the per-boundary funnel
+# ---------------------------------------------------------------------------
+
+def boundary(step: int, capture: Callable[[], Tuple[Dict, Dict]]) -> None:
+    """One panel-group boundary of a resumable engine.  ``capture`` is only
+    called when a snapshot is actually written — with nothing in scope this
+    costs two dict probes and moves zero bytes."""
+    faults_mod.maybe_interrupt(step)
+    ctl = active()
+    if ctl is None:
+        return
+    ckpt = ctl.checkpointer
+    if ctl.cancel_event is not None and ctl.cancel_event.is_set():
+        path = ckpt.save_now(step, capture) if ckpt is not None else None
+        raise Cancelled(
+            f"cancelled at panel-group boundary {step}"
+            + (f" (snapshot: {path})" if path else ""),
+            snapshot_path=path)
+    if ctl.deadline_t is not None and time.monotonic() >= ctl.deadline_t:
+        path = ckpt.save_now(step, capture) if ckpt is not None else None
+        raise DeadlineExceeded(
+            f"deadline exceeded at panel-group boundary {step}"
+            + (f" (snapshot: {path})" if path else ""),
+            snapshot_path=path)
+    if ckpt is not None:
+        ckpt.maybe_save(step, capture)
+
+
+def resume(token: str):
+    """The engines' restore probe: the ambient checkpointer's newest
+    token-matching snapshot as ``(SnapshotRef, arrays, meta)``, or None
+    (no control, no checkpointer, or no compatible snapshot)."""
+    ctl = active()
+    if ctl is None or ctl.checkpointer is None:
+        return None
+    return ctl.checkpointer.latest(token)

@@ -1,0 +1,182 @@
+"""Write-ahead job records: crash-safe restart for the decomposition service.
+
+`DecompositionService` futures live in one process's memory — a crash drops
+every queued and in-flight job on the floor, and their partial solves
+(linalg/snapshot.py checkpoints) become orphans.  The `JobStore` closes
+that gap with a write-ahead record per admitted request:
+
+  record     BEFORE a request is queued, `record()` persists everything
+             needed to re-create it — the source array (npz, exact bytes,
+             host/device residency and streaming knobs preserved), the
+             spec (class name + `dataclasses.asdict` — specs are frozen
+             primitives), overrides, guard policy, seed, the plan
+             fingerprint (`ExecutionPlan.fingerprint()`), and the job's
+             checkpoint directory.  Published with the same atomic
+             tmp-write -> fsync -> rename -> parent-fsync pattern as
+             `repro.checkpoint` / snapshot.Checkpointer.
+  complete   when the request's future resolves (result OR error), the
+             record is deleted — the store holds exactly the jobs whose
+             outcome nobody has seen yet.
+  pending    after a process crash, `DecompositionService.restore(dir)`
+             reads the surviving records, re-submits each job with its
+             original checkpoint directory — the engines resume from the
+             last panel-group snapshot (plan fingerprint re-checked at
+             re-plan time), so completed panel groups are never recomputed.
+
+Only array-rooted sources (a dense device array or a host numpy array,
+possibly HostOp-wrapped) are persistable; `record()` returns None for
+protocol-only / sparse / composed sources and the service simply runs
+those unrecorded — resumability is an opt-in durability upgrade, never a
+behavior change.
+
+Thread-safety: one `JobStore` is shared by every service worker thread;
+all mutation holds the instance lock (the RL002 service-reachable
+contract).  `JobRecord` is frozen with hashable fields (RL003).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import shutil
+import threading
+import uuid
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.linalg.snapshot import fsync_dir
+
+
+@dataclasses.dataclass(frozen=True)
+class JobRecord:
+    """One write-ahead job record, as read back from the store."""
+
+    job_id: str
+    kind: str
+    spec_type: str                   # "Rank" | "Tolerance" | "Energy"
+    spec_json: str                   # asdict of the spec, JSON-encoded
+    seed: int
+    guard_mode: str
+    validate: bool
+    plan_fingerprint: str
+    residency: str                   # "host" | "device"
+    block_rows: Optional[int]
+    pipeline_depth: Optional[int]
+    checkpoint_dir: Optional[str]
+    deadline_s: Optional[float]
+    overrides_json: Optional[str]    # asdict of the RSVDConfig, or None
+    source_path: str                 # the record's source.npz
+
+    def spec_fields(self) -> dict:
+        return json.loads(self.spec_json)
+
+    def overrides_fields(self) -> Optional[dict]:
+        return None if self.overrides_json is None else json.loads(self.overrides_json)
+
+
+def _source_array(op) -> Optional[Tuple[np.ndarray, str]]:
+    """(host bytes, residency) for a persistable source, else None."""
+    arr = getattr(op, "array", None)
+    if arr is None or getattr(arr, "ndim", 0) != 2:
+        return None
+    if isinstance(arr, np.ndarray):
+        return arr, "host"
+    return np.asarray(arr), "device"
+
+
+class JobStore:
+    """Directory of `job_<id>/` write-ahead records (see module docstring)."""
+
+    def __init__(self, directory):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self._mu = threading.Lock()
+
+    # ---------------- write-ahead -------------------------------------------
+
+    def record(self, *, op, spec, kind: str, seed: int, guard_mode: str,
+               validate: bool, plan_fingerprint: str,
+               checkpoint_dir: Optional[str], deadline_s: Optional[float],
+               overrides=None, job_id: Optional[str] = None) -> Optional[str]:
+        """Persist one admitted request; returns its job_id, or None for a
+        source this store cannot re-create (nothing is written)."""
+        src = _source_array(op)
+        if src is None:
+            return None
+        host_arr, residency = src
+        job_id = job_id or uuid.uuid4().hex[:16]
+        tmp = self.dir / f"job_{job_id}.tmp"
+        final = self.dir / f"job_{job_id}"
+        meta = {
+            "job_id": job_id,
+            "kind": kind,
+            "spec_type": type(spec).__name__,
+            "spec_json": json.dumps(dataclasses.asdict(spec)),
+            "seed": int(seed),
+            "guard_mode": guard_mode,
+            "validate": bool(validate),
+            "plan_fingerprint": plan_fingerprint,
+            "residency": residency,
+            "block_rows": getattr(op, "block_rows", None),
+            "pipeline_depth": getattr(op, "pipeline_depth", None),
+            "checkpoint_dir": checkpoint_dir,
+            "deadline_s": deadline_s,
+            "overrides_json": (None if overrides is None
+                               else json.dumps(dataclasses.asdict(overrides))),
+        }
+        with self._mu:
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            with open(tmp / "source.npz", "wb") as f:
+                np.savez(f, a=host_arr)
+                f.flush()
+                os.fsync(f.fileno())
+            with open(tmp / "job.json", "w") as f:
+                json.dump(meta, f)
+                f.flush()
+                os.fsync(f.fileno())
+            if final.exists():
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            fsync_dir(self.dir)
+        return job_id
+
+    def complete(self, job_id: Optional[str]) -> None:
+        """Drop the record once the job's future has resolved (either way)."""
+        if job_id is None:
+            return
+        with self._mu:
+            shutil.rmtree(self.dir / f"job_{job_id}", ignore_errors=True)
+
+    # ---------------- recovery ----------------------------------------------
+
+    def pending(self) -> List[JobRecord]:
+        """Records whose outcome was never delivered (crash-interrupted);
+        `.tmp` debris from a crash mid-record is skipped AND swept."""
+        out = []
+        with self._mu:
+            for p in sorted(self.dir.glob("job_*")):
+                if p.suffix == ".tmp":
+                    shutil.rmtree(p, ignore_errors=True)
+                    continue
+                if not (p / "job.json").exists():
+                    continue
+                meta = json.loads((p / "job.json").read_text())
+                out.append(JobRecord(source_path=str(p / "source.npz"), **meta))
+        return out
+
+    def load_source(self, rec: JobRecord):
+        """Re-create the job's source with its original residency."""
+        with np.load(rec.source_path) as data:
+            arr = np.asarray(data["a"])
+        if rec.residency == "host":
+            from repro.linalg.operators import HostOp
+
+            return HostOp(arr, block_rows=rec.block_rows,
+                          pipeline_depth=rec.pipeline_depth)
+        import jax.numpy as jnp
+
+        return jnp.asarray(arr)

@@ -54,6 +54,13 @@ class MetricsRecorder:
         self._max = max_records
         self._compile_s = 0.0
         self._compiles = 0
+        # resilience counters (PR 10): request lifecycle verdicts and the
+        # transparent-recovery work done on behalf of requests
+        self._cancelled = 0
+        self._deadline_exceeded = 0
+        self._restarts = 0
+        self._resumed_jobs = 0
+        self._checkpoint_overhead_s = 0.0
 
     def record(self, rec: RequestRecord) -> None:
         with self._lock:
@@ -66,6 +73,34 @@ class MetricsRecorder:
         with self._lock:
             self._compile_s += float(seconds)
             self._compiles += 1
+
+    def note_cancelled(self) -> None:
+        """A request observed its cooperative cancel (before or mid-solve)."""
+        with self._lock:
+            self._cancelled += 1
+
+    def note_deadline_exceeded(self) -> None:
+        with self._lock:
+            self._deadline_exceeded += 1
+
+    def note_restarts(self, n: int) -> None:
+        """Transient-interruption restarts the guard absorbed for one
+        request (summed over its ladder attempts)."""
+        if n:
+            with self._lock:
+                self._restarts += int(n)
+
+    def note_resumed_job(self) -> None:
+        """A crash-interrupted job re-enqueued by `Service.restore`."""
+        with self._lock:
+            self._resumed_jobs += 1
+
+    def note_checkpoint_overhead(self, seconds: float) -> None:
+        """Host-side walltime one request spent capturing + persisting
+        snapshots (Checkpointer.overhead_s at resolve time)."""
+        if seconds:
+            with self._lock:
+                self._checkpoint_overhead_s += float(seconds)
 
     def records(self) -> List[RequestRecord]:
         with self._lock:
@@ -83,6 +118,11 @@ class MetricsRecorder:
         errs = [e for e in (r.walltime_error for r in done) if e is not None]
         with self._lock:
             compile_s, compiles = self._compile_s, self._compiles
+            cancelled = self._cancelled
+            deadline_exceeded = self._deadline_exceeded
+            restarts = self._restarts
+            resumed_jobs = self._resumed_jobs
+            checkpoint_overhead_s = self._checkpoint_overhead_s
         return {
             "requests": len(recs),
             "failed": sum(1 for r in recs if r.failed),
@@ -99,4 +139,9 @@ class MetricsRecorder:
             "execute_s_p50": _pct([r.execute_s for r in done], 50),
             "predicted_walltime_err_p50": _pct(errs, 50),
             "max_big_slices_waited": max((r.big_slices_waited for r in recs), default=0),
+            "cancelled": cancelled,
+            "deadline_exceeded": deadline_exceeded,
+            "restarts": restarts,
+            "resumed_jobs": resumed_jobs,
+            "checkpoint_overhead_s": checkpoint_overhead_s,
         }

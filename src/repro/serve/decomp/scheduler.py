@@ -26,6 +26,16 @@ K = 1 big-job slice (2 with the admission race), independent of how many
 panels the big job still has.  `DecompositionService` snapshots
 `gate.big_slices` at submit and at execution start; the difference is the
 per-request `big_slices_waited` that tests assert against K.
+
+Interruption semantics (PR 10): a big job parked at a slice boundary is
+exactly mid-panel-group, which is also where the engines cross their
+snapshot boundaries (linalg/snapshot.py) — so the `preempt` /
+`device_lost` injected faults, cooperative cancellation and request
+deadlines all land at the same natural granularity the gate already
+slices by.  A preempted-and-restarted big job re-enters the big lane
+with its progress preserved (the guard restarts it under the ambient
+checkpointer), so the starvation bound is unaffected by restarts: each
+re-run is just a shorter big job.
 """
 from __future__ import annotations
 

@@ -47,11 +47,13 @@ from repro import linalg
 from repro.linalg import guard as guard_mod
 from repro.linalg import pipeline as pipeline_mod
 from repro.linalg import registry as registry_mod
+from repro.linalg import snapshot as snapshot_mod
 from repro.linalg.api import Decomposition
 from repro.linalg.spec import Rank
 
 from repro.serve.decomp.cache import ExecutableCache, timed
 from repro.serve.decomp.coalesce import Coalescer, CoalesceKey, pad_batch
+from repro.serve.decomp.jobstore import JobStore
 from repro.serve.decomp.metrics import MetricsRecorder, RequestRecord
 from repro.serve.decomp.scheduler import DeviceGate, TwoLaneQueues
 
@@ -73,10 +75,28 @@ class ServiceOverloaded(RuntimeError):
     """The bounded big-job lane is at capacity; retry later."""
 
 
+class _ServiceFuture(Future):
+    """Future with COOPERATIVE cancellation.  `cancel()` on a not-yet-started
+    request cancels it outright (stdlib semantics); on a RUNNING request it
+    returns False per the stdlib contract but ALSO sets `cancel_event`,
+    which the solve observes at its next panel-group boundary
+    (snapshot.boundary) — the future then resolves with `linalg.Cancelled`
+    carrying the final snapshot path, so the partial solve is resumable."""
+
+    def __init__(self):
+        super().__init__()
+        self.cancel_event = threading.Event()
+
+    def cancel(self) -> bool:
+        self.cancel_event.set()
+        return super().cancel()
+
+
 class _Request:
     __slots__ = ("future", "op", "source", "spec", "kind", "seed", "overrides",
                  "guard", "plan", "lane", "submitted_at", "slices_at_submit",
-                 "started_at", "slices_at_start")
+                 "started_at", "slices_at_start", "deadline_t", "checkpoint",
+                 "job_id")
 
     def __init__(self, **kw):
         for k, v in kw.items():
@@ -92,6 +112,19 @@ class _Batch:
 
     def __init__(self, members):
         self.members = members
+
+
+def _checkpoint_dir(checkpoint) -> Optional[str]:
+    """The snapshot directory a `checkpoint=` argument names (for the job
+    store's write-ahead record), or None when there is nothing durable."""
+    if checkpoint is None:
+        return None
+    if isinstance(checkpoint, snapshot_mod.RunControl):
+        ck = checkpoint.checkpointer
+        return None if ck is None else str(ck.dir)
+    if isinstance(checkpoint, snapshot_mod.Checkpointer):
+        return str(checkpoint.dir)
+    return str(checkpoint)
 
 
 class DecompositionService:
@@ -110,12 +143,19 @@ class DecompositionService:
                               lane: longest the gate parks a big job while
                               small traffic keeps arriving (None = park
                               until the small lane drains)
+    jobstore                  directory (or `JobStore`) of write-ahead
+                              records for admitted array-rooted requests —
+                              after a process crash, `restore(dir)` brings
+                              the interrupted jobs back (jobstore.py);
+                              None (default) keeps the pre-PR-10 in-memory
+                              behavior
     """
 
     def __init__(self, *, window_s: float = 0.002, max_batch: int = 8,
                  coalesce_max_elems: int = 1 << 20,
                  big_threshold_s: float = 0.05, big_capacity: int = 4,
-                 panel_group: int = 4, big_patience_s: Optional[float] = None):
+                 panel_group: int = 4, big_patience_s: Optional[float] = None,
+                 jobstore=None):
         self._admission = threading.Condition()
         self._coalescer = Coalescer(window_s=window_s, max_batch=max_batch)
         self._queues = TwoLaneQueues(big_capacity=big_capacity)
@@ -125,6 +165,10 @@ class DecompositionService:
         self.metrics = MetricsRecorder()
         self.coalesce_max_elems = int(coalesce_max_elems)
         self.big_threshold_s = float(big_threshold_s)
+        if jobstore is None or isinstance(jobstore, JobStore):
+            self._jobstore = jobstore
+        else:
+            self._jobstore = JobStore(jobstore)
         self._closed = False
         self._inflight = 0          # admitted, future not yet resolved
         self._idle = threading.Condition()
@@ -142,10 +186,22 @@ class DecompositionService:
     # ------------------------------------------------------------------ API
 
     def submit(self, source, spec, kind: str = "svd", *, seed: int = 0,
-               overrides=None, guard=None, validate: bool = False) -> Future:
+               overrides=None, guard=None, validate: bool = False,
+               deadline_s: Optional[float] = None, checkpoint=None,
+               _job_id: Optional[str] = None) -> Future:
         """Admit one decomposition request; returns a Future resolving to a
         `linalg.Decomposition` (or raising RequestError / the solve's own
-        structural error)."""
+        structural error).
+
+        `deadline_s` bounds the request's TOTAL time from this call: a
+        queued request whose deadline lapses resolves with
+        `linalg.DeadlineExceeded` without running; a running streamed/
+        adaptive solve checks the deadline at panel-group boundaries and
+        resolves with `DeadlineExceeded` carrying the final snapshot path
+        (when `checkpoint` is set — the partial solve is parked, not lost).
+        `checkpoint` is a directory (or Checkpointer) where the solve
+        persists panel-granular snapshots (linalg/snapshot.py); the
+        returned future's `.cancel()` is cooperative the same way."""
         if self._closed:
             raise ServiceClosed("submit() after close()")
         op = linalg.as_linop(source)
@@ -156,11 +212,26 @@ class DecompositionService:
         pl = registry_mod.cached_plan(plan_op, spec, kind=kind,
                                       overrides=overrides, guard=policy,
                                       validate=validate)
-        fut: Future = Future()
+        fut: Future = _ServiceFuture()
+        deadline_t = (None if deadline_s is None
+                      else time.monotonic() + float(deadline_s))
+        job_id = _job_id
+        if self._jobstore is not None and job_id is None:
+            # write-ahead: persisted BEFORE the request can execute, removed
+            # when its future resolves — a crash in between leaves exactly
+            # the records restore() must re-enqueue
+            job_id = self._jobstore.record(
+                op=op, spec=spec, kind=kind, seed=seed,
+                guard_mode=policy.mode, validate=bool(validate),
+                plan_fingerprint=pl.fingerprint(),
+                checkpoint_dir=_checkpoint_dir(checkpoint),
+                deadline_s=deadline_s, overrides=overrides)
         req = _Request(future=fut, op=op, source=source, spec=spec, kind=kind,
                        seed=seed, overrides=overrides, guard=policy, plan=pl,
                        lane="small", submitted_at=time.perf_counter(),
-                       slices_at_submit=self.gate.big_slices)
+                       slices_at_submit=self.gate.big_slices,
+                       deadline_t=deadline_t, checkpoint=checkpoint,
+                       job_id=job_id)
         with self._idle:
             self._inflight += 1
 
@@ -184,12 +255,59 @@ class DecompositionService:
             if not self._queues.push_big(req):
                 with self._idle:
                     self._inflight -= 1
+                if self._jobstore is not None:
+                    self._jobstore.complete(job_id)  # never admitted
                 raise ServiceOverloaded(
                     f"big lane at capacity ({self._queues.big_capacity} queued)")
         else:
             self.gate.note_small_admitted()
             self._queues.push_small(pl.predicted_walltime_s, req)
         return fut
+
+    @classmethod
+    def restore(cls, store_dir, **kwargs) -> "DecompositionService":
+        """Bring a crashed service's interrupted jobs back.
+
+        Builds a fresh service over the same write-ahead `JobStore`
+        directory and re-submits every pending record — each with its
+        original seed, spec, guard and checkpoint directory, so streamed/
+        adaptive solves resume from their last panel-group snapshot
+        (bit-identical to an uninterrupted run) instead of panel 0.  A
+        record whose re-planned execution no longer matches its stored
+        plan fingerprint (environment changed under the crash) runs fresh:
+        its checkpoint directory is dropped, because its snapshots belong
+        to numerics that will not be replayed.  Deadlines restart from the
+        re-submission (the original submit-relative instant died with the
+        crashed process).  `restored_futures` on the returned service maps
+        job_id -> Future for the re-enqueued jobs."""
+        svc = cls(jobstore=store_dir, **kwargs)
+        svc.restored_futures = {}
+        for rec in svc._jobstore.pending():
+            source = svc._jobstore.load_source(rec)
+            spec = getattr(linalg, rec.spec_type)(**rec.spec_fields())
+            overrides = None
+            ofields = rec.overrides_fields()
+            if ofields is not None:
+                from repro.core.rsvd import RSVDConfig
+
+                overrides = RSVDConfig(**ofields)
+            op = linalg.as_linop(source)
+            entry = registry_mod.get(rec.kind)
+            plan_op = entry.prepare(op) if entry.prepare is not None else op
+            pl = registry_mod.cached_plan(
+                plan_op, spec, kind=rec.kind, overrides=overrides,
+                guard=guard_mod.as_guard(rec.guard_mode),
+                validate=rec.validate)
+            same_plan = pl.fingerprint() == rec.plan_fingerprint
+            fut = svc.submit(
+                source, spec, kind=rec.kind, seed=rec.seed,
+                overrides=overrides, guard=rec.guard_mode,
+                validate=rec.validate, deadline_s=rec.deadline_s,
+                checkpoint=rec.checkpoint_dir if same_plan else None,
+                _job_id=rec.job_id)
+            svc.metrics.note_resumed_job()
+            svc.restored_futures[rec.job_id] = fut
+        return svc
 
     def flush(self) -> None:
         """Seal every open admission bucket immediately (don't wait for
@@ -298,7 +416,8 @@ class DecompositionService:
 
     def _resolve(self, req: _Request, value=None, error=None,
                  execute_s: float = 0.0, coalesced: int = 1,
-                 cache_hit: Optional[bool] = None, plan=None) -> None:
+                 cache_hit: Optional[bool] = None, plan=None,
+                 pre_cancelled: bool = False) -> None:
         now = time.perf_counter()
         pl = plan if plan is not None else req.plan
         started = req.started_at if req.started_at is not None else now
@@ -315,39 +434,88 @@ class DecompositionService:
             total_s=now - req.submitted_at,
             predicted_s=pl.predicted_walltime_s,
             big_slices_waited=at_start - req.slices_at_submit,
-            failed=error is not None,
+            failed=error is not None or pre_cancelled,
         ))
-        if error is not None:
+        if pre_cancelled or isinstance(error, snapshot_mod.Cancelled):
+            self.metrics.note_cancelled()
+        elif isinstance(error, snapshot_mod.DeadlineExceeded):
+            self.metrics.note_deadline_exceeded()
+        if pre_cancelled:
+            pass  # Future.cancel() already moved the future to CANCELLED
+        elif error is not None:
             req.future.set_exception(error)
         else:
             req.future.set_result(value)
+        if self._jobstore is not None:
+            # the outcome is delivered (or abandoned by cancel) — the
+            # write-ahead record has served its purpose
+            self._jobstore.complete(req.job_id)
         with self._idle:
             self._inflight -= 1
             self._idle.notify_all()
 
-    def _run_solo(self, req: _Request) -> None:
-        req.started_at = t0 = time.perf_counter()
+    def _run_control(self, req: _Request) -> snapshot_mod.RunControl:
+        """The solve's ambient RunControl: the request's checkpointer (if
+        any) plus the SERVICE-owned deadline and cancel event — a caller-
+        built RunControl's own deadline/cancel fields are overwritten."""
+        ctl = snapshot_mod.as_control(req.checkpoint)
+        if ctl is None:
+            ctl = snapshot_mod.RunControl()
+        ctl.deadline_t = req.deadline_t
+        ctl.cancel_event = req.future.cancel_event
+        return ctl
+
+    def _start(self, req: _Request) -> bool:
+        """Transition the request's future to RUNNING; resolve it without
+        executing when it was cancelled while queued or its deadline has
+        already lapsed.  Returns False when nothing should run."""
+        if not req.future.set_running_or_notify_cancel():
+            self._resolve(req, pre_cancelled=True)
+            return False
+        req.started_at = time.perf_counter()
         req.slices_at_start = self.gate.big_slices
+        if req.deadline_t is not None and time.monotonic() >= req.deadline_t:
+            self._resolve(req, error=snapshot_mod.DeadlineExceeded(
+                "deadline exceeded while queued (solve never started)"))
+            return False
+        return True
+
+    def _run_solo(self, req: _Request) -> None:
+        if not self._start(req):
+            return
+        t0 = req.started_at
+        ctl = self._run_control(req)
         try:
-            dec = linalg.decompose(
-                req.op, req.spec, kind=req.kind, seed=req.seed,
-                overrides=req.overrides, guard=req.guard,
-                validate=req.plan.validate or None)
-            jax.block_until_ready(dec.factors)
-        except Exception as exc:  # structural errors and exhausted ladders
+            with snapshot_mod.maybe_scope(ctl):
+                dec = linalg.decompose(
+                    req.op, req.spec, kind=req.kind, seed=req.seed,
+                    overrides=req.overrides, guard=req.guard,
+                    validate=req.plan.validate or None)
+                jax.block_until_ready(dec.factors)
+        except Exception as exc:  # structural errors, exhausted ladders,
+            #                       Cancelled / DeadlineExceeded verdicts
+            if ctl.checkpointer is not None:
+                self.metrics.note_checkpoint_overhead(
+                    ctl.checkpointer.overhead_s)
             self._resolve(req, error=exc)
             return
+        if ctl.checkpointer is not None:
+            self.metrics.note_checkpoint_overhead(ctl.checkpointer.overhead_s)
+        if dec.health is not None:
+            self.metrics.note_restarts(
+                sum(a.restarts for a in dec.health.attempts))
         self._resolve(req, value=dec, execute_s=time.perf_counter() - t0,
                       plan=dec.plan)
 
     def _run_batch(self, members) -> None:
         """Execute one sealed coalesced batch: stack, pad, solve through the
         executable cache, screen per-slice finiteness, resolve members."""
-        started = time.perf_counter()
-        slices_now = self.gate.big_slices
-        for r in members:
-            r.started_at = started
-            r.slices_at_start = slices_now
+        # cancelled / deadline-lapsed members resolve without running; the
+        # batch proceeds with the survivors (their results are unchanged —
+        # slice seeds travel per member)
+        members = [r for r in members if self._start(r)]
+        if not members:
+            return
         r0 = members[0]
         try:
             arrays = [self._dense(r.op) for r in members]

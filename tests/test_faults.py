@@ -197,3 +197,55 @@ class TestStreamExceptionSafety:
         bounds = pipeline.panel_bounds(A.shape[0], 64)
         list(pipeline.stream_host_panels(A, bounds, 2))
         assert calls == [1]
+
+
+class TestInterruptionKinds:
+    """``preempt`` / ``device_lost``: the transient-interruption kinds that
+    fire at snapshot boundaries.  Negative coverage: panel targeting, the
+    default one-shot ``times`` budget, scope exit, and the class split
+    between the two errors (the guard absorbs both, nothing else)."""
+
+    def test_preempt_panel_targeted_misses_never_fire(self):
+        with faults.inject("preempt", panel=3):
+            faults.maybe_interrupt(1)               # wrong boundary: inert
+            faults.maybe_interrupt(2)
+            with pytest.raises(faults.PreemptionError, match="boundary 3"):
+                faults.maybe_interrupt(3)
+            faults.maybe_interrupt(3)               # default times=1: spent
+
+    def test_device_lost_times_budget_and_fingerprint(self):
+        with faults.inject("device_lost", times=2):
+            assert faults.fingerprint() == (("device_lost", None, 2, 0),)
+            for idx in range(2):
+                with pytest.raises(faults.DeviceLostError):
+                    faults.maybe_interrupt(idx)
+            faults.maybe_interrupt(5)               # budget exhausted: inert
+            assert faults.fingerprint() == (("device_lost", None, 2, 2),)
+        assert faults.fingerprint() == ()
+
+    def test_inert_outside_inject_scope(self):
+        faults.maybe_interrupt(0)                   # nothing active: no-op
+        with faults.inject("preempt"):
+            pass
+        faults.maybe_interrupt(0)                   # scope exited: inert again
+
+    def test_kinds_raise_their_own_error_class(self):
+        # distinct errors, one shared transient class the guard restarts on
+        with faults.inject("preempt"):
+            with pytest.raises(faults.PreemptionError):
+                faults.maybe_interrupt(0)
+        with faults.inject("device_lost"):
+            with pytest.raises(faults.DeviceLostError):
+                faults.maybe_interrupt(0)
+        assert set(faults.TRANSIENT_ERRORS) == {
+            faults.PreemptionError, faults.DeviceLostError}
+        assert not issubclass(faults.PreemptionError, faults.TransferError)
+
+    def test_interruption_never_poisons_unfaulted_solve(self):
+        # a spent preempt fault in scope leaves a following solve untouched
+        A = jnp.asarray(_host(96, 64, seed=0))
+        base = linalg.svd(A, 8, seed=3)
+        with faults.inject("preempt", panel=0):
+            with pytest.raises(faults.PreemptionError):
+                faults.maybe_interrupt(0)
+            _same(base, linalg.svd(A, 8, seed=3))
